@@ -1,0 +1,214 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape) on the single-pod 16x16 mesh (TPU v5e):
+    compute    = FLOPs / (chips * 197e12)      [s]
+    memory     = bytes / (chips * 819e9)       [s]
+    collective = coll_bytes / (chips * 50e9)   [s]
+
+Two FLOPs/bytes sources are reported side by side:
+  * hlo_*      — straight from compiled.cost_analysis() / HLO parsing.
+    CAVEAT (documented in EXPERIMENTS.md): XLA's CPU cost analysis counts
+    while-loop bodies ONCE, so scanned layer stacks and kv-chunk loops are
+    undercounted; these columns are lower bounds.
+  * analytic_* — transparent napkin-math accounting from the config
+    (per-component matmul FLOPs, x3 for backward, x4/3 with remat; bytes =
+    param + optimizer + activation + cache traffic), used for the roofline
+    terms.  collective bytes use the HLO-parsed per-instance sizes scaled by
+    the known scan trip counts.
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_TRAIN_MULT = 3.0            # fwd + bwd
+_REMAT_MULT = 4.0 / 3.0      # one extra forward
+
+
+def _cfg(arch):
+    from repro.configs import get_config
+    return get_config(arch)
+
+
+def param_counts(cfg):
+    """(total_params, active_params) from the abstract param tree."""
+    import jax
+    from repro.models.model_zoo import build
+    abs_p = build(cfg).abstract_params()
+    total = 0
+    routed = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(abs_p):
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = [str(getattr(k, "key", k)) for k in path]
+        if "moe" in keys and keys[-1] in ("w1", "w2", "w3"):
+            routed += n
+    active = total
+    if cfg.moe is not None and routed:
+        active = total - routed * (1.0 - cfg.moe.top_k / cfg.moe.num_experts)
+    return total, active
+
+
+def seq_tokens(shape):
+    from repro.config import SHAPES
+    s = SHAPES[shape] if isinstance(shape, str) else shape
+    if s.kind == "decode":
+        return s.global_batch * 1
+    return s.global_batch * s.seq_len
+
+
+def model_flops(cfg, shape):
+    """6*N_active*D for training, 2*N_active*D for inference shapes."""
+    from repro.config import SHAPES
+    s = SHAPES[shape] if isinstance(shape, str) else shape
+    _, active = param_counts(cfg)
+    mult = 6.0 if s.kind == "train" else 2.0
+    return mult * active * seq_tokens(s)
+
+
+def attention_flops(cfg, shape, window: int) -> float:
+    """Global attention-score/-value FLOPs (excluded from 6ND)."""
+    from repro.config import SHAPES
+    s = SHAPES[shape] if isinstance(shape, str) else shape
+    if cfg.arch_type == "ssm":
+        return 0.0
+    n_attn = cfg.n_layers
+    if cfg.arch_type == "hybrid":
+        n_attn = cfg.n_layers // cfg.ssm.attn_every_n
+    if cfg.is_encdec:
+        n_attn = cfg.n_layers + cfg.n_encoder_layers
+    hd = cfg.head_dim
+    H = cfg.n_heads
+    if s.kind == "decode":
+        ctx = min(s.seq_len, window) if window else s.seq_len
+        per_tok = 2 * 2 * H * hd * ctx
+        return n_attn * s.global_batch * per_tok
+    S = s.seq_len
+    eff = min(S, window) if window else S
+    per_seq = 2 * 2 * H * hd * S * eff / 2.0      # causal halves it
+    mult = _TRAIN_MULT if s.kind == "train" else 1.0
+    return n_attn * s.global_batch * per_seq * mult
+
+
+def analytic_flops(cfg, shape, window: int = 0, remat: bool = True) -> float:
+    """Global compiled-compute estimate: matmul params-FLOPs + attention."""
+    from repro.config import SHAPES
+    s = SHAPES[shape] if isinstance(shape, str) else shape
+    base = model_flops(cfg, s)                   # already kind-multiplied
+    if s.kind == "train" and remat:
+        base *= _REMAT_MULT
+    return base + attention_flops(cfg, s, window)
+
+
+def analytic_bytes(cfg, shape, window: int = 0, policy: str = "fsdp_tp",
+                   chips: int = 256) -> float:
+    """Global HBM traffic estimate per step (weights + activations + cache)."""
+    from repro.config import SHAPES
+    s = SHAPES[shape] if isinstance(shape, str) else shape
+    total, _ = param_counts(cfg)
+    bpe = 2 if cfg.dtype == "bfloat16" else 4
+    weight_traffic = total * bpe                 # read once per step
+    if s.kind == "train":
+        weight_traffic *= 3                      # read fwd+bwd, write update
+    act = 0.0
+    if s.kind != "decode":
+        # layer boundary activations r/w per layer
+        n_layers = cfg.n_layers + cfg.n_encoder_layers
+        act = 4.0 * s.global_batch * s.seq_len * cfg.d_model * bpe * n_layers
+    cache = 0.0
+    if s.kind == "decode":
+        ctx = min(s.seq_len, window) if window else s.seq_len
+        if cfg.arch_type in ("ssm",):
+            hs = cfg.rwkv.head_size
+            cache = cfg.n_layers * s.global_batch * \
+                (cfg.d_model // hs) * hs * hs * 4 * 2
+        else:
+            n_attn = cfg.n_layers
+            if cfg.arch_type == "hybrid":
+                n_attn = cfg.n_layers // cfg.ssm.attn_every_n
+            kvdim = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) \
+                if cfg.mla else 2 * cfg.n_kv_heads * cfg.head_dim
+            cache = n_attn * s.global_batch * ctx * kvdim * bpe
+    return weight_traffic + act + cache
+
+
+def load_records(art_dir="artifacts/dryrun", mesh="16x16", policy=None,
+                 include_variants=False):
+    recs = {}
+    for f in glob.glob(os.path.join(art_dir, "*.json")):
+        r = json.load(open(f))
+        if r["mesh"] != mesh:
+            continue
+        if policy and r["policy"] != policy:
+            continue
+        if not include_variants and (r.get("microbatch", 1) > 1
+                                     or r.get("pad_vocab", False)):
+            continue
+        recs[(r["arch"], r["shape"], r["policy"])] = r
+    return recs
+
+
+def roofline_row(rec, window: int = 0):
+    cfg = _cfg(rec["arch"])
+    from repro.configs import decode_window
+    window = decode_window(cfg, rec["shape"])
+    chips = rec["chips"]
+    a_fl = analytic_flops(cfg, rec["shape"], window)
+    a_by = analytic_bytes(cfg, rec["shape"], window, rec["policy"], chips)
+    coll = sum(rec["collective_bytes_per_device"].values())
+    m_fl = model_flops(cfg, rec["shape"])
+    t_comp = a_fl / (chips * PEAK_FLOPS)
+    t_mem = a_by / (chips * HBM_BW)
+    t_coll = coll / ICI_BW                    # per-device bytes over its link
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "policy": rec["policy"],
+        "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": m_fl, "analytic_flops": a_fl,
+        "useful_ratio": m_fl / a_fl if a_fl else float("nan"),
+        "hlo_flops_per_dev": rec.get("flops_per_device"),
+        "hlo_bytes_per_dev": rec.get("bytes_per_device"),
+        "hlo_temp_bytes_per_dev": rec.get("memory_analysis", {}).get(
+            "temp_size_in_bytes"),
+        "collective_bytes_per_dev": coll,
+    }
+
+
+def full_table(art_dir="artifacts/dryrun", policy="fsdp_tp"):
+    recs = load_records(art_dir, policy=policy)
+    rows = [roofline_row(r) for r in recs.values()]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def print_table(rows):
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'dominant':>10s} {'useful':>7s} "
+           f"{'temp_GB/dev':>11s}")
+    print(hdr)
+    for r in rows:
+        tmp = r["hlo_temp_bytes_per_dev"]
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+              f"{r['t_collective_s']:10.4f} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.3f} "
+              f"{(tmp or 0) / 1e9:11.1f}")
+
+
+if __name__ == "__main__":
+    rows = full_table()
+    print_table(rows)
+    with open("artifacts/roofline.json", "w") as f:
+        json.dump(rows, f, indent=2)

@@ -1,0 +1,57 @@
+"""Quickstart: CodedFedL end-to-end in ~30 seconds on CPU.
+
+Builds a small federated deployment (10 clients over a simulated wireless
+MEC network), runs the paper's three schemes, and prints the headline
+comparison: per-iteration accuracy parity + wall-clock speedup.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FLConfig, RFFConfig, TrainConfig
+from repro.core import fed_runtime, rff
+from repro.core.delay_model import mec_network
+from repro.data import sharding, synthetic
+
+
+def main():
+    fl = FLConfig(n_clients=10, delta=0.2, psi=0.2)
+    ds = synthetic.synthetic_classification(m_train=2000, m_test=500, d=64)
+
+    # 1. distributed kernel embedding (shared-seed RFF, paper §III-A)
+    rcfg = RFFConfig(q=256, sigma=2.0)
+    omega, delta = rff.rff_params(rcfg, d=64)
+    xh_tr = np.asarray(rff.rff_transform(jnp.asarray(ds.x_train), omega, delta))
+    xh_te = np.asarray(rff.rff_transform(jnp.asarray(ds.x_test), omega, delta))
+
+    # 2. non-IID partition over the simulated MEC network (paper §V-A)
+    nodes = mec_network(fl, d_scalars_per_point=rcfg.q * ds.n_classes)
+    shards = sharding.sort_and_shard(xh_tr, ds.y_train, fl.n_clients)
+    per_client = sharding.assign_shards_by_speed(shards, nodes, minibatch=200)
+    xs = np.stack([c[0] for c in per_client])
+    ys = np.stack([ds.one_hot(c[1]) for c in per_client])
+
+    tcfg = TrainConfig(learning_rate=rff.suggest_lr(xh_tr))
+
+    def eval_fn(theta):
+        acc = ((xh_te @ np.asarray(theta)).argmax(1) == ds.y_test).mean()
+        return 0.0, float(acc)
+
+    # 3. run all three schemes (paper §V "Schemes")
+    print(f"{'scheme':8s} {'accuracy':>9s} {'wall-clock':>11s} {'deadline':>9s}")
+    base_wall = None
+    for scheme in ("naive", "greedy", "coded"):
+        sim = fed_runtime.FederatedSimulation(xs, ys, fl, tcfg, scheme=scheme)
+        res = sim.run(100, eval_fn=eval_fn, eval_every=25)
+        h = res.history[-1]
+        if scheme == "naive":
+            base_wall = h.wall_clock
+        speed = f"({base_wall / h.wall_clock:.1f}x)" if scheme != "naive" else ""
+        t_star = f"{res.t_star:.2f}s" if res.t_star else "-"
+        print(f"{scheme:8s} {h.accuracy:9.3f} {h.wall_clock:9.0f}s {speed:>6s}"
+              f" {t_star:>9s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: CodedFedL (IEEE JSAC 2020) as a production-grade JAX framework.
+
+Layers: core/ (the paper), models/ + configs/ (assigned architecture zoo),
+kernels/ (Pallas), sharding/ + launch/ (multi-pod pjit), data/, optim/,
+checkpoint/, plus the FL runtime in core.fed_runtime.
+"""
+__version__ = "1.0.0"

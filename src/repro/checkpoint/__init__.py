@@ -1,0 +1,4 @@
+"""Checkpoint substrate (npz, path-keyed, tree-structured)."""
+from repro.checkpoint import io
+
+__all__ = ["io"]

@@ -1,0 +1,59 @@
+"""Checkpointing: flat .npz snapshots of arbitrary param pytrees.
+
+Shard-aware in the sense that leaves are gathered to host before writing
+(fine at the model sizes this container trains) and restored with the same
+treedef; keys encode the tree path.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:       # npz has no bf16: store as f32
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save(path: str, tree, step: int | None = None):
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, like_tree):
+    """Restore into the structure of `like_tree` (shapes must match)."""
+    data = np.load(path)
+    flat_like = _flatten(like_tree)
+    restored = {}
+    for key, ref in flat_like.items():
+        arr = data[key]
+        assert arr.shape == ref.shape, (key, arr.shape, ref.shape)
+        restored[key] = arr
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like_tree)
+    paths_leaves = [("/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                              for k in p), leaf)
+                    for p, leaf in leaves_paths[0]]
+    new_leaves = [jnp.asarray(restored[p]).astype(ref.dtype)
+                  for p, ref in paths_leaves]
+    return jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves)
+
+
+def restore_step(path: str) -> int | None:
+    data = np.load(path)
+    return int(data["__step__"]) if "__step__" in data else None

@@ -1,0 +1,170 @@
+"""Configuration dataclasses for the repro framework.
+
+Everything is a plain frozen dataclass so configs hash/compare cleanly and
+can be used as jit static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    num_shared_experts: int = 0
+    top_k: int = 2
+    d_ff_expert: int = 0            # expert hidden size (may differ from dense d_ff)
+    capacity_factor: float = 1.25
+    every_n_layers: int = 1         # apply MoE FFN every n-th layer (1 = all)
+    aux_loss_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention."""
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-1 style selective SSM (used by jamba)."""
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                # 0 -> ceil(d_model/16)
+    attn_every_n: int = 8           # hybrid: 1 attention layer per n layers
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_size: int = 64
+    decay_lora: int = 64            # rank of data-dependent decay LoRA
+    shift_lora: int = 32            # rank of data-dependent token-shift LoRA
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    swa_window: int = 0             # 0 = full attention; >0 sliding window
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    # enc-dec (whisper): number of encoder layers; encoder input is a stub
+    # of precomputed frame embeddings (audio carve-out).
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0            # fixed encoder frames (whisper: 1500)
+    # vlm: number of prefix patch-embedding positions (stub ViT output)
+    n_prefix_patches: int = 0
+    # §Perf: pad the embedding/vocab rows up to a multiple of 16 so the
+    # logits shard over the `model` axis instead of being all-reduced
+    # (MaxText-style).  Padded ids are masked to -inf in the loss.
+    pad_vocab: bool = False
+    dtype: str = "bfloat16"
+    # citation for the config (paper / model card)
+    source: str = ""
+
+    @property
+    def vocab_padded(self) -> int:
+        if not self.pad_vocab:
+            return self.vocab
+        return -(-self.vocab // 16) * 16
+
+    @property
+    def attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if the arch natively supports O(<seq^2) long-context decode."""
+        return self.arch_type in ("ssm", "hybrid") or self.swa_window > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "sgd"          # sgd | momentum | adam
+    learning_rate: float = 6.0      # paper's initial step size for RFF model
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    l2_reg: float = 9e-6            # paper's lambda
+    lr_decay: float = 0.8           # paper: step decay 0.8 at epochs 40, 65
+    lr_decay_epochs: Tuple[int, ...] = (40, 65)
+    epochs: int = 70
+    remat: bool = True
+    sharding_policy: str = "fsdp_tp"   # fsdp_tp | tp_only | dp_only
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    """Federated-learning runtime configuration (paper §V-A defaults)."""
+    n_clients: int = 30
+    scheme: str = "coded"           # coded | naive | greedy
+    psi: float = 0.1                # greedy: wait for (1-psi)*n clients
+    delta: float = 0.1              # coded: u_max = delta * m
+    # MEC network parameters (paper §V-A)
+    max_rate_bps: float = 216e3     # 3 LTE resource blocks
+    rate_decay: float = 0.95        # k1
+    max_mac_rate: float = 3.072e6   # MAC/s
+    mac_decay: float = 0.8          # k2
+    alpha: float = 2.0              # compute/memory-access ratio
+    p_erasure: float = 0.1          # link erasure probability
+    overhead: float = 0.10          # protocol overhead
+    bits_per_scalar: int = 32
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RFFConfig:
+    """Paper §V-A kernel embedding hyperparameters."""
+    q: int = 2000
+    sigma: float = 5.0
+    seed: int = 1234

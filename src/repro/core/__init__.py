@@ -1,0 +1,16 @@
+"""CodedFedL core: the paper's primary contribution.
+
+Modules:
+  delay_model     -- shifted-exponential compute + geometric-link comm delays
+  load_allocation -- two-step deadline/load/redundancy optimizer (SIII-C, SIV)
+  rff             -- shared-seed random Fourier feature embedding (SIII-A)
+  encoding        -- private generators, weight matrices, parity sets (SIII-B/D)
+  aggregation     -- coded federated gradient aggregation (SIII-E)
+  privacy         -- eps-MI-DP budget of parity sharing (Appendix F)
+  fed_runtime     -- the FL server loop: coded / naive / greedy schemes (SV)
+"""
+from repro.core import (aggregation, delay_model, encoding, fed_runtime,
+                        load_allocation, privacy, rff)
+
+__all__ = ["aggregation", "delay_model", "encoding", "fed_runtime",
+           "load_allocation", "privacy", "rff"]

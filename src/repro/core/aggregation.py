@@ -1,0 +1,59 @@
+"""Coded federated aggregation (paper §III-E).
+
+Per round r+1:
+  - client j (if it returns by t*) contributes the unnormalized partial
+    gradient over its l*_j processed points:  X~_j^T (X~_j theta - Y~_j)
+  - the MEC compute unit contributes the coded gradient over the global
+    parity set, weighted by 1/(1 - pnr_C):
+        g_C = 1/(1-pnr_C) * Xv^T (Xv theta - Yv)           (eq. 28)
+  - the server aggregates  g_M = (g_C + g_U) / m            (eq. 30)
+
+E[g_M] ~= g, the full gradient over the entire decentralized dataset
+(eq. 31/32), because the W_j weighting built the parity data to carry
+exactly the *expected missing mass* of each data point.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def client_gradient(x, y, theta, *, use_pallas: bool = False):
+    """Unnormalized partial gradient X^T (X theta - Y) over processed points."""
+    return ops.linreg_grad(x, theta, y, use_pallas=use_pallas)
+
+
+def coded_gradient(parity_x, parity_y, theta, pnr_c: float = 0.0,
+                   *, use_pallas: bool = False):
+    """g_C over the global parity set (eq. 28).
+
+        g_C = 1/(1-pnr_C) * (1/u) * Xv^T (Xv theta - Yv)
+
+    The 1/u factor realizes the G^T G / u -> I concentration (eq. 31):
+    E[(1/u) Xv^T(Xv theta - Yv)] = X^^T W^T W (X^ theta - Y), i.e. the SUM
+    over data points of the expected-missing-mass-weighted per-point
+    gradients — commensurate with the clients' unnormalized sums.
+    """
+    u = parity_x.shape[0]
+    g = ops.linreg_grad(parity_x, theta, parity_y, use_pallas=use_pallas)
+    return g / (u * (1.0 - pnr_c))
+
+
+def federated_gradient(coded_g, client_grads, returned_mask, m: int,
+                       l2_reg: float = 0.0, theta=None):
+    """g_M = (g_C + sum_j 1{T_j<=t*} g_j) / m  (+ optional L2 term).
+
+    coded_g: (q, c) or None (coded unit straggled this round / uncoded run)
+    client_grads: list of (q, c) unnormalized client gradients
+    returned_mask: bool per client — whether it arrived by the deadline
+    """
+    total = jnp.zeros_like(client_grads[0] if client_grads else coded_g)
+    for g, ret in zip(client_grads, returned_mask):
+        total = total + jnp.where(ret, g, jnp.zeros_like(g))
+    if coded_g is not None:
+        total = total + coded_g
+    g_m = total / m
+    if l2_reg and theta is not None:
+        g_m = g_m + l2_reg * theta
+    return g_m

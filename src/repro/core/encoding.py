@@ -1,0 +1,70 @@
+"""Distributed encoding of local datasets into parity data (paper §III-B/D).
+
+Client j:
+  - draws a PRIVATE generator G_j in R^{u x l_j}, entries iid mean-0 var-1
+    (normal or Rademacher);
+  - builds the diagonal weight matrix W_j from the no-return probabilities:
+      w_{j,k} = sqrt(1 - P(T_j <= t*))  if point k is in the processed subset
+      w_{j,k} = 1                        otherwise (never evaluated locally)
+    (paper §III-D: pnr_{j,2} = 1 for unprocessed points);
+  - ships (X~_j, Y~_j) = (G_j W_j X^_j, G_j W_j Y_j) to the server.
+
+Server: sums the n local parity sets -> global parity dataset (eq. 20/21).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def generator_matrix(key, u: int, l: int, kind: str = "normal"):
+    """Private random generator G_j with iid mean-0 var-1 entries."""
+    if kind == "normal":
+        return jax.random.normal(key, (u, l), jnp.float32)
+    if kind == "rademacher":
+        return (2.0 * jax.random.bernoulli(key, 0.5, (u, l)) - 1.0).astype(jnp.float32)
+    raise ValueError(kind)
+
+
+def weight_vector(l: int, processed_idx: np.ndarray, p_return: float) -> np.ndarray:
+    """Diagonal of W_j (paper §III-D).
+
+    processed_idx: indices of the l*_j points the client will process.
+    p_return: P(T_j <= t*) for this client.
+    """
+    w = np.ones(l, dtype=np.float32)                    # sqrt(pnr=1) = 1
+    w[processed_idx] = np.sqrt(1.0 - p_return)          # sqrt(pnr_{j,1})
+    return w
+
+
+@dataclasses.dataclass
+class LocalParity:
+    x: jnp.ndarray    # (u, q)
+    y: jnp.ndarray    # (u, c)
+
+
+def encode_local(key, x_hat, y, w, u: int, *, kind: str = "normal",
+                 use_pallas: bool = False) -> LocalParity:
+    """Local parity dataset (X~_j, Y~_j) = (G_j W_j X^_j, G_j W_j Y_j)."""
+    l = x_hat.shape[0]
+    g = generator_matrix(key, u, l, kind)
+    w = jnp.asarray(w)
+    px = ops.parity_encode(g, w, x_hat, use_pallas=use_pallas)
+    py = ops.parity_encode(g, w, y, use_pallas=use_pallas)
+    return LocalParity(x=px, y=py)
+
+
+def aggregate_parity(parities: list[LocalParity]) -> LocalParity:
+    """Global parity set = sum over clients (paper eq. 20).
+
+    On a pod this is a psum over the `data` axis; here (host simulation of
+    the MEC server) it is a tree-sum.
+    """
+    x = jnp.sum(jnp.stack([p.x for p in parities]), axis=0)
+    y = jnp.sum(jnp.stack([p.y for p in parities]), axis=0)
+    return LocalParity(x=x, y=y)

@@ -1,0 +1,62 @@
+"""Distributed kernel embedding via random Fourier features (paper §III-A).
+
+Every client derives (Omega, delta) from a *shared pseudo-random seed*
+(Remark 2) so the server never ships the q frequency vectors: sampling is a
+deterministic function of (seed, d, q, sigma).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RFFConfig
+from repro.kernels import ops
+
+
+def rff_params(cfg: RFFConfig, d: int):
+    """Sample (Omega, delta) for the RBF kernel (paper eq. 17/18).
+
+    Omega_s ~ N(0, I_d / sigma^2), delta_s ~ Uniform(0, 2*pi].
+    Deterministic in cfg.seed — this is the shared-seed mechanism.
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    k_omega, k_delta = jax.random.split(key)
+    omega = jax.random.normal(k_omega, (d, cfg.q), jnp.float32) / cfg.sigma
+    delta = jax.random.uniform(k_delta, (cfg.q,), jnp.float32,
+                               minval=0.0, maxval=2.0 * jnp.pi)
+    return omega, delta
+
+
+def rff_transform(x, omega, delta, *, use_pallas: bool = False):
+    """phi(X) = sqrt(2/q) cos(X Omega + delta): (m, d) -> (m, q)."""
+    return ops.rff_embed(x, omega, delta, use_pallas=use_pallas)
+
+
+def median_sigma(x, n_pairs: int = 2000, seed: int = 0) -> float:
+    """Median-pairwise-distance heuristic for the RBF bandwidth sigma.
+
+    The paper fixes (sigma, q) = (5, 2000) for 784-dim MNIST; for other
+    feature scales this heuristic reproduces that operating point.
+    """
+    import numpy as np
+    x = np.asarray(x)
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, x.shape[0], size=(n_pairs, 2))
+    d = np.linalg.norm(x[idx[:, 0]] - x[idx[:, 1]], axis=1)
+    return float(np.median(d))
+
+
+def suggest_lr(x_hat, target: float = 1.8, iters: int = 30, seed: int = 0) -> float:
+    """lr ~= target / lambda_max( X^T X / m ) via power iteration."""
+    import numpy as np
+    x = np.asarray(x_hat)
+    m, q = x.shape
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(q,)).astype(np.float64)
+    v /= np.linalg.norm(v)
+    lam = 1.0
+    for _ in range(iters):
+        w = x.T @ (x @ v) / m
+        lam = float(np.linalg.norm(w))
+        v = w / max(lam, 1e-12)
+    return target / max(lam, 1e-12)

@@ -1,0 +1,56 @@
+"""Secure aggregation of local parity datasets (paper §VI future work).
+
+The paper notes that the server only needs the *global* parity dataset
+(the sum of local parity sets), so local sets can be hidden by secure
+aggregation [Bonawitz et al. 2016].  This implements the pairwise-mask
+construction: every client pair (i, j) derives a shared mask M_ij from a
+shared seed; client i adds +M_ij for j > i and -M_ij for j < i, so all
+masks cancel exactly in the server-side sum while each individual upload
+is marginally uniform noise.
+
+The shared seeds come from a deterministic key-agreement stand-in
+(fold_in of both ids into a session key); swapping in a real DH exchange
+changes nothing downstream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import LocalParity
+
+
+def _pair_key(session_key, i: int, j: int):
+    lo, hi = (i, j) if i < j else (j, i)
+    return jax.random.fold_in(jax.random.fold_in(session_key, lo), hi)
+
+
+def _mask_like(key, parity: LocalParity, scale: float):
+    kx, ky = jax.random.split(key)
+    return LocalParity(
+        x=jax.random.normal(kx, parity.x.shape, parity.x.dtype) * scale,
+        y=jax.random.normal(ky, parity.y.shape, parity.y.dtype) * scale,
+    )
+
+
+def mask_parity(session_key, client_id: int, n_clients: int,
+                parity: LocalParity, scale: float = 1.0) -> LocalParity:
+    """Return the client's masked upload (what the server may see)."""
+    x, y = parity.x, parity.y
+    for other in range(n_clients):
+        if other == client_id:
+            continue
+        m = _mask_like(_pair_key(session_key, client_id, other), parity,
+                       scale)
+        sign = 1.0 if client_id < other else -1.0
+        x = x + sign * m.x
+        y = y + sign * m.y
+    return LocalParity(x=x, y=y)
+
+
+def secure_aggregate(masked: list[LocalParity]) -> LocalParity:
+    """Server-side sum; pairwise masks cancel, yielding the true global
+    parity dataset without revealing any individual local set."""
+    x = jnp.sum(jnp.stack([p.x for p in masked]), axis=0)
+    y = jnp.sum(jnp.stack([p.y for p in masked]), axis=0)
+    return LocalParity(x=x, y=y)

@@ -1,0 +1,4 @@
+"""Data substrate: synthetic datasets, non-IID sharding, LM pipelines."""
+from repro.data import pipeline, sharding, synthetic
+
+__all__ = ["pipeline", "sharding", "synthetic"]

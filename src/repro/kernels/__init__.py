@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for CodedFedL's compute hot-spots.
+
+  rff_embed     -- fused cos(X @ Omega + delta) RFF map (paper eq. 18)
+  linreg_grad   -- fused X^T (X theta - Y) gradient (paper eq. 7/10/28)
+  parity_encode -- fused G diag(w) X parity encoding (paper eq. 19)
+  gqa_decode    -- flash-decode GQA attention (serving hot-spot, SPerf it. 2)
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py holds jit'd wrappers
+with padding + fallback.  Kernels target TPU v5e BlockSpec/VMEM tiling and
+are validated on CPU in interpret mode.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused linear-regression gradient (paper eq. 7/10/28).
+
+    g = X^T (X @ theta - Y)        X: (m, q), theta: (q, c), Y: (m, c)
+
+This is the compute hot-spot of every CodedFedL training round (client
+partial gradients AND the server's coded gradient share this form).  The
+kernel streams row-blocks of X through VMEM once: for each M-block it forms
+the residual R = X_blk @ theta - Y_blk in VMEM scratch, then accumulates
+X_blk^T @ R into the (q, c) output without materializing the (m, c) residual
+in HBM.  Grid (M/bm, Q/bq); the residual is computed once per M-block (at
+j == 0) using a full-q view of the X row-block, and the output accumulates
+across M steps (revisited output block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(xfull_ref, theta_ref, y_ref, xblk_ref, o_ref, r_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _residual():
+        r_ref[...] = (jnp.dot(xfull_ref[...], theta_ref[...],
+                              preferred_element_type=r_ref.dtype)
+                      - y_ref[...])
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(xblk_ref[...].T, r_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bq", "interpret"))
+def linreg_grad(x, theta, y, *, bm: int = 128, bq: int = 128,
+                interpret: bool = True):
+    """g = X^T (X theta - Y): (m, q), (q, c), (m, c) -> (q, c)."""
+    m, q = x.shape
+    q2, c = theta.shape
+    assert q == q2 and y.shape == (m, c)
+    assert m % bm == 0 and q % bq == 0, (m, q, bm, bq)
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm, q // bq),
+        in_specs=[
+            pl.BlockSpec((bm, q), lambda i, j: (i, 0)),     # full-q row block
+            pl.BlockSpec((q, c), lambda i, j: (0, 0)),      # theta resident
+            pl.BlockSpec((bm, c), lambda i, j: (i, 0)),     # labels row block
+            pl.BlockSpec((bm, bq), lambda i, j: (i, j)),    # X^T side tile
+        ],
+        out_specs=pl.BlockSpec((bq, c), lambda i, j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, c), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, c), x.dtype)],
+        interpret=interpret,
+    )(x, theta, y, x)

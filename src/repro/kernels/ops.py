@@ -1,0 +1,87 @@
+"""jit'd public wrappers around the Pallas kernels with automatic padding
+and a pure-jnp fallback.
+
+`use_pallas=True` runs the Pallas kernels (interpret mode on CPU; compiled
+on a real TPU where `interpret` should be set False by the caller).  The
+default entry points pad inputs up to block multiples, run the kernel, and
+slice the result back, so arbitrary shapes are accepted.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.linreg_grad import linreg_grad as _linreg_grad_kernel
+from repro.kernels.parity_encode import parity_encode as _parity_encode_kernel
+from repro.kernels.rff_embed import rff_embed as _rff_embed_kernel
+from repro.kernels.gqa_decode import gqa_decode as _gqa_decode_kernel
+
+
+def _pad_to(x, mults):
+    """Zero-pad each dim of x up to the next multiple of mults[i]."""
+    pads = []
+    for dim, mult in zip(x.shape, mults):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def rff_embed(x, omega, delta, *, use_pallas: bool = False,
+              bm: int = 128, bq: int = 128, bk: int = 128,
+              interpret: bool = True):
+    if not use_pallas:
+        return ref.rff_embed(x, omega, delta)
+    m, d = x.shape
+    q = omega.shape[1]
+    xp = _pad_to(x, (bm, bk))
+    op = _pad_to(omega, (bk, bq))
+    dp = _pad_to(delta, (bq,))
+    out = _rff_embed_kernel(xp, op, dp, bm=bm, bq=bq, bk=bk,
+                            interpret=interpret, q_true=q)
+    return out[:m, :q]
+
+
+def linreg_grad(x, theta, y, *, use_pallas: bool = False,
+                bm: int = 128, bq: int = 128, interpret: bool = True):
+    if not use_pallas:
+        return ref.linreg_grad(x, theta, y)
+    m, q = x.shape
+    c = theta.shape[1]
+    xp = _pad_to(x, (bm, bq))
+    tp = _pad_to(theta, (bq, 1))
+    yp = _pad_to(y, (bm, 1))
+    out = _linreg_grad_kernel(xp, tp, yp, bm=bm, bq=bq, interpret=interpret)
+    return out[:q, :c]
+
+
+def parity_encode(g, w, x, *, use_pallas: bool = False,
+                  bu: int = 128, bq: int = 128, bl: int = 128,
+                  interpret: bool = True):
+    if not use_pallas:
+        return ref.parity_encode(g, w, x)
+    u, l = g.shape
+    q = x.shape[1]
+    gp = _pad_to(g, (bu, bl))
+    wp = _pad_to(w, (bl,))
+    xp = _pad_to(x, (bl, bq))
+    out = _parity_encode_kernel(gp, wp, xp, bu=bu, bq=bq, bl=bl,
+                                interpret=interpret)
+    return out[:u, :q]
+
+
+def gqa_decode(q, k, v, k_pos, q_pos, *, window: int = 0,
+               use_pallas: bool = False, bt: int = 512,
+               interpret: bool = True):
+    if not use_pallas:
+        return ref.gqa_decode(q, k, v, k_pos, q_pos, window)
+    T = k.shape[1]
+    bt = min(bt, T)
+    rem = (-T) % bt
+    if rem:
+        k = jnp.pad(k, ((0, 0), (0, rem), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, rem), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, rem), constant_values=-1)
+    return _gqa_decode_kernel(q, k, v, k_pos, q_pos, bt=bt, window=window,
+                              interpret=interpret)

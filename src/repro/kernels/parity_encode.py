@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: fused local parity encoding (paper eq. 19).
+
+    parity = G @ diag(w) @ X       G: (u, l), w: (l,), X: (l, q)
+
+Each client runs this once over its (transformed) local dataset to produce
+its parity set.  The diagonal weighting is fused into the generator tile in
+VMEM (G_tile * w_tile) so diag(w) @ X is never materialized.  Grid
+(U/bu, Q/bq, L/bl) with the contraction dim innermost; the output block
+accumulates across L steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(g_ref, w_ref, x_ref, o_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    gw = g_ref[...] * w_ref[...]                 # (bu, bl) * (1, bl)
+    o_ref[...] += jnp.dot(gw, x_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bq", "bl", "interpret"))
+def parity_encode(g, w, x, *, bu: int = 128, bq: int = 128, bl: int = 128,
+                  interpret: bool = True):
+    """(u, l), (l,), (l, q) -> (u, q).  Requires block divisibility."""
+    u, l = g.shape
+    l2, q = x.shape
+    assert l == l2 and w.shape == (l,)
+    assert u % bu == 0 and q % bq == 0 and l % bl == 0, (u, l, q, bu, bq, bl)
+    nk = l // bl
+    w2 = w.reshape(1, l)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=(u // bu, q // bq, nk),
+        in_specs=[
+            pl.BlockSpec((bu, bl), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, bl), lambda i, j, k: (0, k)),
+            pl.BlockSpec((bl, bq), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bu, bq), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((u, q), g.dtype),
+        interpret=interpret,
+    )(g, w2, x)

@@ -1,0 +1,1 @@
+"""Launchers: make_production_mesh, multi-pod dryrun, train, serve."""

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination on placeholder devices, and extract the roofline inputs.
+
+For each combination this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs abstract params / caches / batches (ShapeDtypeStruct only —
+     nothing is allocated),
+  3. jax.jit(step, in_shardings, out_shardings).lower(...).compile(),
+  4. prints memory_analysis() and cost_analysis(),
+  5. parses the compiled HLO for collective operand bytes,
+  6. writes a JSON record consumed by benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--policy tp_only]
+"""
+import argparse
+import functools
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import SHAPES
+from repro.configs import ARCH_IDS, decode_window, get_config, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_zoo import build
+from repro.sharding import policy as sh
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum per-device result bytes of every collective op in the HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s.startswith("%") and not s.startswith("ROOT"):
+            continue
+        m = re.search(r"=\s*(.*?)\s+(" + "|".join(_COLLECTIVES) + r")[\.\(]",
+                      s)
+        if not m:
+            continue
+        shapes_part, op = m.group(1), m.group(2)
+        if "fusion" in shapes_part:
+            continue
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_part):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[op] += total
+    return out
+
+
+def _shardings(mesh, tree_of_pspecs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_step(arch: str, shape_name: str, policy: str, mesh,
+               microbatch: int = 1, pad_vocab: bool = False):
+    """Returns (fn, abstract_args, in_shardings, out_shardings).
+
+    microbatch > 1 splits the global batch into that many gradient-
+    accumulation steps (lax.scan) — trades one extra f32 grad buffer for a
+    ~microbatch-fold cut in activation peak (§Perf)."""
+    cfg = get_config(arch)
+    if pad_vocab:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, pad_vocab=True)
+    shape = SHAPES[shape_name]
+    model = build(cfg)
+    multi_pod = "pod" in mesh.axis_names
+    win = decode_window(cfg, shape)
+    params_abs = model.abstract_params()
+    pspecs = sh.param_pspecs(params_abs, policy)
+    p_shard = _shardings(mesh, pspecs)
+
+    if shape.kind == "train":
+        batch_abs = input_specs(cfg, shape)
+        b_shard = _shardings(mesh, sh.batch_pspecs(batch_abs, multi_pod))
+        lr = 1e-3
+
+        def train_step(params, batch):
+            if microbatch > 1:
+                mb = jax.tree_util.tree_map(
+                    lambda a: a.reshape((microbatch, a.shape[0] // microbatch)
+                                        + a.shape[1:]), batch)
+
+                def acc_step(carry, b):
+                    loss_acc, g_acc = carry
+                    loss, g = jax.value_and_grad(
+                        lambda p: model.loss_fn(p, b, window=win))(params)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                    return (loss_acc + loss, g_acc), None
+
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    acc_step, (jnp.zeros((), jnp.float32), g0), mb)
+                loss = loss / microbatch
+                grads = jax.tree_util.tree_map(
+                    lambda g: g / microbatch, grads)
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: model.loss_fn(p, batch, window=win))(params)
+            new = jax.tree_util.tree_map(
+                lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return loss, new
+
+        return (train_step, (params_abs, batch_abs),
+                (p_shard, b_shard),
+                (NamedSharding(mesh, P()), p_shard))
+
+    if shape.kind == "prefill":
+        batch_abs = input_specs(cfg, shape)
+        b_shard = _shardings(mesh, sh.batch_pspecs(batch_abs, multi_pod))
+        cache_abs = model.abstract_cache(shape.global_batch, shape.seq_len,
+                                         win)
+        c_shard = _shardings(mesh, sh.cache_pspecs(cache_abs, False,
+                                                   multi_pod))
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, window=win)
+
+        return (prefill_step, (params_abs, batch_abs),
+                (p_shard, b_shard),
+                (NamedSharding(mesh, P()), c_shard))
+
+    # decode
+    long_ctx = shape.seq_len * shape.global_batch >= 2 ** 19
+    cache_abs = model.abstract_cache(shape.global_batch, shape.seq_len, win)
+    c_shard = _shardings(mesh, sh.cache_pspecs(cache_abs, long_ctx,
+                                               multi_pod))
+    tok_abs = input_specs(cfg, shape)["tokens"]
+    t_shard = _shardings(mesh, sh.batch_pspecs({"t": tok_abs},
+                                               multi_pod))["t"]
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, window=win)
+
+    return (serve_step, (params_abs, cache_abs, tok_abs, pos_abs),
+            (p_shard, c_shard, t_shard, NamedSharding(mesh, P())),
+            (NamedSharding(mesh, P()), c_shard))
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            policy: str = "fsdp_tp", out_dir: str = "artifacts/dryrun",
+            verbose: bool = True, microbatch: int = 1,
+            pad_vocab: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, in_sh, out_sh = build_step(arch, shape_name, policy, mesh,
+                                         microbatch, pad_vocab)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    elapsed = time.time() - t0
+    record = {
+        "arch": arch, "shape": shape_name, "policy": policy,
+        "microbatch": microbatch,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "flops_per_device": float(cost.get("flops", 0.0)) if cost else None,
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)) if cost else None,
+        "collective_bytes_per_device": coll,
+        "compile_seconds": elapsed,
+        "memory_analysis": {
+            k: getattr(mem, k) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if mem is not None and hasattr(mem, k)
+        },
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {record['mesh']} ({policy}) "
+              f"compile={elapsed:.1f}s")
+        print("   memory_analysis:", record["memory_analysis"])
+        if cost:
+            print(f"   cost_analysis: flops/dev={record['flops_per_device']:.3e} "
+                  f"bytes/dev={record['bytes_per_device']:.3e}")
+        print("   collectives/dev:", coll)
+    os.makedirs(out_dir, exist_ok=True)
+    mb = f"_mb{microbatch}" if microbatch > 1 else ""
+    pv = "_padvocab" if pad_vocab else ""
+    record["pad_vocab"] = pad_vocab
+    fname = f"{arch}_{shape_name}_{record['mesh']}_{policy}{mb}{pv}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--policy", default="fsdp_tp",
+                    choices=["fsdp_tp", "tp_only", "dp_only",
+                             "fsdp_tp_ep", "tp_only_ep"])
+    ap.add_argument("--out-dir", default="artifacts/dryrun")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--pad-vocab", action="store_true")
+    args = ap.parse_args()
+    combos = ([(a, s) for a in ARCH_IDS for s in SHAPES]
+              if args.all else [(args.arch, args.shape)])
+    failures = []
+    for arch, shape in combos:
+        try:
+            run_one(arch, shape, multi_pod=args.multi_pod,
+                    policy=args.policy, out_dir=args.out_dir,
+                    microbatch=args.microbatch, pad_vocab=args.pad_vocab)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            print(f"== {arch} x {shape} FAILED: {type(e).__name__}: {e}")
+            failures.append((arch, shape, str(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f_ in failures:
+            print("  ", f_[0], f_[1], f_[2][:200])
+        raise SystemExit(1)
+    print("\nall dry-runs compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: dense GQA (+SWA/qk-norm), MLA, MoE, RWKV6, Mamba hybrid,
+enc-dec (whisper), VLM prefix-LM.  See model_zoo.build(cfg)."""
+from repro.models import model_zoo
+
+__all__ = ["model_zoo"]

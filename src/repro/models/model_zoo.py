@@ -1,0 +1,47 @@
+"""Uniform Model facade over the decoder-only stack and the enc-dec stack."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init_params: Callable
+    abstract_params: Callable
+    loss_fn: Callable          # (params, batch, window=0, remat=True) -> loss
+    prefill: Callable          # (params, batch, window=0) -> (logits, cache)
+    decode_step: Callable      # (params, cache, tokens, pos, window=0)
+    init_cache: Callable       # (batch, max_seq, window=0) -> cache
+
+    def abstract_cache(self, batch: int, max_seq: int, window: int = 0):
+        return jax.eval_shape(
+            functools.partial(self.init_cache, batch, max_seq, window))
+
+
+def build(cfg) -> Model:
+    if cfg.is_encdec:
+        return Model(
+            cfg=cfg,
+            init_params=functools.partial(encdec.init_params, cfg),
+            abstract_params=functools.partial(encdec.abstract_params, cfg),
+            loss_fn=functools.partial(encdec.loss_fn, cfg),
+            prefill=functools.partial(encdec.prefill, cfg),
+            decode_step=functools.partial(encdec.decode_step, cfg),
+            init_cache=functools.partial(encdec.init_cache, cfg),
+        )
+    return Model(
+        cfg=cfg,
+        init_params=functools.partial(transformer.init_params, cfg),
+        abstract_params=functools.partial(transformer.abstract_params, cfg),
+        loss_fn=functools.partial(transformer.loss_fn, cfg),
+        prefill=functools.partial(transformer.prefill, cfg),
+        decode_step=functools.partial(transformer.decode_step, cfg),
+        init_cache=functools.partial(transformer.init_cache, cfg),
+    )

@@ -1,0 +1,85 @@
+"""Mixture-of-Experts FFN with GShard/Switch-style capacity dispatch.
+
+Capacity-based dispatch keeps the compiled FLOPs equal to the *active*
+FLOPs (tokens x top_k x expert FFN), which is what the roofline analysis
+must see — a dense all-experts einsum would overstate MoE compute by
+E/top_k.  Experts are tensor-parallel over the `model` axis within each
+expert (uniform across 8/16/64-expert configs), dispatch is batch-sharded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    D, F, E = cfg.d_model, (m.d_ff_expert or cfg.d_ff), m.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32, scale=0.02),
+        "w1": dense_init(ks[1], (E, D, F), dtype),
+        "w3": dense_init(ks[2], (E, D, F), dtype),
+        "w2": dense_init(ks[3], (E, F, D), dtype),
+    }
+    if m.num_shared_experts:
+        Fs = F * m.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["ws1"] = dense_init(k1, (D, Fs), dtype)
+        p["ws3"] = dense_init(k2, (D, Fs), dtype)
+        p["ws2"] = dense_init(k3, (Fs, D), dtype)
+    return p
+
+
+def moe_ffn(p, x, cfg):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.num_experts, m.top_k
+    N = B * S
+    xt = x.reshape(N, D)
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (N, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- capacity dispatch (position within each expert's buffer)
+    cap = int(m.capacity_factor * N * k / E)
+    cap = max(cap, 1)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)      # (N, k, E)
+    flat = onehot.reshape(N * k, E)
+    pos_in_expert = jnp.cumsum(flat, axis=0) * flat - 1        # (N*k, E)
+    pos = jnp.max(pos_in_expert, axis=-1).reshape(N, k)        # (N, k)
+    expert = gate_idx
+    keep = pos < cap                                           # token dropping
+    gate_vals = gate_vals * keep
+
+    # dispatch (N, k) slots -> (E, cap, D) via scatter
+    flat_idx = expert * cap + jnp.minimum(pos, cap - 1)        # (N, k)
+    buf = jnp.zeros((E * cap, D), x.dtype)
+    src = jnp.repeat(xt[:, None, :], k, axis=1)                # (N, k, D)
+    buf = buf.at[flat_idx.reshape(-1)].add(
+        (src * keep[..., None]).reshape(N * k, D))
+    buf = buf.reshape(E, cap, D)
+
+    # expert computation — active FLOPs only
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w1"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w2"]).reshape(E * cap, D)
+
+    # combine
+    gathered = out_buf[flat_idx.reshape(-1)].reshape(N, k, D)
+    out = jnp.sum(gathered * gate_vals[..., None].astype(x.dtype), axis=1)
+
+    # shared experts (DeepSeek-style) always active
+    if "ws1" in p:
+        h = jax.nn.silu(xt @ p["ws1"]) * (xt @ p["ws3"])
+        out = out + h @ p["ws2"]
+
+    # GShard load-balance aux loss
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce) * m.aux_loss_weight
+    return out.reshape(B, S, D), aux

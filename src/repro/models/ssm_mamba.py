@@ -1,0 +1,152 @@
+"""Mamba-1 selective SSM block (Jamba's recurrent mixer).
+
+TPU adaptation note (DESIGN.md §3): Mamba's per-(channel, state) decay
+a_t = exp(dt_t * A) prevents the rank-1 chunked-matmul trick that works for
+RWKV-6 (decay there is shared across the value dim).  The baseline here is a
+sequential lax.scan over time at state granularity — O(S) steps, O(1) memory
+beyond activations — with a *chunk-blocked* variant (scan over chunks, inner
+associative materialization of (C, d_inner, N)) as the perf knob.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(key, cfg, dtype):
+    D = cfg.d_model
+    s = cfg.ssm
+    din = s.expand * D
+    N = s.d_state
+    R = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (din, 1))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * din), dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, din), dtype, scale=0.5),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": dense_init(ks[2], (din, R + 2 * N), dtype),
+        "dt_proj_w": dense_init(ks[3], (R, din), dtype),
+        "dt_proj_b": jnp.full((din,), -4.6, jnp.float32),   # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[4], (din, D), dtype),
+    }
+
+
+def _conv_causal(x, w, b, conv_state=None):
+    """Depthwise causal conv.  x: (B,S,din), w: (K,din).
+
+    conv_state: (B, K-1, din) trailing inputs from the previous segment
+    (decode); returns (y, new_conv_state).
+    """
+    K = w.shape[0]
+    B, S, din = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, din), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)          # (B, S+K-1, din)
+    y = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, S:, :] if False else xp[:, -(K - 1):, :]
+    return jax.nn.silu(y + b), new_state
+
+
+def _ssm_scan(u, dt, B_t, C_t, A, D, h0):
+    """Selective scan.  u, dt: (B,S,din); B_t, C_t: (B,S,N); A: (din,N).
+
+    h_t = exp(dt_t A) * h_{t-1} + (dt_t * u_t) outer B_t ;  y_t = h_t . C_t
+    Returns (y (B,S,din), h (B,din,N)).
+    """
+    dtA = dt[..., None] * A[None, None]                    # (B,S,din,N)
+    decay = jnp.exp(dtA)
+    inp = (dt * u)[..., None] * B_t[:, :, None, :]         # (B,S,din,N)
+
+    def step(h, xs):
+        d_t, i_t, c_t = xs                                 # (B,din,N),(B,N)
+        h = d_t * h + i_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(inp, 1, 0),
+          jnp.moveaxis(C_t, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + u * D[None, None]
+    return y, h
+
+
+def _ssm_chunked(u, dt, B_t, C_t, A, D, h0, chunk: int = 128):
+    """Chunk-blocked scan: sequential over S/chunk super-steps, the inner
+    chunk materializes cumulative decays and uses cumsum-style parallel form.
+    Same math as _ssm_scan (validated in tests).
+
+    §Perf note: the (C, din, N) decay/input blocks are computed INSIDE the
+    checkpointed chunk body from the (C, din) / (C, N) raw projections —
+    materializing them over the full sequence (the naive formulation) costs
+    O(S·din·N) residuals per layer and forced multi-GB reshards on the
+    sharded d_inner axis (measured: 4.67 TB/device temp on jamba train_4k;
+    see EXPERIMENTS.md §Perf iteration 1)."""
+    B, S, din = u.shape
+    N = B_t.shape[-1]
+    assert S % chunk == 0
+    C = chunk
+    n = S // C
+    uc = u.reshape(B, n, C, din)
+    dtc = dt.reshape(B, n, C, din)
+    Bc = B_t.reshape(B, n, C, N)
+    Cc = C_t.reshape(B, n, C, N)
+
+    @jax.checkpoint
+    def step(h, xs):
+        u_c, dt_c, b_c, c_c = xs          # (B,C,din), (B,C,N)
+        la = dt_c[..., None] * A[None, None]            # (B,C,din,N) log-dec
+        i_c = (dt_c * u_c)[..., None] * b_c[:, :, None, :]
+        cum = jnp.cumsum(la, axis=1)      # inclusive log cumprod
+        # h_j = exp(cum_j) h0 + sum_{t<=j} exp(cum_j - cum_t) i_t
+        w = jnp.exp(cum)
+        scaled = i_c * jnp.exp(-cum)
+        acc = jnp.cumsum(scaled, axis=1)
+        h_all = w * (h[:, None] + acc)    # (B,C,din,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, c_c)
+        return h_all[:, -1], y
+
+    xs = (jnp.moveaxis(uc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, din) + u * D[None, None]
+    return y, h
+
+
+def init_mamba_state(cfg, batch: int, dtype):
+    din = cfg.ssm.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, din), dtype),
+            "h": jnp.zeros((batch, din, cfg.ssm.d_state), jnp.float32)}
+
+
+def mamba_block(p, x, state, cfg, chunked: bool = False):
+    """x: (B,S,D), state: {conv, h}.  Returns (out, new_state)."""
+    s = cfg.ssm
+    N = s.d_state
+    R = _dt_rank(cfg)
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                       # (B,S,din)
+    u, conv_state = _conv_causal(u, p["conv_w"], p["conv_b"], state["conv"])
+    proj = u @ p["x_proj"]
+    dt_r, B_t, C_t = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ p["dt_proj_w"].astype(jnp.float32)
+        + p["dt_proj_b"])                                  # (B,S,din) f32
+    A = -jnp.exp(p["A_log"])                               # (din,N), negative
+    uf = u.astype(jnp.float32)
+    Bf, Cf = B_t.astype(jnp.float32), C_t.astype(jnp.float32)
+    if chunked and x.shape[1] % 128 == 0 and x.shape[1] > 1:
+        y, h = _ssm_chunked(uf, dt, Bf, Cf, A, p["D"], state["h"])
+    else:
+        y, h = _ssm_scan(uf, dt, Bf, Cf, A, p["D"], state["h"])
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"conv": conv_state, "h": h}

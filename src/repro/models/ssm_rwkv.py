@@ -1,0 +1,177 @@
+"""RWKV-6 (Finch) token mixing — data-dependent decay linear attention.
+
+TPU adaptation (DESIGN.md §3): the reference CUDA wkv kernel is replaced by
+a *chunked* linear-attention formulation that turns the per-token recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ,   o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+into per-chunk MXU matmuls (intra-chunk lower-triangular attention with
+cumulative-decay rescaling, inter-chunk state carried by lax.scan).  A naive
+per-token lax.scan implementation is kept as the reference oracle
+(`wkv_naive`) and for single-token decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+
+def init_rwkv_mix(key, cfg, dtype):
+    D = cfg.d_model
+    hs = cfg.rwkv.head_size
+    H = D // hs
+    r = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 10)
+    return {
+        "mu_r": jnp.full((D,), 0.5, dtype), "mu_k": jnp.full((D,), 0.5, dtype),
+        "mu_v": jnp.full((D,), 0.5, dtype), "mu_w": jnp.full((D,), 0.5, dtype),
+        "mu_g": jnp.full((D,), 0.5, dtype),
+        "wr": dense_init(ks[0], (D, D), dtype),
+        "wk": dense_init(ks[1], (D, D), dtype),
+        "wv": dense_init(ks[2], (D, D), dtype),
+        "wg": dense_init(ks[3], (D, D), dtype),
+        "wo": dense_init(ks[4], (D, D), dtype),
+        # data-dependent decay LoRA:  w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((D,), -5.0, jnp.float32),
+        "wA": dense_init(ks[5], (D, r), dtype),
+        "wB": dense_init(ks[6], (r, D), dtype, scale=0.01),
+        "u": dense_init(ks[7], (H, hs), jnp.float32, scale=0.3),
+        "ln_x": jnp.ones((D,), dtype),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: concat last token of previous step. x: (B,S,D)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _proj_rkvwg(p, x, x_prev, cfg):
+    xs = _shift(x, x_prev)
+    def lerp(mu):
+        return x + (xs - x) * mu
+    r = lerp(p["mu_r"]) @ p["wr"]
+    k = lerp(p["mu_k"]) @ p["wk"]
+    v = lerp(p["mu_v"]) @ p["wv"]
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["wg"])
+    lw = lerp(p["mu_w"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"] + jnp.tanh(lw @ p["wA"].astype(jnp.float32))
+                         @ p["wB"].astype(jnp.float32)))
+    return r, k, v, g, w          # w in (0,1), f32
+
+
+def _heads(x, H, hs):
+    B, S, _ = x.shape
+    return x.reshape(B, S, H, hs)
+
+
+def wkv_naive(r, k, v, w, u, state):
+    """Per-token recurrence (oracle + decode path).
+
+    r,k,v: (B,S,H,hs); w: (B,S,H,hs) decay; u: (H,hs) bonus;
+    state: (B,H,hs,hs)  ->  (out (B,S,H,hs), state)
+    """
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = xs              # (B,H,hs)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hs,hs)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1).astype(r.dtype), state
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 64):
+    """Chunked parallel form — MXU-friendly (see module docstring).
+
+    Within a chunk of length C (A = cumprod of w inclusive):
+      o_j  = (r_j * A_{j-1}) S_0  +  sum_{t<j} (r_j*A_{j-1}/A_t * k_t) v_t
+             + (r_j * u * k_j) v_j
+      S_C  = diag(A_C) S_0 + sum_t diag(A_C/A_t) k_t^T v_t
+    """
+    B, S, H, hs = r.shape
+    assert S % chunk == 0, (S, chunk)
+    C = chunk
+    n = S // C
+    rf, kf, vf, wf = (jnp.moveaxis(t.astype(jnp.float32), 1, 2)
+                      .reshape(B, H, n, C, hs)
+                      for t in (r, k, v, w))
+
+    def step(s, xs):
+        r_c, k_c, v_c, w_c = xs                        # (B,H,C,hs)
+        logw = jnp.log(jnp.maximum(w_c, 1e-12))
+        la = jnp.cumsum(logw, axis=-2)                 # log A_j (inclusive)
+        a_incl = jnp.exp(la)                           # A_j
+        a_excl = jnp.exp(la - logw)                    # A_{j-1}
+        r_dec = r_c * a_excl
+        k_div = k_c * jnp.exp(-la)                     # k_t / A_t
+        # intra-chunk strict-lower attention
+        att = jnp.einsum("bhik,bhjk->bhij", r_dec, k_div)
+        att = jnp.tril(att, k=-1)
+        intra = jnp.einsum("bhij,bhjv->bhiv", att, v_c)
+        # diagonal bonus term
+        bonus = jnp.einsum("bhik,bhik->bhi", r_c * u[None, :, None, :], k_c)
+        intra = intra + bonus[..., None] * v_c
+        # inter-chunk: state contribution
+        inter = jnp.einsum("bhik,bhkv->bhiv", r_dec, s)
+        # state update
+        a_tot = a_incl[..., -1:, :]                    # (B,H,1,hs)
+        k_scaled = k_c * (a_tot / jnp.maximum(a_incl, 1e-30))
+        s_new = a_tot.squeeze(-2)[..., None] * s + jnp.einsum(
+            "bhik,bhiv->bhkv", k_scaled, v_c)
+        return s_new, intra + inter
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (rf, kf, vf, wf))
+    state, out = jax.lax.scan(step, state, xs)         # out: (n,B,H,C,hs)
+    out = jnp.moveaxis(out, 0, 2).reshape(B, H, S, hs)
+    return jnp.moveaxis(out, 1, 2).astype(r.dtype), state
+
+
+def rwkv_mix_train(p, x, x_prev, state, cfg, chunked: bool = True):
+    """x: (B,S,D); x_prev: (B,D) last token of previous segment;
+    state: (B,H,hs,hs).  Returns (out, (x_last, state))."""
+    B, S, D = x.shape
+    hs = cfg.rwkv.head_size
+    H = D // hs
+    r, k, v, g, w = _proj_rkvwg(p, x, x_prev, cfg)
+    rh, kh, vh, wh = (_heads(t, H, hs) for t in (r, k, v, w))
+    if chunked and S % 64 == 0 and S > 1:
+        out, state = wkv_chunked(rh, kh, vh, wh, p["u"], state)
+    else:
+        out, state = wkv_naive(rh, kh, vh, wh, p["u"], state)
+    out = out.reshape(B, S, D)
+    out = rms_norm(out, p["ln_x"], cfg.norm_eps) * g
+    return out @ p["wo"], (x[:, -1, :], state)
+
+
+def init_rwkv_state(cfg, batch: int, dtype):
+    hs = cfg.rwkv.head_size
+    H = cfg.d_model // hs
+    return {"x_prev_mix": jnp.zeros((batch, cfg.d_model), dtype),
+            "x_prev_ffn": jnp.zeros((batch, cfg.d_model), dtype),
+            "wkv": jnp.zeros((batch, H, hs, hs), jnp.float32)}
+
+
+def init_rwkv_ffn(key, cfg, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((D,), 0.5, dtype), "mu_r": jnp.full((D,), 0.5, dtype),
+        "wk": dense_init(ks[0], (D, F), dtype),
+        "wv": dense_init(ks[1], (F, D), dtype),
+        "wr": dense_init(ks[2], (D, D), dtype),
+    }
+
+
+def rwkv_ffn(p, x, x_prev, cfg):
+    """RWKV channel-mix.  Returns (out, x_last)."""
+    xs = _shift(x, x_prev)
+    xk = x + (xs - x) * p["mu_k"]
+    xr = x + (xs - x) * p["mu_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (h @ p["wv"]), x[:, -1, :]

@@ -1,0 +1,4 @@
+"""Optimizers: SGD (+momentum), Adam, LR schedules."""
+from repro.optim import optimizers, schedule
+
+__all__ = ["optimizers", "schedule"]

@@ -1,0 +1,74 @@
+"""Minimal functional optimizers (no external deps).
+
+Each optimizer is (init_fn, update_fn):
+  state = init(params)
+  params, state = update(params, grads, state, lr)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd():
+    def init(params):
+        return ()
+
+    def update(params, grads, state, lr):
+        new = jax.tree_util.tree_map(
+            lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype),
+            params, grads)
+        return new, state
+
+    return init, update
+
+
+def momentum(beta: float = 0.9):
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(params, grads, state, lr):
+        new_state = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        new = jax.tree_util.tree_map(
+            lambda p, m: (p - lr * m).astype(p.dtype), params, new_state)
+        return new, new_state
+
+    return init, update
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree_util.tree_map(
+            lambda p, m_, v_: (p - lr * (m_ / bc1)
+                               / (jnp.sqrt(v_ / bc2) + eps)).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return init, update
+
+
+def get(name: str):
+    if name == "sgd":
+        return sgd()
+    if name == "momentum":
+        return momentum()
+    if name == "adam":
+        return adam()
+    raise ValueError(name)

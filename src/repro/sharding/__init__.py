@@ -1,0 +1,4 @@
+"""Multi-pod sharding policies (fsdp_tp / tp_only / dp_only)."""
+from repro.sharding import policy
+
+__all__ = ["policy"]

@@ -1,0 +1,243 @@
+"""Sharding policies: map every param / batch / cache leaf to a PartitionSpec.
+
+Policies (DESIGN.md §5):
+  fsdp_tp  — params 2-D sharded: tensor-parallel dim over `model`, FSDP dim
+             over `data`; batch over (`pod`, `data`).  Train default.
+  tp_only  — params sharded over `model` only (replicated over `data`);
+             removes per-step FSDP all-gathers.  Serving-optimized (§Perf).
+  dp_only  — pure data parallel (small models).
+
+Divisibility is checked per leaf: a dim is only sharded when its size is a
+multiple of the axis size (e.g. internvl2's 14 heads / whisper's 8 heads
+fall back to replicated attention; 151655-entry vocabs shard d_model
+instead — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+DATA, MODEL, POD = "data", "model", "pod"
+AXIS_SIZE = {DATA: 16, MODEL: 16, POD: 2}
+
+
+def _div(n: int, axis: str | None) -> bool:
+    return axis is not None and n % AXIS_SIZE[axis] == 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _rule(name: str, shape: tuple[int, ...], fsdp, tp,
+          expert_parallel: bool = False) -> tuple:
+    """Spec for one *logical* (unstacked) param leaf."""
+    nd = len(shape)
+    leaf = name.rsplit("/", 1)[-1]
+
+    def fs(dim):                        # fsdp if divisible
+        return fsdp if _div(shape[dim], fsdp) else None
+
+    def mp(dim):                        # tensor-parallel if divisible
+        return tp if _div(shape[dim], tp) else None
+
+    # ---------- embeddings / heads
+    # NOTE: never FSDP-shard a contraction dim that shares the axis with the
+    # batch sharding — XLA then replicates the full-batch activations
+    # (measured: 2x37 GB f32 logits collectives on internvl2 train;
+    # EXPERIMENTS.md §Perf iteration 3).  Vocab-dim (output) sharding only.
+    if leaf == "embed":
+        if _div(shape[0], tp):
+            return (tp, None)
+        return (None, mp(1))
+    if leaf == "lm_head":
+        if _div(shape[1], tp):
+            return (None, tp)
+        return (mp(0), None)
+    if leaf in ("patch_proj", "enc_in_proj"):
+        return (fs(0), mp(1))
+
+    # ---------- attention (wq/wk/wv (D,H,hd), wo (H,hd,D))
+    if leaf in ("wq", "wk", "wv") and nd == 3:
+        if _div(shape[1], tp):
+            return (fs(0), tp, None)
+        return (None, None, None)       # tiny heads: replicate (see NOTE)
+    if leaf == "wo" and nd == 3:
+        if _div(shape[0], tp):
+            return (tp, None, fs(2))
+        return (None, None, None)
+
+    # ---------- MLA
+    if leaf == "w_dkv":
+        return (fs(0), None)
+    if leaf in ("w_uk", "w_uv"):
+        return (None, mp(1), None)
+
+    # ---------- MoE
+    if leaf == "router":
+        return (fs(0), None)
+    if leaf in ("w1", "w3") and nd == 3:        # (E, D, F)
+        if expert_parallel and _div(shape[0], tp):
+            # experts over `model`, expert-FFN dim over `data` (2-D EP:
+            # keeps per-device expert bytes bounded for 348B-expert jamba)
+            return (tp, None, fs(2))
+        return (None, fs(1), mp(2))             # TP within each expert
+    if leaf == "w2" and nd == 3:                # (E, F, D)
+        if expert_parallel and _div(shape[0], tp):
+            return (tp, fs(1), None)
+        return (None, mp(1), fs(2))
+    if leaf in ("ws1", "ws3"):
+        return (fs(0), mp(1))
+    if leaf == "ws2":
+        return (mp(0), fs(1))
+
+    # ---------- dense FFN (w1/w3 (D,F), w2 (F,D)) & generic 2-D matmuls
+    if leaf in ("w1", "w3", "wk_ffn") and nd == 2:
+        return (fs(0), mp(1))
+    if leaf == "w2" and nd == 2:
+        return (mp(0), fs(1))
+
+    # ---------- RWKV
+    if leaf in ("wr", "wg") and nd == 2:
+        return (fs(0), mp(1))
+    if leaf == "wv" and nd == 2:                 # rwkv ffn (F, D)
+        return (mp(0), fs(1))
+    if leaf == "wk" and nd == 2:                 # rwkv (D, D) / ffn (D, F)
+        return (fs(0), mp(1))
+    if leaf == "wo" and nd == 2:
+        return (mp(0), fs(1))
+    if leaf == "wA":
+        return (fs(0), None)
+    if leaf == "wB":
+        return (None, mp(1))
+    if leaf == "u" and nd == 2:
+        return (mp(0), None)
+
+    # ---------- Mamba
+    if leaf == "in_proj":
+        return (fs(0), mp(1))
+    if leaf == "conv_w":
+        return (None, mp(1))
+    if leaf in ("conv_b", "dt_proj_b", "D"):
+        return (mp(0),)
+    if leaf == "x_proj":
+        return (mp(0), None)
+    if leaf == "dt_proj_w":
+        return (None, mp(1))
+    if leaf == "A_log":
+        return (mp(0), None)
+    if leaf == "out_proj":
+        return (mp(0), fs(1))
+
+    # ---------- norms / scalars / small vectors: replicated
+    return (None,) * nd
+
+
+def _is_stacked(path_s: str) -> bool:
+    return path_s.startswith("stage") or path_s.startswith("enc/") \
+        or path_s.startswith("dec/")
+
+
+def param_pspecs(abstract_params, policy: str = "fsdp_tp"):
+    """PartitionSpec tree matching an abstract param tree.
+
+    Policies: fsdp_tp | tp_only | dp_only, each with an optional `_ep`
+    suffix (e.g. fsdp_tp_ep) that shards MoE experts over `model`
+    (expert parallelism) instead of tensor-parallel within each expert —
+    requires num_experts % 16 == 0 (deepseek 64e, jamba 16e).
+    """
+    ep = policy.endswith("_ep")
+    base = policy[:-3] if ep else policy
+    fsdp = DATA if base == "fsdp_tp" else None
+    tp = MODEL if base in ("fsdp_tp", "tp_only") else None
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if _is_stacked(ps):
+            logical = shape[1:]
+            return P(*((None,) + _rule(ps, logical, fsdp, tp, ep)))
+        return P(*_rule(ps, shape, fsdp, tp, ep))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+
+def batch_pspecs(batch_specs, multi_pod: bool):
+    """Batch dims over (pod, data); everything else replicated."""
+    baxes = (POD, DATA) if multi_pod else (DATA,)
+
+    def spec(path, leaf):
+        if len(leaf.shape) == 0:
+            return P()
+        b = leaf.shape[0]
+        n = 1
+        for ax in baxes:
+            n *= AXIS_SIZE[ax]
+        first = baxes if b % n == 0 else None
+        return P(first, *((None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_specs)
+
+
+def cache_pspecs(abstract_cache, long_context: bool, multi_pod: bool):
+    """KV/state cache sharding for decode.
+
+    decode_32k: batch over `data`, cache seq over `model`.
+    long_500k (batch=1): cache seq over (`data`,`model`); states over `model`.
+    Leading stacked-layer dims are replicated.
+    """
+    seq_axes = (DATA, MODEL) if long_context else (MODEL,)
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        leaf_name = ps.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        # strip leading stacked layer dim(s): caches built by init_cache have
+        # one leading (count,) axis for scanned stages / enc-dec layers.
+        lead = 1
+        logical = shape[lead:]
+        nd = len(logical)
+        if leaf_name == "pos":
+            return P(*((None,) * len(shape)))
+        batch = logical[0] if nd else 1
+        b_axis = DATA if (not long_context and batch % AXIS_SIZE[DATA] == 0) \
+            else None
+        if leaf_name in ("k", "v", "xk", "xv"):          # (B, S, K, hd)
+            seq = logical[1]
+            s_ax = seq_axes if all(seq % AXIS_SIZE[a] == 0 for a in seq_axes) \
+                and _prod(seq_axes) <= seq else None
+            if s_ax is None and seq % AXIS_SIZE[MODEL] == 0:
+                s_ax = (MODEL,)
+            heads = logical[2]
+            h_ax = MODEL if (s_ax is None and heads % AXIS_SIZE[MODEL] == 0) \
+                else None
+            return P(None, b_axis, s_ax, h_ax, None)
+        if leaf_name in ("c", "kpe"):                    # MLA latent (B,S,r)
+            seq = logical[1]
+            s_ax = seq_axes if all(seq % AXIS_SIZE[a] == 0 for a in seq_axes) \
+                else ((MODEL,) if seq % AXIS_SIZE[MODEL] == 0 else None)
+            return P(None, b_axis, s_ax, None)
+        if leaf_name == "wkv":                           # (B, H, hs, hs)
+            h_ax = MODEL if logical[1] % AXIS_SIZE[MODEL] == 0 else None
+            return P(None, b_axis, h_ax, None, None)
+        if leaf_name in ("x_prev_mix", "x_prev_ffn"):    # (B, D)
+            d_ax = MODEL if logical[1] % AXIS_SIZE[MODEL] == 0 else None
+            return P(None, b_axis, d_ax)
+        if leaf_name == "conv":                          # (B, K-1, din)
+            d_ax = MODEL if logical[2] % AXIS_SIZE[MODEL] == 0 else None
+            return P(None, b_axis, None, d_ax)
+        if leaf_name == "h":                             # (B, din, N)
+            d_ax = MODEL if logical[1] % AXIS_SIZE[MODEL] == 0 else None
+            return P(None, b_axis, d_ax, None)
+        return P(*((None,) * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_cache)
+
+
+def _prod(axes):
+    n = 1
+    for a in axes:
+        n *= AXIS_SIZE[a]
+    return n

@@ -1,0 +1,59 @@
+"""Asymmetric up/downlink generalization (paper §II-B footnote 1)."""
+import numpy as np
+
+from repro.core.delay_model import NodeDelayParams, scale_tau
+from repro.core import load_allocation as la
+
+
+def test_symmetric_default_unchanged():
+    nd = NodeDelayParams(mu=4.0, alpha=2.0, tau=0.25, p=0.1)
+    assert nd._tau_up == nd.tau and nd._p_up == nd.p
+
+
+def test_asym_expected_delay():
+    nd = NodeDelayParams(mu=4.0, alpha=2.0, tau=0.2, p=0.1,
+                         tau_up=0.6, p_up=0.3)
+    # eq.15 generalized: l/mu(1+1/a) + tau/(1-p) + tau_up/(1-p_up)
+    expect = 10 / 4 * 1.5 + 0.2 / 0.9 + 0.6 / 0.7
+    assert abs(nd.expected_delay(10.0) - expect) < 1e-12
+
+
+def test_asym_cdf_matches_montecarlo():
+    nd = NodeDelayParams(mu=2.0, alpha=1.5, tau=0.3, p=0.2,
+                         tau_up=0.8, p_up=0.4)
+    rng = np.random.default_rng(0)
+    s = nd.sample(rng, 5.0, size=300_000)
+    for t in [3.0, 6.0, 12.0]:
+        assert abs(np.mean(s <= t) - nd.cdf(t, 5.0)) < 5e-3, t
+
+
+def test_asym_cdf_reduces_to_symmetric():
+    sym = NodeDelayParams(mu=3.0, alpha=2.0, tau=0.4, p=0.15)
+    asym = NodeDelayParams(mu=3.0, alpha=2.0, tau=0.4, p=0.15,
+                           tau_up=0.4, p_up=0.15)
+    for t in [1.5, 4.0, 9.0]:
+        assert abs(sym.cdf(t, 6.0) - asym.cdf(t, 6.0)) < 1e-9
+
+
+def test_asym_scale_tau():
+    nd = NodeDelayParams(mu=1.0, alpha=1.0, tau=2.0, p=0.1, tau_up=3.0)
+    nd2 = scale_tau(nd, 10.0)
+    assert nd2.tau == 20.0 and nd2.tau_up == 30.0
+
+
+def test_asym_two_step_allocation():
+    rng = np.random.default_rng(3)
+    clients = [NodeDelayParams(mu=float(rng.uniform(1, 10)), alpha=2.0,
+                               tau=float(rng.uniform(0.01, 0.2)), p=0.1,
+                               tau_up=float(rng.uniform(0.1, 0.5)), p_up=0.3)
+               for _ in range(6)]
+    m = 6 * 30.0
+    alloc = la.two_step_allocate(clients, [30.0] * 6, None,
+                                 u_max=0.2 * m, m=m)
+    assert abs(alloc.total_return - m) < 1e-2 * m
+    # slower uplinks must yield a larger deadline than reciprocal fast links
+    fast = [NodeDelayParams(mu=c.mu, alpha=c.alpha, tau=c.tau, p=0.1)
+            for c in clients]
+    alloc_fast = la.two_step_allocate(fast, [30.0] * 6, None,
+                                      u_max=0.2 * m, m=m)
+    assert alloc.t_star > alloc_fast.t_star

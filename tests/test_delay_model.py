@@ -1,0 +1,60 @@
+"""Delay model (paper §II-B, eq. 11-15, Theorem 1 cdf)."""
+import numpy as np
+
+from repro.config import FLConfig
+from repro.core.delay_model import (NodeDelayParams, mec_network, packet_bits,
+                                    scale_tau)
+
+
+def test_expected_delay_formula():
+    nd = NodeDelayParams(mu=4.0, alpha=2.0, tau=0.25, p=0.1)
+    load = 10.0
+    # eq. 15: l/mu (1 + 1/alpha) + 2 tau / (1-p)
+    expect = 10 / 4 * 1.5 + 2 * 0.25 / 0.9
+    assert abs(nd.expected_delay(load) - expect) < 1e-12
+
+
+def test_sample_mean_matches_eq15():
+    nd = NodeDelayParams(mu=4.0, alpha=2.0, tau=0.25, p=0.3)
+    rng = np.random.default_rng(0)
+    s = nd.sample(rng, 10.0, size=300_000)
+    assert abs(np.mean(s) - nd.expected_delay(10.0)) < 0.02 * nd.expected_delay(10.0)
+
+
+def test_cdf_monotone_and_bounded():
+    nd = NodeDelayParams(mu=4.0, alpha=2.0, tau=0.25, p=0.3)
+    ts = np.linspace(0, 50, 200)
+    cdf = [nd.cdf(t, 10.0) for t in ts]
+    assert cdf[0] == 0.0
+    assert all(b >= a - 1e-12 for a, b in zip(cdf, cdf[1:]))
+    assert cdf[-1] <= 1.0
+    assert cdf[-1] > 0.95
+
+
+def test_cdf_matches_montecarlo():
+    nd = NodeDelayParams(mu=2.0, alpha=1.5, tau=0.4, p=0.25)
+    rng = np.random.default_rng(1)
+    s = nd.sample(rng, 5.0, size=300_000)
+    for t in [2.0, 4.0, 8.0]:
+        assert abs(np.mean(s <= t) - nd.cdf(t, 5.0)) < 5e-3
+
+
+def test_mec_network_heterogeneity():
+    fl = FLConfig(n_clients=30)
+    nodes = mec_network(fl, d_scalars_per_point=1000)
+    assert len(nodes) == 30
+    mus = sorted(nd.mu for nd in nodes)
+    # paper §V-A: processing rates span k2^29 = 0.8^29
+    assert mus[0] / mus[-1] == FLConfig().mac_decay ** 29 or \
+        abs(mus[0] / mus[-1] - FLConfig().mac_decay ** 29) < 1e-9
+
+
+def test_packet_bits_overhead():
+    fl = FLConfig()
+    assert packet_bits(fl, 100) == 100 * 32 * 1.1
+
+
+def test_scale_tau():
+    nd = NodeDelayParams(mu=1.0, alpha=1.0, tau=2.0, p=0.1)
+    nd2 = scale_tau(nd, 10.0)
+    assert nd2.tau == 20.0 and nd2.mu == nd.mu

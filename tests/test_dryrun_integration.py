@@ -1,0 +1,32 @@
+"""Integration: the multi-pod dry-run lowers+compiles in a fresh process
+(XLA_FLAGS device-count override requires pre-jax-init env)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape,extra", [
+    ("whisper-base", "decode_32k", []),
+    ("internvl2-1b", "prefill_32k", []),
+    ("rwkv6-1.6b", "long_500k", ["--multi-pod"]),
+])
+def test_dryrun_subprocess(tmp_path, arch, shape, extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out_dir = str(tmp_path)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out-dir", out_dir] + extra
+    res = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=REPO, timeout=560)
+    assert res.returncode == 0, res.stdout + res.stderr
+    files = [f for f in os.listdir(out_dir) if f.endswith(".json")]
+    assert len(files) == 1
+    rec = json.load(open(os.path.join(out_dir, files[0])))
+    assert rec["arch"] == arch and rec["shape"] == shape
+    assert rec["memory_analysis"]["temp_size_in_bytes"] > 0
+    assert rec["chips"] == (512 if "--multi-pod" in extra else 256)

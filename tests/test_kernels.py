@@ -1,0 +1,117 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles in ref.py."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+SHAPES_RFF = [(128, 128, 128), (256, 384, 128), (200, 300, 100),
+              (64, 512, 96), (130, 257, 70)]
+
+
+@pytest.mark.parametrize("m,q,d", SHAPES_RFF)
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_rff_embed(m, q, d, dtype):
+    x = _arr((m, d), dtype)
+    omega = _arr((d, q), dtype)
+    delta = jnp.asarray(RNG.uniform(0, 2 * np.pi, size=(q,)), dtype)
+    got = ops.rff_embed(x, omega, delta, use_pallas=True)
+    want = ref.rff_embed(x, omega, delta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+SHAPES_GRAD = [(128, 128, 8), (256, 256, 10), (200, 260, 3), (384, 128, 1),
+               (130, 70, 5)]
+
+
+@pytest.mark.parametrize("m,q,c", SHAPES_GRAD)
+def test_linreg_grad(m, q, c):
+    x = _arr((m, q), scale=0.3)
+    theta = _arr((q, c), scale=0.3)
+    y = _arr((m, c))
+    got = ops.linreg_grad(x, theta, y, use_pallas=True)
+    want = ref.linreg_grad(x, theta, y)
+    denom = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got) / denom,
+                               np.asarray(want) / denom, atol=3e-5)
+
+
+SHAPES_PAR = [(128, 128, 128), (96, 200, 260), (256, 130, 64), (64, 64, 500)]
+
+
+@pytest.mark.parametrize("u,l,q", SHAPES_PAR)
+def test_parity_encode(u, l, q):
+    g = _arr((u, l))
+    w = jnp.asarray(RNG.uniform(0.2, 1.0, size=(l,)), jnp.float32)
+    x = _arr((l, q), scale=0.5)
+    got = ops.parity_encode(g, w, x, use_pallas=True)
+    want = ref.parity_encode(g, w, x)
+    denom = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got) / denom,
+                               np.asarray(want) / denom, atol=3e-5)
+
+
+DECODE_SHAPES = [
+    # B, H, K, hd, hd_v, T, window
+    (2, 8, 2, 64, 64, 256, 0),      # GQA
+    (2, 8, 8, 64, 64, 300, 0),      # MHA, non-divisible T (padded)
+    (1, 16, 4, 32, 32, 128, 48),    # sliding window
+    (2, 4, 4, 16, 8, 64, 0),        # MLA-style hd_v != hd
+]
+
+
+@pytest.mark.parametrize("B,H,K,hd,hdv,T,win", DECODE_SHAPES)
+def test_gqa_decode(B, H, K, hd, hdv, T, win):
+    q = _arr((B, H, hd))
+    k = _arr((B, T, K, hd), scale=0.3)
+    v = _arr((B, T, K, hdv))
+    kp = jnp.asarray(np.where(RNG.uniform(size=T) < 0.9,
+                              np.arange(T), -1), jnp.int32)
+    qp = jnp.int32(T - 1)
+    got = ops.gqa_decode(q, k, v, kp, qp, window=win, use_pallas=True, bt=64)
+    want = ref.gqa_decode(q, k, v, kp, qp, window=win)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_gqa_decode_matches_model_attention():
+    """Kernel oracle agrees with the model's _attend_single decode path."""
+    from repro.models.attention import _attend_single
+    B, H, K, hd, T = 2, 8, 4, 32, 96
+    q = _arr((B, 1, H, hd))
+    k = _arr((B, T, K, hd), scale=0.3)
+    v = _arr((B, T, K, hd))
+    kp = jnp.arange(T, dtype=jnp.int32)
+    qp = jnp.full((1,), T - 1, jnp.int32)
+    want = _attend_single(q, k, v, qp, kp, 0)[:, 0]
+    got = ref.gqa_decode(q[:, 0], k, v, kp, jnp.int32(T - 1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_bf16_support():
+    x = _arr((128, 128), jnp.bfloat16)
+    omega = _arr((128, 128), jnp.bfloat16)
+    delta = jnp.zeros((128,), jnp.bfloat16)
+    got = ops.rff_embed(x, omega, delta, use_pallas=True)
+    want = ref.rff_embed(x, omega, delta)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=0.15)
+
+
+def test_block_shape_sweep():
+    """Kernel must be numerically invariant to BlockSpec tiling choices."""
+    x = _arr((256, 256), scale=0.3)
+    theta = _arr((256, 4), scale=0.3)
+    y = _arr((256, 4))
+    base = np.asarray(ref.linreg_grad(x, theta, y))
+    for bm, bq in [(64, 64), (128, 256), (256, 128)]:
+        got = np.asarray(ops.linreg_grad(x, theta, y, use_pallas=True,
+                                         bm=bm, bq=bq))
+        np.testing.assert_allclose(got, base, atol=1e-3)

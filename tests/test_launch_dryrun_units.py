@@ -1,0 +1,98 @@
+"""Unit tests for launch-layer helpers (HLO collective parser, input specs,
+decode-window policy, pad_vocab correctness)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SHAPES
+from repro.configs import ARCH_IDS, decode_window, get_config, input_specs, \
+    smoke_variant
+from repro.models.model_zoo import build
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %all-gather.5 = bf16[2048,512]{1,0} all-gather(%x), dimensions={0}
+  %all-reduce.1 = (f32[16,16]{1,0}, f32[4]{0}) all-reduce(%a, %b)
+  %add.1 = f32[8]{0} add(%p, %q)
+  ROOT %ag = u32[10]{0} all-to-all(%y)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 2048 * 512 * 2
+    assert got["all-reduce"] == 16 * 16 * 4 + 4 * 4
+    assert got["all-to-all"] == 10 * 4
+    assert got["reduce-scatter"] == 0
+
+
+def test_input_specs_all_archs_all_shapes():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            spec = input_specs(cfg, shape)
+            assert "tokens" in spec
+            if shape.kind == "decode":
+                assert spec["tokens"].shape == (shape.global_batch, 1)
+            else:
+                total = spec["tokens"].shape[1] + (cfg.n_prefix_patches or 0)
+                assert total == shape.seq_len
+                assert spec["tokens"].shape[0] == shape.global_batch
+            if shape.kind == "train":
+                assert spec["labels"].shape == spec["tokens"].shape
+            if cfg.is_encdec and shape.kind != "decode":
+                assert spec["frames"].shape == (shape.global_batch,
+                                                cfg.encoder_seq, cfg.d_model)
+
+
+def test_decode_window_policy():
+    # ssm/hybrid: native sub-quadratic, no forced window
+    assert decode_window(get_config("rwkv6-1.6b"), "long_500k") == 0
+    assert decode_window(get_config("jamba-1.5-large-398b"), "long_500k") == 0
+    # mixtral: native SWA everywhere
+    assert decode_window(get_config("mixtral-8x7b"), "decode_32k") == 4096
+    # dense archs: full attention at 32k, SWA variant at 500k
+    assert decode_window(get_config("yi-6b"), "decode_32k") == 0
+    assert decode_window(get_config("yi-6b"), "long_500k") == 4096
+    assert decode_window(get_config("whisper-base"), "long_500k") == 4096
+
+
+def test_pad_vocab_loss_equivalence():
+    """Padded-vocab model must produce the same loss as unpadded (masked)."""
+    base = smoke_variant(get_config("qwen3-4b"))
+    base = dataclasses.replace(base, vocab=509)       # not divisible by 16
+    padded = dataclasses.replace(base, pad_vocab=True)
+    assert padded.vocab_padded == 512
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, 509, (2, 32)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    m1, m2 = build(base), build(padded)
+    p1 = m1.init_params(jax.random.PRNGKey(0))
+    p2 = m2.init_params(jax.random.PRNGKey(0))
+    # copy the unpadded params into the padded tree
+    p2 = jax.tree_util.tree_map(lambda a: a, p2)
+    emb = np.zeros(p2["embed"].shape, np.float32)
+    emb[:509] = np.asarray(p1["embed"], np.float32)
+    p2["embed"] = jnp.asarray(emb, p2["embed"].dtype)
+    head = np.zeros(p2["lm_head"].shape, np.float32)
+    head[:, :509] = np.asarray(p1["lm_head"], np.float32)
+    p2["lm_head"] = jnp.asarray(head, p2["lm_head"].dtype)
+    for k in p1:
+        if k not in ("embed", "lm_head"):
+            p2[k] = p1[k]
+    l1 = float(m1.loss_fn(p1, batch))
+    l2 = float(m2.loss_fn(p2, batch))
+    assert abs(l1 - l2) < 1e-3, (l1, l2)
+
+
+def test_mesh_shapes():
+    import pytest
+    if jax.device_count() < 512:
+        pytest.skip("production mesh needs 512 placeholder devices "
+                    "(dryrun.py sets XLA_FLAGS before jax init)")
+    from repro.launch.mesh import make_production_mesh
+    m1 = make_production_mesh()
+    assert m1.devices.size == 256 and m1.axis_names == ("data", "model")
+    m2 = make_production_mesh(multi_pod=True)
+    assert m2.devices.size == 512 and m2.axis_names == ("pod", "data", "model")

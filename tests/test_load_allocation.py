@@ -1,0 +1,117 @@
+"""Load allocation optimizer (paper §III-C, §IV, Appendix A/C/D)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.delay_model import NodeDelayParams
+from repro.core import load_allocation as la
+
+
+def node(mu=2.0, alpha=20.0, tau=math.sqrt(3.0), p=0.9):
+    """The paper's Fig. 3 illustration parameters."""
+    return NodeDelayParams(mu=mu, alpha=alpha, tau=tau, p=p)
+
+
+class TestLambertW:
+    def test_inverse_identity(self):
+        for x in [-0.367, -0.2, -0.05, -1e-4]:
+            w = la.lambert_w_minus1(x)
+            assert w <= -1.0
+            assert abs(w * math.exp(w) - x) < 1e-10 * max(1, abs(x))
+
+    def test_domain(self):
+        with pytest.raises(ValueError):
+            la.lambert_w_minus1(0.1)
+        with pytest.raises(ValueError):
+            la.lambert_w_minus1(-1.0)
+
+
+class TestExpectedReturn:
+    def test_zero_before_two_tau(self):
+        nd = node()
+        assert la.expected_return(nd, 2 * nd.tau * 0.99, 1.0) == 0.0
+
+    def test_matches_montecarlo(self):
+        nd = node(mu=5.0, alpha=2.0, tau=0.1, p=0.1)
+        rng = np.random.default_rng(0)
+        t, load = 3.0, 4.0
+        samples = nd.sample(rng, load, size=200_000)
+        mc = load * np.mean(samples <= t)
+        an = la.expected_return(nd, t, load)
+        assert abs(mc - an) < 0.02 * load
+
+    def test_piecewise_concave_boundaries(self):
+        """E[R] is increasing-then-decreasing within each concavity piece."""
+        nd = node()
+        t = 10.0
+        ls = np.linspace(0.01, nd.mu * (t - 2 * nd.tau), 400)
+        vals = [la.expected_return(nd, t, l) for l in ls]
+        assert max(vals) > 0
+
+    def test_awgn_closed_form_matches_numeric(self):
+        nd = NodeDelayParams(mu=5.0, alpha=2.0, tau=0.1, p=0.0)
+        for t in [0.5, 1.0, 3.0, 10.0]:
+            l_c = la.awgn_optimal_load(nd, t, cap=30.0)
+            l_n, r_n = la.optimal_load(nd, t, cap=30.0)
+            r_c = la.awgn_optimal_return(nd, t, cap=30.0)
+            assert abs(l_c - l_n) < 1e-3 * max(1.0, l_c)
+            assert abs(r_c - r_n) < 1e-3 * max(1.0, r_c)
+
+
+class TestOptimalLoad:
+    def test_respects_cap(self):
+        nd = node(p=0.1, tau=0.05, mu=10.0, alpha=2.0)
+        l, r = la.optimal_load(nd, t=100.0, cap=7.0)
+        assert l <= 7.0 + 1e-9
+        assert r <= 7.0 + 1e-9
+
+    def test_monotone_in_t(self):
+        """Optimized expected return is monotone increasing in t (App. C)."""
+        nd = node(p=0.3, tau=0.2, mu=3.0, alpha=2.0)
+        rets = [la.optimal_load(nd, t, cap=50.0)[1]
+                for t in np.linspace(0.5, 20, 30)]
+        diffs = np.diff(rets)
+        assert np.all(diffs >= -1e-6)
+
+
+class TestTwoStep:
+    def test_total_return_equals_m(self):
+        rng = np.random.default_rng(1)
+        clients = [NodeDelayParams(mu=rng.uniform(1, 10), alpha=2.0,
+                                   tau=rng.uniform(0.01, 0.3), p=0.1)
+                   for _ in range(8)]
+        caps = [40.0] * 8
+        m = 8 * 40.0
+        alloc = la.two_step_allocate(clients, caps, server=None,
+                                     u_max=0.2 * m, m=m)
+        assert abs(alloc.total_return - m) < 1e-2 * m
+        assert np.all(alloc.loads <= 40.0 + 1e-9)
+        assert alloc.t_star > 0
+
+    def test_more_redundancy_smaller_deadline(self):
+        """Paper Fig 4a: larger delta (u_max) => smaller t*."""
+        rng = np.random.default_rng(2)
+        clients = [NodeDelayParams(mu=rng.uniform(1, 10), alpha=2.0,
+                                   tau=rng.uniform(0.01, 0.3), p=0.1)
+                   for _ in range(8)]
+        caps = [40.0] * 8
+        m = 8 * 40.0
+        t1 = la.two_step_allocate(clients, caps, None, 0.1 * m, m).t_star
+        t2 = la.two_step_allocate(clients, caps, None, 0.3 * m, m).t_star
+        assert t2 < t1
+
+    def test_with_server_node(self):
+        clients = [NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=0.1)
+                   for _ in range(4)]
+        server = NodeDelayParams(mu=500.0, alpha=20.0, tau=0.001, p=0.01)
+        m = 4 * 20.0
+        alloc = la.two_step_allocate(clients, [20.0] * 4, server,
+                                     u_max=0.5 * m, m=m)
+        assert abs(alloc.total_return - m) < 1e-2 * m
+        assert alloc.coded_return > 0
+
+    def test_infeasible_raises(self):
+        clients = [NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=0.1)]
+        with pytest.raises(ValueError):
+            la.two_step_allocate(clients, [10.0], None, u_max=1.0, m=100.0)

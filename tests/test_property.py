@@ -1,0 +1,84 @@
+"""Hypothesis property-based tests on system invariants."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import load_allocation as la
+from repro.core.delay_model import NodeDelayParams
+from repro.core import encoding
+
+node_st = st.builds(
+    NodeDelayParams,
+    mu=st.floats(0.5, 50.0),
+    alpha=st.floats(0.2, 30.0),
+    tau=st.floats(0.01, 2.0),
+    p=st.floats(0.0, 0.95),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(node_st, st.floats(0.1, 50.0), st.floats(0.0, 100.0))
+def test_expected_return_bounded_by_load(nd, t, load):
+    """0 <= E[R_j(t; l)] <= l for any node/deadline/load."""
+    r = la.expected_return(nd, t, load)
+    assert -1e-9 <= r <= load + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(node_st, st.floats(0.5, 30.0), st.floats(1.0, 60.0))
+def test_optimal_load_beats_endpoints(nd, t, cap):
+    """The optimizer returns at least the better of the endpoint loads."""
+    l, r = la.optimal_load(nd, t, cap)
+    assert 0.0 <= l <= cap + 1e-9
+    for probe in (cap, cap / 2, cap / 7):
+        assert r >= la.expected_return(nd, t, probe) - 1e-6 * max(r, 1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(node_st, st.floats(1.0, 60.0),
+       st.floats(0.5, 10.0), st.floats(1.05, 3.0))
+def test_optimized_return_monotone_in_t(nd, cap, t, factor):
+    """Appendix C: optimized return never decreases as t grows."""
+    r1 = la.optimal_load(nd, t, cap)[1]
+    r2 = la.optimal_load(nd, t * factor, cap)[1]
+    assert r2 >= r1 - 1e-6 * max(r1, 1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(node_st, st.floats(0.2, 40.0), st.floats(0.1, 40.0))
+def test_cdf_is_cdf(nd, t, load):
+    c = nd.cdf(t, load)
+    assert -1e-12 <= c <= 1.0
+    assert nd.cdf(t * 2, load) >= c - 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(5, 25),
+       st.floats(0.05, 0.4), st.integers(0, 10_000))
+def test_two_step_meets_target_return(n, cap, delta, seed):
+    rng = np.random.default_rng(seed)
+    clients = [NodeDelayParams(mu=float(rng.uniform(1, 10)), alpha=2.0,
+                               tau=float(rng.uniform(0.01, 0.5)),
+                               p=float(rng.uniform(0, 0.5)))
+               for _ in range(n)]
+    m = float(n * cap)
+    alloc = la.two_step_allocate(clients, [float(cap)] * n, None,
+                                 u_max=delta * m, m=m)
+    assert abs(alloc.total_return - m) <= 1e-2 * m
+    assert np.all(alloc.loads >= -1e-12)
+    assert np.all(alloc.loads <= cap + 1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 30), st.floats(0.0, 1.0))
+def test_weight_vector_invariants(l, p_ret):
+    idx = np.arange(0, l, 2)
+    w = encoding.weight_vector(l, idx, p_ret)
+    assert w.shape == (l,)
+    assert np.all((0.0 <= w) & (w <= 1.0))
+    # processed points carry sqrt(1-p), unprocessed carry exactly 1
+    mask = np.zeros(l, bool)
+    mask[idx] = True
+    assert np.allclose(w[mask], math.sqrt(1.0 - p_ret))
+    assert np.allclose(w[~mask], 1.0)

@@ -1,0 +1,68 @@
+"""RFF embedding (§III-A) and privacy budget (Appendix F)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import RFFConfig
+from repro.core import privacy, rff
+
+
+def test_rff_kernel_approximation():
+    """phi(v1) phi(v2)^T ~= exp(-||v1-v2||^2 / 2 sigma^2)  (paper eq. 8/17)."""
+    rng = np.random.default_rng(0)
+    d, q, sigma = 20, 8192, 2.0
+    cfg = RFFConfig(q=q, sigma=sigma, seed=3)
+    omega, delta = rff.rff_params(cfg, d)
+    v = jnp.asarray(rng.normal(size=(30, d)), jnp.float32)
+    phi = rff.rff_transform(v, omega, delta)
+    approx = np.asarray(phi @ phi.T)
+    d2 = np.sum((np.asarray(v)[:, None] - np.asarray(v)[None]) ** 2, -1)
+    exact = np.exp(-d2 / (2 * sigma ** 2))
+    assert np.max(np.abs(approx - exact)) < 0.06
+
+
+def test_rff_shared_seed_determinism():
+    cfg = RFFConfig(q=64, sigma=1.0, seed=11)
+    o1, d1 = rff.rff_params(cfg, 10)
+    o2, d2 = rff.rff_params(cfg, 10)
+    assert jnp.array_equal(o1, o2) and jnp.array_equal(d1, d2)
+
+
+def test_rff_feature_norm():
+    """Rows of phi(X) have norm ~<= 1 (sum of q cos^2 * 2/q <= 2... mean 1)."""
+    cfg = RFFConfig(q=2048, sigma=1.0)
+    omega, delta = rff.rff_params(cfg, 8)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(50, 8)), jnp.float32)
+    phi = rff.rff_transform(x, omega, delta)
+    norms = np.linalg.norm(np.asarray(phi), axis=1)
+    assert np.all(norms < 1.5) and abs(norms.mean() - 1.0) < 0.1
+
+
+def test_median_sigma_positive():
+    x = np.random.default_rng(0).normal(size=(100, 5))
+    assert rff.median_sigma(x) > 0
+
+
+def test_privacy_budget_monotone_in_u():
+    """eps grows with coding redundancy u (eq. 62)."""
+    x = np.random.default_rng(0).normal(size=(50, 10))
+    e1 = privacy.mi_dp_budget(x, u=10)
+    e2 = privacy.mi_dp_budget(x, u=1000)
+    assert 0 < e1 < e2
+
+
+def test_privacy_concentrated_feature_leaks_more():
+    rng = np.random.default_rng(1)
+    spread = rng.normal(size=(50, 10))
+    concentrated = spread.copy()
+    concentrated[:, 0] = 0.0
+    concentrated[0, 0] = 5.0         # all mass of feature 0 on one point
+    assert privacy.mi_dp_budget(concentrated, 100) > \
+        privacy.mi_dp_budget(spread, 100)
+
+
+def test_feature_spread_formula():
+    x = np.array([[1.0, 2.0], [2.0, 0.5], [0.5, 1.0]])
+    col_sq = (x ** 2).sum(0)
+    col_max = (x ** 2).max(0)
+    expect = np.sqrt(np.min(col_sq - col_max))
+    assert abs(privacy.feature_spread(x) - expect) < 1e-12

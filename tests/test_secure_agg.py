@@ -1,0 +1,48 @@
+"""Secure aggregation of parity sets (paper §VI future-work extension)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoding, secure_agg
+
+
+def _parities(n=4, u=8, q=16, c=3, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    key = jax.random.PRNGKey(seed)
+    for j in range(n):
+        x = jnp.asarray(rng.normal(size=(u, q)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(u, c)), jnp.float32)
+        out.append(encoding.LocalParity(x=x, y=y))
+    return out
+
+
+def test_masks_cancel_exactly():
+    parities = _parities()
+    key = jax.random.PRNGKey(42)
+    masked = [secure_agg.mask_parity(key, j, len(parities), p, scale=5.0)
+              for j, p in enumerate(parities)]
+    got = secure_agg.secure_aggregate(masked)
+    want = encoding.aggregate_parity(parities)
+    np.testing.assert_allclose(np.asarray(got.x), np.asarray(want.x),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got.y), np.asarray(want.y),
+                               atol=1e-4)
+
+
+def test_individual_upload_is_masked():
+    parities = _parities()
+    key = jax.random.PRNGKey(43)
+    masked = secure_agg.mask_parity(key, 0, len(parities), parities[0],
+                                    scale=10.0)
+    # the upload must differ substantially from the raw parity set
+    diff = float(jnp.mean(jnp.abs(masked.x - parities[0].x)))
+    assert diff > 1.0
+
+
+def test_masks_are_pairwise_consistent():
+    key = jax.random.PRNGKey(44)
+    k01 = secure_agg._pair_key(key, 0, 1)
+    k10 = secure_agg._pair_key(key, 1, 0)
+    assert jnp.array_equal(jax.random.key_data(k01),
+                           jax.random.key_data(k10))

@@ -1,0 +1,108 @@
+"""Sharding policy consistency: every param/cache leaf gets a valid spec."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.model_zoo import build
+from repro.sharding import policy as sh
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_cover_tree_and_divide(arch):
+    cfg = get_config(arch)
+    model = build(cfg)
+    abs_params = model.abstract_params()
+    specs = sh.param_pspecs(abs_params, "fsdp_tp")
+    leaves = jax.tree_util.tree_leaves_with_path(abs_params)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for (path, leaf), spec in zip(leaves, spec_leaves):
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([sh.AXIS_SIZE[a] for a in axes]))
+            assert dim % n == 0, (path, spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "deepseek-v2-lite-16b",
+                                  "jamba-1.5-large-398b", "whisper-base",
+                                  "rwkv6-1.6b"])
+@pytest.mark.parametrize("long_ctx", [False, True])
+def test_cache_specs_divide(arch, long_ctx):
+    cfg = get_config(arch)
+    model = build(cfg)
+    batch = 1 if long_ctx else 128
+    seq = 524288 if long_ctx else 32768
+    cache = model.abstract_cache(batch, seq, 0)
+    specs = sh.cache_pspecs(cache, long_ctx, False)
+    leaves = jax.tree_util.tree_leaves_with_path(cache)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(leaves, spec_leaves):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([sh.AXIS_SIZE[a] for a in axes]))
+            assert dim % n == 0, (path, spec, leaf.shape)
+
+
+def test_tp_only_removes_fsdp_axis():
+    cfg = get_config("yi-6b")
+    model = build(cfg)
+    abs_params = model.abstract_params()
+    specs = jax.tree_util.tree_leaves(
+        sh.param_pspecs(abs_params, "tp_only"),
+        is_leaf=lambda x: isinstance(x, P))
+    flat = [a for s in specs for a in s if a is not None]
+    assert all(a == "model" for a in flat)
+    assert len(flat) > 0
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-lite-16b",
+                                  "jamba-1.5-large-398b"])
+def test_expert_parallel_policy(arch):
+    """_ep suffix shards the expert dim over `model` (divisible archs)."""
+    cfg = get_config(arch)
+    model = build(cfg)
+    abs_params = model.abstract_params()
+    specs = sh.param_pspecs(abs_params, "fsdp_tp_ep")
+    found = []
+
+    def visit(path, leaf):
+        keys = [str(getattr(k, "key", k)) for k in path]
+        if "moe" in keys and keys[-1] in ("w1", "w2", "w3"):
+            found.append((keys[-1], leaf))
+    jax.tree_util.tree_map_with_path(
+        visit, specs, is_leaf=lambda x: isinstance(x, P))
+    assert found
+    for name, spec in found:
+        # stacked leading dim, then expert dim sharded over model
+        assert spec[1] == "model", (name, spec)
+    # mixtral (8 experts < 16) must fall back to TP-within-expert
+    mx = build(get_config("mixtral-8x7b")).abstract_params()
+    mx_specs = sh.param_pspecs(mx, "fsdp_tp_ep")
+    bad = []
+
+    def visit2(path, leaf):
+        keys = [str(getattr(k, "key", k)) for k in path]
+        if "moe" in keys and keys[-1] == "w1":
+            bad.append(leaf)
+    jax.tree_util.tree_map_with_path(
+        visit2, mx_specs, is_leaf=lambda x: isinstance(x, P))
+    assert all(s[1] != "model" for s in bad)
+
+
+def test_fsdp_tp_uses_both_axes():
+    cfg = get_config("qwen3-32b")
+    model = build(cfg)
+    specs = jax.tree_util.tree_leaves(
+        sh.param_pspecs(model.abstract_params(), "fsdp_tp"),
+        is_leaf=lambda x: isinstance(x, P))
+    flat = [a for s in specs for a in s if a is not None]
+    assert "model" in flat and "data" in flat

@@ -1,0 +1,90 @@
+"""Prefill -> decode state-cache continuity for recurrent/hybrid archs.
+
+For attention archs, continuity is covered by
+test_decode_matches_prefill_continuation; here the recurrent state handoff
+(RWKV wkv + token-shift, Mamba conv buffer + ssm state) is validated:
+prefilling N tokens and decoding token N+1 must match a full (N+1)-prefill's
+final-position logits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models.model_zoo import build
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "jamba-1.5-large-398b"])
+def test_recurrent_prefill_decode_continuity(arch):
+    cfg = smoke_variant(get_config(arch))
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(3))
+    N = 16
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (1, N + 1)), jnp.int32)
+
+    full_logits, _ = model.prefill(params, {"tokens": toks}, chunked=False)
+
+    l16, cache = model.prefill(params, {"tokens": toks[:, :N]}, chunked=False)
+    if arch != "rwkv6-1.6b":
+        # grow attention cache seq dim by one slot for the decoded token
+        def grow(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            if name == "pos":
+                return jnp.pad(leaf, [(0, 0)] * (leaf.ndim - 1) + [(0, 1)],
+                               constant_values=-1)
+            if name in ("k", "v") and leaf.ndim == 5 and leaf.shape[2] == N:
+                return jnp.pad(leaf, [(0, 0), (0, 0), (0, 1), (0, 0), (0, 0)])
+            return leaf
+        cache = jax.tree_util.tree_map_with_path(grow, cache)
+    dec_logits, _ = model.decode_step(params, cache, toks[:, N:N + 1],
+                                      jnp.int32(N))
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits),
+                               atol=5e-3, rtol=5e-2)
+
+
+def test_whisper_prefill_decode_continuity():
+    """Enc-dec: self-attn KV + cross-attn KV carried through decode."""
+    cfg = smoke_variant(get_config("whisper-base"))
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(5))
+    N = 12
+    frames = jnp.asarray(RNG.normal(size=(1, cfg.encoder_seq, cfg.d_model)),
+                         jnp.float32)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (1, N + 1)), jnp.int32)
+
+    full_logits, _ = model.prefill(params, {"frames": frames,
+                                            "tokens": toks})
+    _, cache = model.prefill(params, {"frames": frames,
+                                      "tokens": toks[:, :N]})
+
+    def grow(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "pos":
+            return jnp.pad(leaf, [(0, 0)] * (leaf.ndim - 1) + [(0, 1)],
+                           constant_values=-1)
+        if name in ("k", "v") and leaf.shape[2] == N:
+            return jnp.pad(leaf, [(0, 0), (0, 0), (0, 1), (0, 0), (0, 0)])
+        return leaf
+    cache = jax.tree_util.tree_map_with_path(grow, cache)
+    dec_logits, _ = model.decode_step(params, cache, toks[:, N:N + 1],
+                                      jnp.int32(N))
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits),
+                               atol=5e-3, rtol=5e-2)
+
+
+def test_rwkv_chunked_prefill_state_matches_naive():
+    cfg = smoke_variant(get_config("rwkv6-1.6b"))
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(4))
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 128)), jnp.int32)
+    _, c1 = model.prefill(params, {"tokens": toks}, chunked=True)
+    _, c2 = model.prefill(params, {"tokens": toks}, chunked=False)
+    for a, b in zip(jax.tree_util.tree_leaves(c1),
+                    jax.tree_util.tree_leaves(c2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-3)

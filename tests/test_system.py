@@ -1,0 +1,80 @@
+"""End-to-end behaviour tests of the CodedFedL system (paper §V claims)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig, RFFConfig, TrainConfig
+from repro.core import fed_runtime, rff
+from repro.core.delay_model import mec_network
+from repro.data import sharding, synthetic
+
+
+@pytest.fixture(scope="module")
+def setup():
+    fl = FLConfig(n_clients=12, delta=0.2, psi=0.2, seed=0)
+    ds = synthetic.synthetic_classification(m_train=1200, m_test=400, d=32,
+                                            seed=0)
+    rcfg = RFFConfig(q=128, sigma=2.0)
+    om, de = rff.rff_params(rcfg, 32)
+    xh_tr = np.asarray(rff.rff_transform(jnp.asarray(ds.x_train), om, de))
+    xh_te = np.asarray(rff.rff_transform(jnp.asarray(ds.x_test), om, de))
+    lr = rff.suggest_lr(xh_tr)
+    nodes = mec_network(fl, d_scalars_per_point=rcfg.q * ds.n_classes)
+    shards = sharding.sort_and_shard(xh_tr, ds.y_train, fl.n_clients)
+    per_client = sharding.assign_shards_by_speed(shards, nodes,
+                                                 minibatch=100)
+    xs = np.stack([c[0] for c in per_client])
+    ys = np.stack([ds.one_hot(c[1]) for c in per_client])
+    tcfg = TrainConfig(learning_rate=lr, lr_decay_epochs=(60, 90))
+
+    def eval_fn(theta):
+        th = np.asarray(theta)
+        acc = float(((xh_te @ th).argmax(1) == ds.y_test).mean())
+        return 0.0, acc
+
+    results = {}
+    for scheme in ("naive", "greedy", "coded"):
+        sim = fed_runtime.FederatedSimulation(xs, ys, fl, tcfg,
+                                              scheme=scheme)
+        results[scheme] = sim.run(120, eval_fn=eval_fn, eval_every=119)
+    return results
+
+
+def test_all_schemes_learn_something(setup):
+    for scheme, res in setup.items():
+        acc = res.history[-1].accuracy
+        assert acc > 0.3, (scheme, acc)
+
+
+def test_coded_matches_naive_per_iteration(setup):
+    """Paper Fig 4b/5b: coded ~= naive accuracy at equal iterations."""
+    a_naive = setup["naive"].history[-1].accuracy
+    a_coded = setup["coded"].history[-1].accuracy
+    assert a_coded >= a_naive - 0.05
+
+
+def test_greedy_degrades_under_noniid(setup):
+    """Paper §V-B: greedy misses whole classes => accuracy gap."""
+    assert setup["greedy"].history[-1].accuracy < \
+        setup["naive"].history[-1].accuracy - 0.03
+
+
+def test_coded_faster_wallclock(setup):
+    """Paper Tables II/III: coded wall-clock < naive at equal iterations."""
+    w_naive = setup["naive"].history[-1].wall_clock
+    w_coded = setup["coded"].history[-1].wall_clock
+    assert w_coded < w_naive
+
+
+def test_deadline_certainty(setup):
+    """Coded rounds always take exactly t* (plus one-time setup)."""
+    res = setup["coded"]
+    t = res.t_star
+    times = np.diff([h.wall_clock for h in res.history])
+    assert np.allclose(times, t, rtol=1e-6)
+
+
+def test_loads_bounded(setup):
+    res = setup["coded"]
+    assert np.all(res.loads >= 0)
+    assert np.all(res.loads <= 100)
