@@ -19,6 +19,28 @@ import jax.numpy as jnp
 from repro.kernels import ops
 
 
+def batched_client_gradients(x_stack, y_stack, theta, *,
+                             use_pallas: bool = False):
+    """All-client unnormalized gradients in one call.
+
+    x_stack: (n, l, q), y_stack: (n, l, c), theta: (q, c) -> (n, q, c).
+    Rows padded with zeros contribute exactly zero (x_k = 0 makes the
+    per-point gradient x_k (x_k theta - y_k)^T vanish), so callers may pass
+    dense mask-padded subsets.
+    """
+    return ops.linreg_grad_batched(x_stack, theta, y_stack,
+                                   use_pallas=use_pallas)
+
+
+def masked_gradient_sum(client_grads, returned_mask):
+    """sum_j 1{T_j<=t*} g_j over a dense (n, q, c) gradient stack.
+
+    returned_mask: (n,) bool/float — fused multiply-add, no Python loop.
+    """
+    mask = jnp.asarray(returned_mask, client_grads.dtype)[:, None, None]
+    return jnp.sum(client_grads * mask, axis=0)
+
+
 def client_gradient(x, y, theta, *, use_pallas: bool = False):
     """Unnormalized partial gradient X^T (X theta - Y) over processed points."""
     return ops.linreg_grad(x, theta, y, use_pallas=use_pallas)

@@ -36,6 +36,20 @@ class NodeDelayParams:
     tau_up: float | None = None   # uplink; None -> reciprocal (= tau)
     p_up: float | None = None
 
+    def __post_init__(self):
+        for name, p in (("p", self.p), ("p_up", self.p_up)):
+            if p is not None and not (0.0 <= p < 1.0):
+                raise ValueError(
+                    f"erasure probability {name}={p} must lie in [0, 1): "
+                    "p == 1 means the link never delivers a packet, so every "
+                    "delay (and the parity upload time) is infinite")
+        if self.mu <= 0.0 or self.alpha <= 0.0 or self.tau <= 0.0:
+            raise ValueError(
+                f"mu={self.mu}, alpha={self.alpha}, tau={self.tau} "
+                "must all be positive")
+        if self.tau_up is not None and self.tau_up <= 0.0:
+            raise ValueError(f"tau_up={self.tau_up} must be positive")
+
     @property
     def _tau_up(self) -> float:
         return self.tau if self.tau_up is None else self.tau_up
@@ -133,6 +147,52 @@ class NodeDelayParams:
         t_det = load / self.mu
         t_stoch = rng.exponential(load / (self.alpha * self.mu), size=size)
         return t_det + t_stoch + t_comm
+
+
+def stack_node_params(nodes: "list[NodeDelayParams]") -> dict[str, np.ndarray]:
+    """Stack per-node delay parameters into dense arrays.
+
+    Returns {"mu", "alpha", "tau_down", "tau_up", "p_down", "p_up"}, each of
+    shape (n,).  Reciprocal links (tau_up/p_up unset) are resolved to their
+    downlink values, so consumers never branch on None.
+    """
+    return {
+        "mu": np.array([nd.mu for nd in nodes], np.float64),
+        "alpha": np.array([nd.alpha for nd in nodes], np.float64),
+        "tau_down": np.array([nd.tau for nd in nodes], np.float64),
+        "tau_up": np.array([nd._tau_up for nd in nodes], np.float64),
+        "p_down": np.array([nd.p for nd in nodes], np.float64),
+        "p_up": np.array([nd._p_up for nd in nodes], np.float64),
+    }
+
+
+def sample_round_times(nodes: "list[NodeDelayParams]", loads,
+                       rng: np.random.Generator, rounds: int = 1) -> np.ndarray:
+    """Vectorized delay sampling: all nodes x all rounds in 3 RNG draws.
+
+    Replaces `rounds * n` Python-level `NodeDelayParams.sample` calls with one
+    vectorized geometric draw per link direction plus one exponential draw —
+    the sampling API the batched `FederatedSimulation` engine pre-computes an
+    entire training run's delays with.
+
+    loads: (n,) per-node per-round loads (data points).  Nodes with load <= 0
+    incur communication delay only, matching `NodeDelayParams.sample`.
+    Returns float64 delays of shape (rounds, n).
+    """
+    prm = stack_node_params(nodes)
+    loads = np.asarray(loads, np.float64)
+    n = len(nodes)
+    if loads.shape != (n,):
+        raise ValueError(f"loads shape {loads.shape} != ({n},)")
+    n_down = rng.geometric(1.0 - prm["p_down"], size=(rounds, n))
+    n_up = rng.geometric(1.0 - prm["p_up"], size=(rounds, n))
+    t = prm["tau_down"] * n_down + prm["tau_up"] * n_up
+    active = loads > 0.0
+    # exponential compute tail with per-node scale l/(alpha*mu); a single
+    # unit-rate draw is rescaled so inactive nodes cost no extra RNG state
+    scale = np.where(active, loads / (prm["alpha"] * prm["mu"]), 0.0)
+    t_stoch = rng.exponential(1.0, size=(rounds, n)) * scale
+    return t + np.where(active, loads / prm["mu"], 0.0) + t_stoch
 
 
 def mec_network(fl_cfg, d_scalars_per_point: int) -> list[NodeDelayParams]:

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
 
 def generator_matrix(key, u: int, l: int, kind: str = "normal"):
@@ -57,6 +57,40 @@ def encode_local(key, x_hat, y, w, u: int, *, kind: str = "normal",
     px = ops.parity_encode(g, w, x_hat, use_pallas=use_pallas)
     py = ops.parity_encode(g, w, y, use_pallas=use_pallas)
     return LocalParity(x=px, y=py)
+
+
+def encode_local_batched(keys, x_stack, y_stack, w_stack, u: int, *,
+                         kind: str = "normal",
+                         use_pallas: bool = False) -> LocalParity:
+    """All-clients parity encode in one vmapped call.
+
+    keys: (n,) stacked PRNG keys (one per client, identical to what a
+    sequential `jax.random.split` chain would hand each client, so the
+    parity sets match `encode_local` exactly);
+    x_stack: (n, l, q); y_stack: (n, l, c); w_stack: (n, l).
+    Returns stacked LocalParity with x: (n, u, q), y: (n, u, c).
+    """
+    if use_pallas:
+        # Pallas kernels carry their own padding logic; keep the per-client
+        # loop on that path rather than vmapping through pallas_call.
+        parities = [encode_local(keys[j], x_stack[j], y_stack[j],
+                                 w_stack[j], u, kind=kind, use_pallas=True)
+                    for j in range(x_stack.shape[0])]
+        return LocalParity(x=jnp.stack([p.x for p in parities]),
+                           y=jnp.stack([p.y for p in parities]))
+
+    def one(key, x, y, w):
+        g = generator_matrix(key, u, x.shape[0], kind)
+        return ref.parity_encode(g, w, x), ref.parity_encode(g, w, y)
+
+    px, py = jax.vmap(one)(keys, jnp.asarray(x_stack), jnp.asarray(y_stack),
+                           jnp.asarray(w_stack))
+    return LocalParity(x=px, y=py)
+
+
+def aggregate_parity_stacked(parity: LocalParity) -> LocalParity:
+    """Global parity set from a stacked (n, u, ·) LocalParity (eq. 20)."""
+    return LocalParity(x=jnp.sum(parity.x, axis=0), y=jnp.sum(parity.y, axis=0))
 
 
 def aggregate_parity(parities: list[LocalParity]) -> LocalParity:

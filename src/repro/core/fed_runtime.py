@@ -10,6 +10,33 @@ Schemes (paper §V "Schemes"):
   greedy — server waits for the fastest (1-psi)*n clients.
   coded  — CodedFedL: clients process l*_j points, server adds the coded
            gradient over the global parity set, round time = t*.
+
+Engines
+-------
+``FederatedSimulation(..., engine="batched")`` (the default) runs the whole
+training loop as one compiled program:
+
+  * per-client processed subsets are padded to a dense ``(n, l_max, q)``
+    tensor with a validity mask (zero rows contribute exactly zero to the
+    linear-regression gradient), so all n client gradients come from a
+    single vmapped call;
+  * the coded-gradient contribution is fused into the same update;
+  * round delays for the *entire run* are pre-sampled with the vectorized
+    ``delay_model.sample_round_times`` API (3 RNG draws total instead of
+    ``iterations * n`` Python-level calls);
+  * the per-round update runs under ``jax.lax.scan`` inside one ``jax.jit``.
+
+``engine="legacy"`` keeps the original per-client Python loop and serves as
+the numerical-equivalence oracle: both engines consume the same pre-sampled
+delay matrix, so with equal seeds they produce the same ``theta`` trajectory
+to fp32 tolerance (see tests/test_batched_engine.py).
+
+Multi-realization mode
+----------------------
+``run_multi(iterations, n_realizations)`` vmaps the compiled scan over a
+stack of independent delay realizations (same deployment, fresh network
+draws), producing the Fig. 4/5 wall-clock curves *with confidence bands* in
+one compiled call — ``MultiFedResult.wall_clock`` is ``(R, iterations)``.
 """
 from __future__ import annotations
 
@@ -23,7 +50,14 @@ import numpy as np
 
 from repro.config import FLConfig, RFFConfig, TrainConfig
 from repro.core import aggregation, encoding, load_allocation
-from repro.core.delay_model import NodeDelayParams, mec_network, packet_bits, scale_tau
+from repro.core.delay_model import (NodeDelayParams, mec_network, packet_bits,
+                                    sample_round_times, scale_tau)
+
+
+# jitted once at module level so the legacy oracle keeps the same compiled
+# gradient path the pre-batched runtime had (the batched engine compiles its
+# whole scan instead)
+_batched_client_grads_jit = jax.jit(aggregation.batched_client_gradients)
 
 
 @dataclasses.dataclass
@@ -44,17 +78,25 @@ class FedResult:
     setup_time: float = 0.0    # parity upload overhead (coded only)
 
 
-def _batched_client_grads(x_stack, y_stack, theta):
-    """Per-client unnormalized gradients, vmapped over the client axis.
+@dataclasses.dataclass
+class MultiFedResult:
+    """One deployment, R independent delay realizations (vmapped scan).
 
-    x_stack: (n, l, q), y_stack: (n, l, c), theta: (q, c) -> (n, q, c)
+    theta: (R, q, c) final iterates; wall_clock / returned: (R, iterations)
+    cumulative simulated seconds (incl. setup) and per-round return counts.
     """
-    def one(x, y):
-        return x.T @ (x @ theta - y)
-    return jax.vmap(one)(x_stack, y_stack)
+    theta: jnp.ndarray
+    wall_clock: np.ndarray
+    returned: np.ndarray
+    t_star: float | None = None
+    loads: np.ndarray | None = None
+    setup_time: float = 0.0
+    accuracy: np.ndarray | None = None   # (R,) if an eval_fn was supplied
 
-
-_batched_client_grads_jit = jax.jit(_batched_client_grads)
+    def wall_clock_bands(self) -> tuple[np.ndarray, np.ndarray]:
+        """(mean, std) over realizations, each (iterations,) — the Fig. 4/5
+        curve with its confidence band."""
+        return (self.wall_clock.mean(axis=0), self.wall_clock.std(axis=0))
 
 
 class FederatedSimulation:
@@ -62,14 +104,19 @@ class FederatedSimulation:
 
     Clients hold equally sized local minibatches of RFF-transformed data
     (x_stack: (n, l, q), y_stack: (n, l, c)); the delay network follows
-    paper §V-A.
+    paper §V-A.  ``engine`` selects the compiled batched scan loop
+    ("batched", default) or the per-client Python oracle ("legacy").
     """
 
     def __init__(self, x_stack, y_stack, fl_cfg: FLConfig,
                  train_cfg: TrainConfig, *, scheme: Optional[str] = None,
                  steps_per_epoch: int = 1, nodes: Optional[list] = None,
                  rng: Optional[np.random.Generator] = None,
-                 secure_aggregation: bool = False):
+                 secure_aggregation: bool = False,
+                 engine: str = "batched"):
+        if engine not in ("batched", "legacy"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.engine = engine
         self.secure_aggregation = secure_aggregation
         self.scheme = scheme or fl_cfg.scheme
         self.fl = fl_cfg
@@ -92,6 +139,7 @@ class FederatedSimulation:
         self.parity = None
         self.setup_time = 0.0
         self.processed_idx = [np.arange(self.l) for _ in range(self.n)]
+        self._scan_cache: dict = {}
         if self.scheme == "coded":
             self._setup_coded()
 
@@ -110,43 +158,71 @@ class FederatedSimulation:
         self.p_return = np.array([
             nd.cdf(self.t_star, float(ld)) if ld > 0 else 0.0
             for nd, ld in zip(self.nodes, self.loads)])
-        # sample the processed subsets + weight matrices, build parity sets
+        # sample the processed subsets + weight matrices; the subkey chain
+        # reproduces what a sequential per-client split would hand out, so
+        # the batched encode below is bit-identical to the per-client one
         key = jax.random.PRNGKey(self.fl.seed + 99)
-        parities = []
+        subkeys = []
         self.processed_idx = []
+        w_stack = np.empty((self.n, self.l), np.float32)
         for j in range(self.n):
             idx = self.rng.permutation(self.l)[: self.loads[j]]
             self.processed_idx.append(np.sort(idx))
-            w = encoding.weight_vector(self.l, idx, float(self.p_return[j]))
+            w_stack[j] = encoding.weight_vector(
+                self.l, idx, float(self.p_return[j]))
             key, sub = jax.random.split(key)
-            parities.append(encoding.encode_local(
-                sub, self.x[j], self.y[j], w, self.u))
+            subkeys.append(sub)
+        keys = jnp.stack(subkeys)
+        # all n local parity sets in one vmapped encode (paper eq. 19)
+        stacked = encoding.encode_local_batched(
+            keys, self.x, self.y, w_stack, self.u)
         if self.secure_aggregation:
             # paper §VI future work: the server only ever sees masked
             # uploads; pairwise masks cancel in the sum (core/secure_agg.py)
             from repro.core import secure_agg
             skey = jax.random.PRNGKey(self.fl.seed + 1234)
-            masked = [secure_agg.mask_parity(skey, j, self.n, p)
-                      for j, p in enumerate(parities)]
+            masked = [secure_agg.mask_parity(
+                skey, j, self.n,
+                encoding.LocalParity(x=stacked.x[j], y=stacked.y[j]))
+                for j in range(self.n)]
             self.parity = secure_agg.secure_aggregate(masked)
         else:
-            self.parity = encoding.aggregate_parity(parities)
+            self.parity = encoding.aggregate_parity_stacked(stacked)
         # one-time parity upload overhead: clients upload u*(q+c) scalars in
         # parallel; expected transmissions 1/(1-p) (paper Fig 4a inset).
+        # NodeDelayParams validates p < 1 at construction, so the expected
+        # transmission count is finite here by contract.
         bits = packet_bits(fl, self.u * (self.q + self.c))
         self.setup_time = max(
             nd.tau / packet_bits(fl, self.q * self.c) * bits / (1.0 - nd.p)
             for nd in self.nodes)
-        # per-round client tensors restricted to processed subsets (ragged ->
-        # keep full and mask in gradient: we gather the subset once here)
-        self._sub_x = [self.x[j][self.processed_idx[j]] for j in range(self.n)]
-        self._sub_y = [self.y[j][self.processed_idx[j]] for j in range(self.n)]
+        # ragged per-client subsets: only the legacy oracle reads them
+        if self.engine == "legacy":
+            self._sub_x = [self.x[j][self.processed_idx[j]]
+                           for j in range(self.n)]
+            self._sub_y = [self.y[j][self.processed_idx[j]]
+                           for j in range(self.n)]
+        # dense mask-padded (n, l_max, ·) view: batched run() and run_multi
+        # (which compiles the batched step regardless of engine)
+        l_max = max(1, int(self.loads.max()))
+        pad_idx = np.zeros((self.n, l_max), np.int32)
+        pad_mask = np.zeros((self.n, l_max), np.float32)
+        for j in range(self.n):
+            k = int(self.loads[j])
+            pad_idx[j, :k] = self.processed_idx[j]
+            pad_mask[j, :k] = 1.0
+        rows = jnp.asarray(pad_idx)
+        mask = jnp.asarray(pad_mask)[:, :, None]
+        gather = jax.vmap(lambda xj, ij: xj[ij])
+        self._sub_x_pad = gather(self.x, rows) * mask
+        self._sub_y_pad = gather(self.y, rows) * mask
+        self._grad_active = jnp.asarray(self.loads > 0)
 
     # ------------------------------------------------------------------ round
-    def _sample_round_times(self) -> np.ndarray:
-        return np.array([
-            nd.sample(self.rng, float(ld), size=1)[0]
-            for nd, ld in zip(self.nodes, self.loads)])
+    def _sample_round_times(self, rounds: int = 1) -> np.ndarray:
+        """(rounds, n) delay samples — one vectorized draw for the whole run."""
+        return sample_round_times(self.nodes, np.asarray(self.loads, float),
+                                  self.rng, rounds)
 
     def _lr(self, epoch: int) -> float:
         lr = self.train.learning_rate
@@ -155,16 +231,110 @@ class FederatedSimulation:
                 lr *= self.train.lr_decay
         return lr
 
-    def run(self, iterations: int,
-            eval_fn: Optional[Callable[[jnp.ndarray], tuple[float, float]]] = None,
-            eval_every: int = 10) -> FedResult:
+    def _lr_schedule(self, iterations: int) -> np.ndarray:
+        return np.array([self._lr(it // self.steps_per_epoch)
+                         for it in range(iterations)], np.float32)
+
+    # --------------------------------------------------------- batched engine
+    def _make_step(self, collect_theta: bool):
+        """One scan step: (theta, (t_row, lr)) -> (theta', per-round outputs).
+
+        Scheme dispatch is static (Python-level), so each scheme compiles to
+        a straight-line fused update.
+        """
+        scheme = self.scheme
+        n_wait = max(1, int(math.ceil((1.0 - self.fl.psi) * self.n)))
+        l2 = self.train.l2_reg
+        m = float(self.m)
+        l = float(self.l)
+        x, y = self.x, self.y
+        if scheme == "coded":
+            sub_x, sub_y = self._sub_x_pad, self._sub_y_pad
+            par_x, par_y = self.parity.x, self.parity.y
+            active = self._grad_active
+            t_star = jnp.float32(self.t_star)
+
+        def step(theta, inp):
+            t_row, lr = inp
+            if scheme == "naive":
+                n_ret = jnp.int32(t_row.shape[0])
+                t_round = jnp.max(t_row)
+                g_all = aggregation.batched_client_gradients(x, y, theta)
+                g_sum = jnp.sum(g_all, axis=0)
+                denom = m
+            elif scheme == "greedy":
+                t_round = jnp.sort(t_row)[n_wait - 1]
+                ret = t_row <= t_round
+                n_ret = jnp.sum(ret).astype(jnp.int32)
+                g_all = aggregation.batched_client_gradients(x, y, theta)
+                g_sum = aggregation.masked_gradient_sum(g_all, ret)
+                denom = n_ret.astype(jnp.float32) * l
+            elif scheme == "coded":
+                ret = t_row <= t_star
+                n_ret = jnp.sum(ret).astype(jnp.int32)
+                t_round = t_star
+                g_all = aggregation.batched_client_gradients(sub_x, sub_y,
+                                                             theta)
+                g_sum = aggregation.masked_gradient_sum(g_all, ret & active)
+                g_sum = g_sum + aggregation.coded_gradient(
+                    par_x, par_y, theta, pnr_c=0.0)
+                denom = m
+            else:
+                raise ValueError(scheme)
+            theta_new = theta - lr * (g_sum / denom + l2 * theta)
+            out = (t_round, n_ret)
+            if collect_theta:
+                out = out + (theta_new,)
+            return theta_new, out
+
+        return step
+
+    def _get_scan(self, collect_theta: bool):
+        """jit'd `lax.scan` over rounds, cached per (scheme, collect)."""
+        cache_key = (self.scheme, collect_theta)
+        fn = self._scan_cache.get(cache_key)
+        if fn is None:
+            step = self._make_step(collect_theta)
+            fn = jax.jit(lambda theta0, times, lrs:
+                         jax.lax.scan(step, theta0, (times, lrs)))
+            self._scan_cache[cache_key] = fn
+        return fn
+
+    def _run_batched(self, iterations: int, times: np.ndarray,
+                     lrs: np.ndarray, eval_fn, eval_every: int) -> FedResult:
+        collect = eval_fn is not None
+        scan_fn = self._get_scan(collect)
+        theta0 = jnp.zeros((self.q, self.c), jnp.float32)
+        outs = scan_fn(theta0, jnp.asarray(times, jnp.float32),
+                       jnp.asarray(lrs, jnp.float32))
+        theta, per_round = outs
+        t_rounds = np.asarray(per_round[0], np.float64)
+        n_ret = np.asarray(per_round[1])
+        thetas = per_round[2] if collect else None
+        wall = self.setup_time + np.cumsum(t_rounds)
+        history: list[RoundLog] = []
+        for it in range(iterations):
+            if collect and (it % eval_every == 0 or it == iterations - 1):
+                loss, acc = eval_fn(thetas[it])
+            else:
+                loss, acc = float("nan"), float("nan")
+            history.append(RoundLog(it, float(wall[it]), int(n_ret[it]),
+                                    loss, acc))
+        return FedResult(theta=theta, history=history, t_star=self.t_star,
+                         loads=self.loads, setup_time=self.setup_time)
+
+    # ---------------------------------------------------------- legacy engine
+    def _run_legacy(self, iterations: int, times_all: np.ndarray,
+                    lrs: np.ndarray, eval_fn, eval_every: int) -> FedResult:
+        """Original per-client Python loop — the numerical oracle the batched
+        engine is tested against (same pre-sampled delays, same trajectory)."""
         theta = jnp.zeros((self.q, self.c), jnp.float32)
         wall = self.setup_time
         history: list[RoundLog] = []
         n_wait = max(1, int(math.ceil((1.0 - self.fl.psi) * self.n)))
 
         for it in range(iterations):
-            times = self._sample_round_times()
+            times = times_all[it]
             if self.scheme == "naive":
                 returned = np.ones(self.n, dtype=bool)
                 t_round = float(np.max(times))
@@ -197,12 +367,10 @@ class FederatedSimulation:
                 g_m = total / denom + self.train.l2_reg * theta
             else:
                 g_all = _batched_client_grads_jit(self.x, self.y, theta)
-                mask = jnp.asarray(returned, jnp.float32)[:, None, None]
-                g_m = jnp.sum(g_all * mask, axis=0) / denom \
+                g_m = aggregation.masked_gradient_sum(g_all, returned) / denom \
                     + self.train.l2_reg * theta
 
-            epoch = it // self.steps_per_epoch
-            theta = theta - self._lr(epoch) * g_m
+            theta = theta - float(lrs[it]) * g_m
             wall += t_round
 
             if eval_fn is not None and (it % eval_every == 0 or it == iterations - 1):
@@ -213,3 +381,59 @@ class FederatedSimulation:
 
         return FedResult(theta=theta, history=history, t_star=self.t_star,
                          loads=self.loads, setup_time=self.setup_time)
+
+    # ------------------------------------------------------------------- runs
+    def run(self, iterations: int,
+            eval_fn: Optional[Callable[[jnp.ndarray], tuple[float, float]]] = None,
+            eval_every: int = 10) -> FedResult:
+        """Run `iterations` rounds; delays for the whole run are pre-sampled
+        once, so both engines consume the identical delay matrix."""
+        times = self._sample_round_times(iterations)
+        lrs = self._lr_schedule(iterations)
+        if self.engine == "legacy":
+            return self._run_legacy(iterations, times, lrs, eval_fn, eval_every)
+        return self._run_batched(iterations, times, lrs, eval_fn, eval_every)
+
+    def run_multi(self, iterations: int, n_realizations: int,
+                  eval_fn: Optional[Callable[[jnp.ndarray],
+                                             tuple[float, float]]] = None
+                  ) -> MultiFedResult:
+        """R independent delay realizations of the same deployment, vmapped.
+
+        One compiled call produces the full (R, iterations) wall-clock /
+        return-count surface — mean ± std over axis 0 is the Fig. 4/5 curve
+        with its confidence band (`MultiFedResult.wall_clock_bands`).
+
+        Always runs on the batched scan engine (the legacy oracle has no
+        vmappable form); the `engine` constructor argument only selects the
+        `run()` path.
+        """
+        R = int(n_realizations)
+        times = self._sample_round_times(R * iterations)
+        times = times.reshape(R, iterations, self.n)
+        lrs = jnp.asarray(self._lr_schedule(iterations))
+        theta0 = jnp.zeros((self.q, self.c), jnp.float32)
+
+        cache_key = (self.scheme, "multi")
+        multi = self._scan_cache.get(cache_key)
+        if multi is None:
+            step = self._make_step(collect_theta=False)
+
+            def multi(times_r, lrs_r):
+                def one(tj):
+                    return jax.lax.scan(step, theta0, (tj, lrs_r))
+                return jax.vmap(one)(times_r)
+
+            multi = jax.jit(multi)
+            self._scan_cache[cache_key] = multi
+
+        theta, (t_rounds, n_ret) = multi(jnp.asarray(times, jnp.float32), lrs)
+        wall = self.setup_time + np.cumsum(
+            np.asarray(t_rounds, np.float64), axis=1)
+        acc = None
+        if eval_fn is not None:
+            acc = np.array([eval_fn(theta[r])[1] for r in range(R)])
+        return MultiFedResult(theta=theta, wall_clock=wall,
+                              returned=np.asarray(n_ret),
+                              t_star=self.t_star, loads=self.loads,
+                              setup_time=self.setup_time, accuracy=acc)

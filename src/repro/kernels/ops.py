@@ -8,6 +8,7 @@ slice the result back, so arbitrary shapes are accepted.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
@@ -54,6 +55,24 @@ def linreg_grad(x, theta, y, *, use_pallas: bool = False,
     yp = _pad_to(y, (bm, 1))
     out = _linreg_grad_kernel(xp, tp, yp, bm=bm, bq=bq, interpret=interpret)
     return out[:q, :c]
+
+
+def linreg_grad_batched(x_stack, theta, y_stack, *, use_pallas: bool = False,
+                        bm: int = 128, bq: int = 128, interpret: bool = True):
+    """Per-client gradients over a dense client axis.
+
+    x_stack: (n, l, q), theta: (q, c), y_stack: (n, l, c) -> (n, q, c).
+    The jnp path vmaps the reference kernel (one fused batched matmul);
+    the Pallas path runs the tiled kernel per client so each call keeps its
+    own padding to block multiples.
+    """
+    if not use_pallas:
+        return jax.vmap(lambda x, y: ref.linreg_grad(x, theta, y))(
+            x_stack, y_stack)
+    return jnp.stack([
+        linreg_grad(x_stack[j], theta, y_stack[j], use_pallas=True,
+                    bm=bm, bq=bq, interpret=interpret)
+        for j in range(x_stack.shape[0])])
 
 
 def parity_encode(g, w, x, *, use_pallas: bool = False,

@@ -44,6 +44,26 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 
+def normalize_cost_analysis(cost) -> dict:
+    """Flatten `compiled.cost_analysis()` across JAX API drift.
+
+    Depending on the JAX version the call returns a dict, a list with one
+    dict per device/program, or None.  Return a single plain dict (empty
+    when nothing is available) so callers can `.get()` unconditionally.
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        merged: dict = {}
+        for entry in cost:
+            if isinstance(entry, dict):
+                merged.update(entry)
+        return merged
+    if isinstance(cost, dict):
+        return dict(cost)
+    return {}
+
+
 def collective_bytes(hlo_text: str) -> dict[str, int]:
     """Sum per-device result bytes of every collective op in the HLO."""
     out = {k: 0 for k in _COLLECTIVES}
@@ -180,7 +200,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     coll = collective_bytes(compiled.as_text())
     elapsed = time.time() - t0
     record = {

@@ -1,0 +1,154 @@
+"""Batched scan engine vs. the legacy per-client Python oracle.
+
+Both engines pre-sample the whole run's delays through the same vectorized
+`delay_model.sample_round_times` call, so with equal seeds they must produce
+the same returned-client counts, wall-clocks, and `theta` trajectory to fp32
+tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig, TrainConfig
+from repro.core import aggregation, delay_model, fed_runtime
+from repro.core.delay_model import NodeDelayParams
+
+
+def _data(n=8, l=24, q=32, c=3, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n, l, q)).astype(np.float32) * 0.2
+    ys = rng.normal(size=(n, l, c)).astype(np.float32)
+    return xs, ys
+
+
+def _run(xs, ys, scheme, engine, iters=25, **fl_kw):
+    fl = FLConfig(n_clients=xs.shape[0], delta=0.25, psi=0.3, seed=3, **fl_kw)
+    tc = TrainConfig(learning_rate=0.5, l2_reg=1e-4,
+                     lr_decay_epochs=(10, 18))
+    sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme=scheme,
+                                          engine=engine)
+    trace = lambda th: (float(np.abs(np.asarray(th)).sum()), 0.0)
+    return sim.run(iters, eval_fn=trace, eval_every=1)
+
+
+@pytest.mark.parametrize("scheme", ["naive", "greedy", "coded"])
+def test_batched_matches_legacy_trajectory(scheme):
+    xs, ys = _data()
+    res_l = _run(xs, ys, scheme, "legacy")
+    res_b = _run(xs, ys, scheme, "batched")
+    np.testing.assert_allclose(np.asarray(res_b.theta),
+                               np.asarray(res_l.theta), atol=1e-5)
+    for hl, hb in zip(res_l.history, res_b.history):
+        assert hl.returned == hb.returned
+        np.testing.assert_allclose(hb.wall_clock, hl.wall_clock, rtol=1e-5)
+        # per-round theta trace (the eval_fn records |theta|_1 every round)
+        np.testing.assert_allclose(hb.loss, hl.loss, rtol=1e-4, atol=1e-5)
+
+
+def test_masked_padded_grads_match_ragged():
+    """Dense mask-padded client gradients == ragged per-subset gradients."""
+    rng = np.random.default_rng(7)
+    n, l, q, c = 6, 20, 16, 4
+    xs = rng.normal(size=(n, l, q)).astype(np.float32)
+    ys = rng.normal(size=(n, l, c)).astype(np.float32)
+    theta = rng.normal(size=(q, c)).astype(np.float32)
+    loads = rng.integers(0, l + 1, size=n)
+    idx = [np.sort(rng.permutation(l)[:k]) for k in loads]
+    l_max = max(1, int(loads.max()))
+    pad_x = np.zeros((n, l_max, q), np.float32)
+    pad_y = np.zeros((n, l_max, c), np.float32)
+    for j in range(n):
+        pad_x[j, :loads[j]] = xs[j][idx[j]]
+        pad_y[j, :loads[j]] = ys[j][idx[j]]
+    dense = aggregation.batched_client_gradients(
+        jnp.asarray(pad_x), jnp.asarray(pad_y), jnp.asarray(theta))
+    for j in range(n):
+        ragged = (xs[j][idx[j]].T @ (xs[j][idx[j]] @ theta - ys[j][idx[j]])
+                  if loads[j] > 0 else np.zeros((q, c), np.float32))
+        np.testing.assert_allclose(np.asarray(dense[j]), ragged,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_vectorized_sampler_matches_expected_delay():
+    """Vectorized 3-draw sampler reproduces E[T_j] per node."""
+    nodes = [NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=0.2),
+             NodeDelayParams(mu=2.0, alpha=1.0, tau=0.1, p=0.0),
+             NodeDelayParams(mu=9.0, alpha=4.0, tau=0.02, p=0.4,
+                             tau_up=0.05, p_up=0.1)]
+    loads = np.array([10.0, 0.0, 25.0])
+    rng = np.random.default_rng(0)
+    t = delay_model.sample_round_times(nodes, loads, rng, rounds=200_000)
+    assert t.shape == (200_000, 3)
+    want = [nd.expected_delay(ld) for nd, ld in zip(nodes, loads)]
+    np.testing.assert_allclose(t.mean(axis=0), want, rtol=0.02)
+
+
+def test_sampler_rejects_bad_loads_shape():
+    nodes = [NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=0.2)]
+    with pytest.raises(ValueError):
+        delay_model.sample_round_times(nodes, np.ones(3),
+                                       np.random.default_rng(0))
+
+
+def test_erasure_probability_one_raises():
+    """Satellite: p = 1.0 must be a clear error, not inf wall-clock."""
+    with pytest.raises(ValueError, match="erasure probability"):
+        NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=1.0)
+    with pytest.raises(ValueError, match="erasure probability"):
+        NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=0.1, p_up=1.0)
+    with pytest.raises(ValueError, match="tau_up"):
+        NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=0.1, tau_up=-0.1)
+    xs, ys = _data(n=4)
+    with pytest.raises(ValueError, match="erasure probability"):
+        _run(xs, ys, "coded", "batched", iters=1, p_erasure=1.0)
+
+
+def test_run_multi_shapes_and_bands():
+    xs, ys = _data(n=6)
+    fl = FLConfig(n_clients=6, delta=0.25, psi=0.3, seed=3)
+    tc = TrainConfig(learning_rate=0.5, l2_reg=0.0)
+    sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme="coded")
+    res = sim.run_multi(12, 5, eval_fn=lambda th: (0.0, 1.0))
+    assert res.theta.shape == (5, sim.q, sim.c)
+    assert res.wall_clock.shape == (5, 12)
+    assert res.returned.shape == (5, 12)
+    assert np.all(np.diff(res.wall_clock, axis=1) > 0)
+    mean, std = res.wall_clock_bands()
+    assert mean.shape == (12,) and std.shape == (12,)
+    # coded rounds take exactly t*, so realizations agree and std is 0
+    np.testing.assert_allclose(std, 0.0, atol=1e-6)
+    assert res.accuracy is not None and res.accuracy.shape == (5,)
+
+
+def test_run_multi_realizations_differ_uncoded():
+    """Naive rounds depend on the sampled max delay -> realizations differ."""
+    xs, ys = _data(n=6)
+    fl = FLConfig(n_clients=6, seed=3)
+    tc = TrainConfig(learning_rate=0.5, l2_reg=0.0)
+    sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme="naive")
+    res = sim.run_multi(10, 4)
+    assert np.std(res.wall_clock[:, -1]) > 0.0
+
+
+def test_batched_parity_matches_sequential_encode():
+    """Vmapped encode in _setup_coded == the sequential per-client chain."""
+    from repro.core import encoding
+    xs, ys = _data(n=5, l=16, q=12, c=2)
+    fl = FLConfig(n_clients=5, delta=0.3, seed=11)
+    tc = TrainConfig(learning_rate=0.5)
+    sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme="coded")
+    # replay the legacy sequential key chain + per-client encode
+    key = jax.random.PRNGKey(fl.seed + 99)
+    parities = []
+    for j in range(sim.n):
+        w = encoding.weight_vector(sim.l, sim.processed_idx[j],
+                                   float(sim.p_return[j]))
+        key, sub = jax.random.split(key)
+        parities.append(encoding.encode_local(sub, sim.x[j], sim.y[j],
+                                              w, sim.u))
+    ref = encoding.aggregate_parity(parities)
+    np.testing.assert_allclose(np.asarray(sim.parity.x), np.asarray(ref.x),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sim.parity.y), np.asarray(ref.y),
+                               rtol=1e-5, atol=1e-5)

@@ -1,8 +1,15 @@
-"""Hypothesis property-based tests on system invariants."""
+"""Hypothesis property-based tests on system invariants.
+
+Degrades to a pytest skip (not a collection error) when `hypothesis` is not
+installed in the environment.
+"""
 import math
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import load_allocation as la
 from repro.core.delay_model import NodeDelayParams
