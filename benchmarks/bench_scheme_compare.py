@@ -1,0 +1,84 @@
+"""Benchmark: coded vs uncoded vs ideal-no-straggler scheme comparison.
+
+Thin CLI/CSV front-end over `repro.launch.bench`: runs the comparison
+across heterogeneity profiles with `run_multi`, writes the
+``BENCH_fed_training.json`` artifact (the recorded perf trajectory; CI
+asserts it exists and is well-formed every push) and emits the usual
+``name,us_per_call,derived`` rows for `benchmarks.run`.
+
+  PYTHONPATH=src python -m benchmarks.bench_scheme_compare [--smoke|--full]
+      [--out BENCH_fed_training.json]
+  PYTHONPATH=src python -m benchmarks.bench_scheme_compare \
+      --validate BENCH_fed_training.json     # exit 1 on malformed artifact
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.launch import bench as launch_bench
+
+# (n_clients, l, q, c, iters, realizations)
+_SCALES = {
+    "smoke": dict(n_clients=5, l=12, q=16, c=3, iters=8, realizations=3),
+    "default": dict(n_clients=12, l=32, q=64, c=5, iters=40, realizations=6),
+    "full": dict(n_clients=30, l=100, q=256, c=10, iters=150,
+                 realizations=8),
+}
+
+
+def run(out_path: str = launch_bench.ARTIFACT_NAME, scale: str = "default",
+        kernel_backend: str = "xla"):
+    """Run the comparison, write the artifact, return CSV rows."""
+    result = launch_bench.run_schemes(kernel_backend=kernel_backend,
+                                      **_SCALES[scale])
+    launch_bench.write_artifact(result, out_path)
+    problems = launch_bench.validate_artifact(out_path)
+    if problems:
+        raise RuntimeError(f"benchmark artifact failed validation: {problems}")
+    rows = []
+    for pname, prof in result["profiles"].items():
+        for scheme, entry in prof["schemes"].items():
+            rows.append((
+                f"fed_compare_{pname}_{scheme}",
+                entry["host_seconds"] * 1e6,
+                f"wall={entry['final_wall_clock_mean']:.1f}s"
+                f"±{entry['final_wall_clock_std']:.1f}"))
+        rows.append((f"fed_compare_{pname}_speedup", 0.0,
+                     f"vs_naive={prof['coded_speedup_vs_naive']:.2f}x;"
+                     f"vs_ideal={prof['coded_overhead_vs_ideal']:.2f}x"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=launch_bench.ARTIFACT_NAME)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run (seconds, not minutes)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale run")
+    ap.add_argument("--kernel-backend", default="xla",
+                    choices=("xla", "pallas"))
+    ap.add_argument("--validate", metavar="PATH",
+                    help="validate an existing artifact and exit")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        problems = launch_bench.validate_artifact(args.validate)
+        if problems:
+            for pr in problems:
+                print(f"INVALID: {pr}", file=sys.stderr)
+            return 1
+        print(f"{args.validate}: OK")
+        return 0
+
+    scale = "full" if args.full else ("smoke" if args.smoke else "default")
+    for name, us, derived in run(args.out, scale=scale,
+                                 kernel_backend=args.kernel_backend):
+        print(f"{name},{us:.1f},{derived}")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

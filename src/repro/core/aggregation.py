@@ -19,17 +19,26 @@ import jax.numpy as jnp
 from repro.kernels import ops
 
 
-def batched_client_gradients(x_stack, y_stack, theta, *,
-                             use_pallas: bool = False):
+def batched_client_gradients(x_stack, y_stack, theta, *, mask=None,
+                             use_pallas: bool = False,
+                             interpret: bool = True):
     """All-client unnormalized gradients in one call.
 
     x_stack: (n, l, q), y_stack: (n, l, c), theta: (q, c) -> (n, q, c).
     Rows padded with zeros contribute exactly zero (x_k = 0 makes the
     per-point gradient x_k (x_k theta - y_k)^T vanish), so callers may pass
-    dense mask-padded subsets.
+    dense mask-padded subsets.  Passing the (n, l) validity `mask` instead
+    routes through the fused masked kernel, which also tolerates un-zeroed
+    padding; with `use_pallas` the whole stack is one tiled Pallas call
+    (interpret mode on CPU, compiled on TPU).
     """
+    if mask is not None:
+        return ops.linreg_grad_masked(x_stack, theta, y_stack, mask,
+                                      use_pallas=use_pallas,
+                                      interpret=interpret)
     return ops.linreg_grad_batched(x_stack, theta, y_stack,
-                                   use_pallas=use_pallas)
+                                   use_pallas=use_pallas,
+                                   interpret=interpret)
 
 
 def masked_gradient_sum(client_grads, returned_mask):
@@ -47,7 +56,7 @@ def client_gradient(x, y, theta, *, use_pallas: bool = False):
 
 
 def coded_gradient(parity_x, parity_y, theta, pnr_c: float = 0.0,
-                   *, use_pallas: bool = False):
+                   *, use_pallas: bool = False, interpret: bool = True):
     """g_C over the global parity set (eq. 28).
 
         g_C = 1/(1-pnr_C) * (1/u) * Xv^T (Xv theta - Yv)
@@ -58,7 +67,8 @@ def coded_gradient(parity_x, parity_y, theta, pnr_c: float = 0.0,
     gradients — commensurate with the clients' unnormalized sums.
     """
     u = parity_x.shape[0]
-    g = ops.linreg_grad(parity_x, theta, parity_y, use_pallas=use_pallas)
+    g = ops.linreg_grad(parity_x, theta, parity_y, use_pallas=use_pallas,
+                        interpret=interpret)
     return g / (u * (1.0 - pnr_c))
 
 

@@ -31,6 +31,16 @@ the numerical-equivalence oracle: both engines consume the same pre-sampled
 delay matrix, so with equal seeds they produce the same ``theta`` trajectory
 to fp32 tolerance (see tests/test_batched_engine.py).
 
+``kernel_backend`` selects how the batched engine computes gradients:
+``"xla"`` (default) is the plain-jnp vmapped path; ``"pallas"`` routes every
+per-round gradient through the fused Pallas kernels
+(``kernels.linreg_grad_masked`` over the dense padded client tensor, the
+tiled ``linreg_grad`` for the coded parity set) — interpret mode off-TPU,
+compiled on TPU.  Both backends produce the same trajectory to fp32
+tolerance.  ``alloc_backend`` picks the deadline/load optimizer: the scalar
+NumPy two-step solver or the vectorized fixed-iteration JAX solver
+(``"auto"`` chooses by population size).
+
 Multi-realization mode
 ----------------------
 ``run_multi(iterations, n_realizations)`` vmaps the compiled scan over a
@@ -113,10 +123,25 @@ class FederatedSimulation:
                  steps_per_epoch: int = 1, nodes: Optional[list] = None,
                  rng: Optional[np.random.Generator] = None,
                  secure_aggregation: bool = False,
-                 engine: str = "batched"):
+                 engine: str = "batched",
+                 kernel_backend: str = "xla",
+                 alloc_backend: str = "auto"):
         if engine not in ("batched", "legacy"):
             raise ValueError(f"unknown engine {engine!r}")
+        if kernel_backend not in ("xla", "pallas"):
+            raise ValueError(f"unknown kernel_backend {kernel_backend!r} "
+                             "(expected 'xla' or 'pallas')")
+        if alloc_backend not in ("auto", "scalar", "vectorized"):
+            raise ValueError(f"unknown alloc_backend {alloc_backend!r} "
+                             "(expected 'auto', 'scalar' or 'vectorized')")
         self.engine = engine
+        # "pallas" routes the batched engine's gradient calls through the
+        # fused Pallas kernels (interpret mode off-TPU so CI stays green on
+        # CPU); "xla" keeps the plain-jnp vmapped path.  The legacy oracle
+        # engine always uses the jnp path.
+        self.kernel_backend = kernel_backend
+        self.alloc_backend = alloc_backend
+        self._interpret = jax.default_backend() != "tpu"
         self.secure_aggregation = secure_aggregation
         self.scheme = scheme or fl_cfg.scheme
         self.fl = fl_cfg
@@ -144,10 +169,22 @@ class FederatedSimulation:
             self._setup_coded()
 
     # ------------------------------------------------------------- coded setup
+    def _pick_alloc_backend(self) -> str:
+        """Resolve alloc_backend="auto": the vectorized jitted solver wins at
+        scale, the scalar loop has no compile cost at small n."""
+        if self.alloc_backend != "auto":
+            return self.alloc_backend
+        symmetric = all(nd.tau_up is None and nd.p_up is None
+                        for nd in self.nodes)
+        return "vectorized" if (symmetric and self.n >= 64) else "scalar"
+
     def _setup_coded(self):
         fl = self.fl
         u_max = int(round(fl.delta * self.m))
-        alloc = load_allocation.two_step_allocate(
+        allocate = (load_allocation.two_step_allocate_vectorized
+                    if self._pick_alloc_backend() == "vectorized"
+                    else load_allocation.two_step_allocate)
+        alloc = allocate(
             self.nodes, [float(self.l)] * self.n, server=None,
             u_max=float(u_max), m=float(self.m))
         self.t_star = alloc.t_star
@@ -216,6 +253,7 @@ class FederatedSimulation:
         gather = jax.vmap(lambda xj, ij: xj[ij])
         self._sub_x_pad = gather(self.x, rows) * mask
         self._sub_y_pad = gather(self.y, rows) * mask
+        self._grad_mask = jnp.asarray(pad_mask)       # (n, l_max) row validity
         self._grad_active = jnp.asarray(self.loads > 0)
 
     # ------------------------------------------------------------------ round
@@ -248,9 +286,14 @@ class FederatedSimulation:
         m = float(self.m)
         l = float(self.l)
         x, y = self.x, self.y
+        use_pallas = self.kernel_backend == "pallas"
+        interpret = self._interpret
         if scheme == "coded":
             sub_x, sub_y = self._sub_x_pad, self._sub_y_pad
             par_x, par_y = self.parity.x, self.parity.y
+            # the Pallas path takes the explicit row-validity mask (fused
+            # into the residual); the XLA path keeps the pre-zeroed padding
+            grad_mask = self._grad_mask if use_pallas else None
             active = self._grad_active
             t_star = jnp.float32(self.t_star)
 
@@ -259,25 +302,29 @@ class FederatedSimulation:
             if scheme == "naive":
                 n_ret = jnp.int32(t_row.shape[0])
                 t_round = jnp.max(t_row)
-                g_all = aggregation.batched_client_gradients(x, y, theta)
+                g_all = aggregation.batched_client_gradients(
+                    x, y, theta, use_pallas=use_pallas, interpret=interpret)
                 g_sum = jnp.sum(g_all, axis=0)
                 denom = m
             elif scheme == "greedy":
                 t_round = jnp.sort(t_row)[n_wait - 1]
                 ret = t_row <= t_round
                 n_ret = jnp.sum(ret).astype(jnp.int32)
-                g_all = aggregation.batched_client_gradients(x, y, theta)
+                g_all = aggregation.batched_client_gradients(
+                    x, y, theta, use_pallas=use_pallas, interpret=interpret)
                 g_sum = aggregation.masked_gradient_sum(g_all, ret)
                 denom = n_ret.astype(jnp.float32) * l
             elif scheme == "coded":
                 ret = t_row <= t_star
                 n_ret = jnp.sum(ret).astype(jnp.int32)
                 t_round = t_star
-                g_all = aggregation.batched_client_gradients(sub_x, sub_y,
-                                                             theta)
+                g_all = aggregation.batched_client_gradients(
+                    sub_x, sub_y, theta, mask=grad_mask,
+                    use_pallas=use_pallas, interpret=interpret)
                 g_sum = aggregation.masked_gradient_sum(g_all, ret & active)
                 g_sum = g_sum + aggregation.coded_gradient(
-                    par_x, par_y, theta, pnr_c=0.0)
+                    par_x, par_y, theta, pnr_c=0.0, use_pallas=use_pallas,
+                    interpret=interpret)
                 denom = m
             else:
                 raise ValueError(scheme)

@@ -10,19 +10,35 @@ Two-step scheme:
   Step 2: bisection over t (the maximized total expected return is monotone
     increasing in t, Appendix C) until it equals m.
 
+Two solver backends share this structure:
+
+  * the original scalar NumPy path (``two_step_allocate``) — a Python loop
+    over nodes and concavity pieces; exact, but O(n) Python-level work per
+    bisection step, so it cannot scale past a few hundred clients;
+  * ``two_step_allocate_vectorized`` — the same two-step scheme as ONE
+    fixed-iteration jitted JAX program: golden-section over every
+    (node, concavity-piece) pair simultaneously, bracketing + bisection as
+    ``lax.fori_loop``s.  All n clients (plus the optional MEC server node,
+    i.e. the paper's n+1 nodes) are solved in a single call; n >= 1000 is a
+    single device program.  The scalar path stays as the numerical oracle
+    (tests assert node-for-node agreement).
+
 Special case p_j = 0 (AWGN links): closed form via the Lambert-W minor
 branch (paper eq. 34/35, Appendix D), used both as a fast path and as an
-oracle in tests.
+oracle in tests (the vectorized solver must reproduce it at p = 0).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.delay_model import NodeDelayParams
+from repro.core.delay_model import NodeDelayParams, stack_node_params
 
 _INV_PHI = (math.sqrt(5.0) - 1.0) / 2.0
 
@@ -212,5 +228,240 @@ def two_step_allocate(clients: Sequence[NodeDelayParams],
         u_star, coded_ret = float(u_max), float(u_max)
     else:
         u_star, coded_ret = optimal_load(server, t_star, u_max)
+    return Allocation(t_star=t_star, loads=loads, u_star=u_star,
+                      returns=rets, coded_return=coded_ret)
+
+
+# --------------------------------------------------------------------------
+# Vectorized fixed-iteration JAX solver (all n+1 nodes simultaneously).
+# --------------------------------------------------------------------------
+def _tail_v_cap(p_max: float) -> int:
+    """Static truncation of the NB transmission-count tail.
+
+    Mirrors NodeDelayParams._v_cap's tail rule at the population's largest
+    erasure probability; the per-t floor(t/tau) part of the scalar cap is
+    subsumed by the slack > 0 masking inside the vectorized cdf.  Rounded up
+    to a multiple of 8 so nearby populations share one compiled program
+    (v_cap is a static jit argument; the extra tail terms are < 1e-13).
+    """
+    if p_max <= 0.0:
+        return 2
+    exact = 2 + int(np.ceil(-14.0 / np.log10(p_max))) + 10
+    return int(-(-exact // 8) * 8)
+
+
+def _nb_tail_weights(p, v):
+    """h_v = (v-1)(1-p)^2 p^(v-2): the NB(2, 1-p) transmission-count pmf.
+
+    Load- and deadline-independent, so it is computed ONCE per solve and
+    reused by every objective evaluation (jnp.power is two transcendentals
+    per element — hoisting it out of the golden/bisection loops is a ~2x
+    end-to-end win at n >= 1000).
+    """
+    return (v - 1.0) * (1.0 - p[:, None]) ** 2 * jnp.power(p[:, None],
+                                                           v - 2.0)
+
+
+def _vec_expected_return(mu, alpha, tau, h, t, loads, v):
+    """E[R(t; l)] = l * P(T <= t), element-wise (paper eq. 42 / Theorem 1).
+
+    mu/alpha/tau and the precomputed tail weights `h` must broadcast against
+    `loads[..., None]`; `v` is the (V,) static transmission-count grid.
+    Terms with non-positive slack are masked, so the result is exact for any
+    t without a data-dependent v cap.
+    """
+    lo = loads[..., None]
+    slack = t - lo / mu[..., None] - tau[..., None] * v
+    safe = jnp.where(loads > 0, loads, 1.0)
+    rate = (alpha * mu / safe)[..., None]
+    term = jnp.where(slack > 0, h * (1.0 - jnp.exp(-rate * slack)), 0.0)
+    cdf = jnp.minimum(jnp.sum(term, axis=-1), 1.0)
+    return jnp.where(loads > 0, loads * cdf, 0.0)
+
+
+def _vec_optimal_loads(mu, alpha, tau, h, caps, t, *, v_cap: int,
+                       n_golden: int):
+    """Step 1 for every node at once: argmax_l E[R(t; l)], 0 <= l <= cap.
+
+    Runs a fixed-iteration golden-section search on every (node, concavity
+    piece) pair simultaneously — piece boundaries at l = mu (t - v tau)
+    (Theorem 1) — then keeps the best of the piece interior and piece upper
+    endpoint, mirroring the scalar solver's candidate order.
+    Returns (loads, returns), each shaped like caps.
+    """
+    v = jnp.arange(2, v_cap + 1, dtype=caps.dtype)
+
+    def f(l):                                   # l: (n, P) piece-grid loads
+        return _vec_expected_return(mu[:, None], alpha[:, None],
+                                    tau[:, None], h[:, None, :], t, l, v)
+
+    # sorted piece boundaries: clip(mu (t - v tau), [0, cap]) ∪ {0, cap}
+    b = jnp.clip(mu[:, None] * (t - v * tau[:, None]), 0.0, caps[:, None])
+    zeros = jnp.zeros_like(caps)[:, None]
+    bounds = jnp.sort(jnp.concatenate([zeros, b, caps[:, None]], axis=1),
+                      axis=1)                   # (n, V + 1)
+    lo, hi = bounds[:, :-1], bounds[:, 1:]      # (n, V) pieces
+
+    # classic golden section with one objective eval per iteration: carry
+    # (a, b, c, d, fc, fd) and probe only the one new interior point
+    a, bb = lo + 1e-12, hi
+    c = bb - _INV_PHI * (bb - a)
+    d = a + _INV_PHI * (bb - a)
+    fc, fd = f(c), f(d)
+
+    def body(_, st):
+        a, bb, c, d, fc, fd = st
+        left = fc >= fd
+        a2 = jnp.where(left, a, c)
+        b2 = jnp.where(left, d, bb)
+        probe = jnp.where(left, b2 - _INV_PHI * (b2 - a2),
+                          a2 + _INV_PHI * (b2 - a2))
+        fp = f(probe)
+        c2 = jnp.where(left, probe, d)
+        d2 = jnp.where(left, c, probe)
+        fc2 = jnp.where(left, fp, fd)
+        fd2 = jnp.where(left, fc, fp)
+        return (a2, b2, c2, d2, fc2, fd2)
+
+    a, bb, *_ = jax.lax.fori_loop(0, n_golden, body, (a, bb, c, d, fc, fd))
+    x = 0.5 * (a + bb)
+
+    # candidate order matches the scalar loop: per piece (ascending), the
+    # golden interior point first, then the piece's upper endpoint
+    cands = jnp.stack([x, hi], axis=-1).reshape(caps.shape[0], -1)
+    rets = jnp.stack([f(x), f(hi)], axis=-1).reshape(caps.shape[0], -1)
+    best = jnp.argmax(rets, axis=1)
+    best_ret = jnp.take_along_axis(rets, best[:, None], axis=1)[:, 0]
+    best_load = jnp.take_along_axis(cands, best[:, None], axis=1)[:, 0]
+    ok = best_ret > 0.0
+    return jnp.where(ok, best_load, 0.0), jnp.where(ok, best_ret, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("v_cap", "n_golden",
+                                             "n_golden_search",
+                                             "n_bracket", "n_bisect"))
+def _vec_two_step(mu, alpha, tau, p, caps, target, t_hi0, *, v_cap: int,
+                  n_golden: int, n_golden_search: int, n_bracket: int,
+                  n_bisect: int):
+    """Step 2: bracket + bisection over t, entirely on device.
+
+    The bracket doubles t until the maximized total return reaches the
+    target (lax.while_loop, capped at n_bracket doublings); the bisection is
+    a fixed n_bisect-iteration lax.fori_loop, so one compiled program solves
+    the whole population regardless of n.  During the search only the
+    objective VALUE matters, and golden-section value error is quadratic in
+    the interval width, so a coarser n_golden_search is used inside the
+    bracket/bisection and the full n_golden only for the final load
+    extraction at t*.
+    """
+    v = jnp.arange(2, v_cap + 1, dtype=caps.dtype)
+    h = _nb_tail_weights(p, v)
+
+    def total(t):
+        _, rets = _vec_optimal_loads(mu, alpha, tau, h, caps, t,
+                                     v_cap=v_cap, n_golden=n_golden_search)
+        return jnp.sum(rets)
+
+    def need_more(state):
+        hi, k = state
+        return (total(hi) < target) & (k < n_bracket)
+    hi, _ = jax.lax.while_loop(need_more, lambda s: (s[0] * 2.0, s[1] + 1),
+                               (t_hi0, 0))
+
+    def bisect(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        ge = total(mid) >= target
+        return (jnp.where(ge, lo, mid), jnp.where(ge, mid, hi))
+    _, t_star = jax.lax.fori_loop(0, n_bisect, bisect,
+                                  (jnp.zeros_like(hi), hi))
+
+    loads, rets = _vec_optimal_loads(mu, alpha, tau, h, caps, t_star,
+                                     v_cap=v_cap, n_golden=n_golden)
+    return t_star, loads, rets
+
+
+def _require_symmetric(nodes: Sequence[NodeDelayParams]) -> None:
+    if any(nd.tau_up is not None or nd.p_up is not None for nd in nodes):
+        raise ValueError(
+            "vectorized solver supports symmetric (reciprocal) links only; "
+            "use the scalar two_step_allocate for asymmetric tau_up/p_up")
+
+
+def vectorized_optimal_loads(nodes: Sequence[NodeDelayParams], t: float,
+                             caps: Sequence[float], *, n_golden: int = 52
+                             ) -> tuple[np.ndarray, np.ndarray]:
+    """Step-1 optimal loads for all nodes in one jitted call (float64).
+
+    Node-for-node equivalent of looping `optimal_load`; the scalar path is
+    the oracle the property tests compare against.
+    """
+    from jax.experimental import enable_x64
+    _require_symmetric(nodes)
+    prm = stack_node_params(nodes)
+    v_cap = _tail_v_cap(float(prm["p_down"].max()))
+    with enable_x64():
+        p = jnp.asarray(prm["p_down"])
+        v = jnp.arange(2, v_cap + 1, dtype=jnp.float64)
+        loads, rets = jax.jit(_vec_optimal_loads,
+                              static_argnames=("v_cap", "n_golden"))(
+            jnp.asarray(prm["mu"]), jnp.asarray(prm["alpha"]),
+            jnp.asarray(prm["tau_down"]), _nb_tail_weights(p, v),
+            jnp.asarray(np.asarray(caps, np.float64)), float(t),
+            v_cap=v_cap, n_golden=n_golden)
+        return np.asarray(loads), np.asarray(rets)
+
+
+def two_step_allocate_vectorized(clients: Sequence[NodeDelayParams],
+                                 client_caps: Sequence[float],
+                                 server: NodeDelayParams | None,
+                                 u_max: float,
+                                 m: float,
+                                 tol: float = 1e-6,
+                                 t_hi: float | None = None,
+                                 n_golden: int = 52,
+                                 n_golden_search: int = 28,
+                                 n_bracket: int = 60,
+                                 n_bisect: int = 48) -> Allocation:
+    """Vectorized counterpart of `two_step_allocate` (paper eq. 23-27).
+
+    One fixed-iteration jitted JAX program solves step 1 for all n clients
+    (plus the MEC server compute node when given — the paper's n+1 nodes)
+    and runs the step-2 bracket/bisection on device; n >= 1000 nodes is a
+    single call.  Matches the scalar solver within its bisection tolerance
+    (`tol` only documents that contract — iteration counts are fixed and
+    exceed it).  Float64 throughout via a local x64 scope.
+    """
+    from jax.experimental import enable_x64
+    nodes = list(clients)
+    caps = [float(cp) for cp in client_caps]
+    target = float(m)
+    if server is not None:
+        nodes.append(server)
+        caps.append(float(u_max))
+    else:
+        target -= float(u_max)          # P(T_C <= t) = 1: u_max always returns
+    _require_symmetric(nodes)
+    if sum(client_caps) + u_max < m - 1e-9:
+        raise ValueError("infeasible: sum of caps + u_max < m")
+    prm = stack_node_params(nodes)
+    v_cap = _tail_v_cap(float(prm["p_down"].max()))
+    with enable_x64():
+        t_star, loads, rets = _vec_two_step(
+            jnp.asarray(prm["mu"]), jnp.asarray(prm["alpha"]),
+            jnp.asarray(prm["tau_down"]), jnp.asarray(prm["p_down"]),
+            jnp.asarray(np.asarray(caps, np.float64)), target,
+            float(t_hi if t_hi is not None else 1.0),
+            v_cap=v_cap, n_golden=n_golden,
+            n_golden_search=n_golden_search, n_bracket=n_bracket,
+            n_bisect=n_bisect)
+        t_star = float(t_star)
+        loads = np.asarray(loads)
+        rets = np.asarray(rets)
+    if server is None:
+        u_star, coded_ret = float(u_max), float(u_max)
+    else:
+        loads, u_star = loads[:-1], float(loads[-1])
+        rets, coded_ret = rets[:-1], float(rets[-1])
     return Allocation(t_star=t_star, loads=loads, u_star=u_star,
                       returns=rets, coded_return=coded_ret)

@@ -10,6 +10,12 @@ X_blk^T @ R into the (q, c) output without materializing the (m, c) residual
 in HBM.  Grid (M/bm, Q/bq); the residual is computed once per M-block (at
 j == 0) using a full-q view of the X row-block, and the output accumulates
 across M steps (revisited output block).
+
+`linreg_grad_masked` is the batched variant the federated runtime's scan
+engine feeds with its dense mask-padded (n, l_max, q) client tensor: the
+client axis becomes the outermost grid dimension and the validity mask is
+fused into the residual, so padded rows contribute exactly zero even when
+the caller did not pre-zero them.
 """
 from __future__ import annotations
 
@@ -19,6 +25,36 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
+
+# Per-core VMEM is ~16 MiB on current TPUs; leave headroom for double
+# buffering of the streamed input blocks.
+_VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def _check_c_fits_vmem(q: int, c: int, bm: int, bq: int, dtype) -> None:
+    """Validate that the label width `c` leaves the kernel's resident VMEM
+    working set inside the budget.
+
+    theta (q, c), one labels row-block (bm, c), the residual scratch (bm, c)
+    and the output tile (bq, c) are all resident per grid step, so a large c
+    (or q) blows VMEM with an opaque Mosaic/Pallas shape assert.  Raise a
+    clear, actionable error instead.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    resident = (bm * q          # full-q X row block (residual operand)
+                + q * c         # theta, resident across the whole grid
+                + bm * c        # Y row block
+                + bm * c        # residual scratch
+                + bm * bq       # X^T side tile
+                + bq * c)       # output tile
+    nbytes = resident * itemsize
+    if nbytes > _VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"linreg_grad: label width c={c} with q={q}, bm={bm}, bq={bq} "
+            f"({jnp.dtype(dtype).name}) needs ~{nbytes / 2**20:.1f} MiB of "
+            f"resident VMEM (theta + label/residual/output tiles), over the "
+            f"~{_VMEM_BUDGET_BYTES / 2**20:.0f} MiB per-core budget. Split "
+            "the label columns into <=128-wide chunks or shrink bm/bq.")
 
 
 def _kernel(xfull_ref, theta_ref, y_ref, xblk_ref, o_ref, r_ref):
@@ -47,6 +83,7 @@ def linreg_grad(x, theta, y, *, bm: int = 128, bq: int = 128,
     q2, c = theta.shape
     assert q == q2 and y.shape == (m, c)
     assert m % bm == 0 and q % bq == 0, (m, q, bm, bq)
+    _check_c_fits_vmem(q, c, bm, bq, x.dtype)
     return pl.pallas_call(
         _kernel,
         grid=(m // bm, q // bq),
@@ -61,3 +98,56 @@ def linreg_grad(x, theta, y, *, bm: int = 128, bq: int = 128,
         scratch_shapes=[pltpu.VMEM((bm, c), x.dtype)],
         interpret=interpret,
     )(x, theta, y, x)
+
+
+def _masked_kernel(xfull_ref, theta_ref, y_ref, mask_ref, xblk_ref, o_ref,
+                   r_ref):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _residual():
+        r = (jnp.dot(xfull_ref[0], theta_ref[...],
+                     preferred_element_type=r_ref.dtype)
+             - y_ref[0])
+        r_ref[...] = r * mask_ref[0][:, None].astype(r_ref.dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(xblk_ref[0].T, r_ref[...],
+                          preferred_element_type=o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bq", "interpret"))
+def linreg_grad_masked(x, theta, y, mask, *, bm: int = 128, bq: int = 128,
+                       interpret: bool = True):
+    """Per-client masked gradients:  g_j = X_j^T diag(mask_j) (X_j theta - Y_j).
+
+    x: (n, l, q), theta: (q, c), y: (n, l, c), mask: (n, l) -> (n, q, c).
+    Grid (n, L/bm, Q/bq): the client axis is outermost, so one kernel call
+    covers the whole dense mask-padded client tensor of the batched engine.
+    The mask multiplies the residual, so rows with mask 0 contribute exactly
+    zero regardless of the padded x/y contents.
+    """
+    n, l, q = x.shape
+    q2, c = theta.shape
+    assert q == q2 and y.shape == (n, l, c) and mask.shape == (n, l)
+    assert l % bm == 0 and q % bq == 0, (n, l, q, bm, bq)
+    _check_c_fits_vmem(q, c, bm, bq, x.dtype)
+    return pl.pallas_call(
+        _masked_kernel,
+        grid=(n, l // bm, q // bq),
+        in_specs=[
+            pl.BlockSpec((1, bm, q), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((q, c), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((1, bm, c), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bm), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bm, bq), lambda b, i, j: (b, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, c), lambda b, i, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, q, c), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, c), x.dtype)],
+        interpret=interpret,
+    )(x, theta, y, mask, x)

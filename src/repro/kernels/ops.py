@@ -13,9 +13,18 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.linreg_grad import linreg_grad as _linreg_grad_kernel
+from repro.kernels.linreg_grad import \
+    linreg_grad_masked as _linreg_grad_masked_kernel
 from repro.kernels.parity_encode import parity_encode as _parity_encode_kernel
 from repro.kernels.rff_embed import rff_embed as _rff_embed_kernel
 from repro.kernels.gqa_decode import gqa_decode as _gqa_decode_kernel
+
+
+# TPU vector lanes: the last (minor) dim of every VMEM tile is 128 wide, so
+# narrow label widths c are zero-padded up to a lane multiple before hitting
+# the kernel (the hardware pads implicitly anyway; doing it explicitly keeps
+# Mosaic from asserting on unsupported minor dims) and sliced back after.
+_LANE = 128
 
 
 def _pad_to(x, mults):
@@ -44,6 +53,26 @@ def rff_embed(x, omega, delta, *, use_pallas: bool = False,
     return out[:m, :q]
 
 
+def rff_embed_batched(x_stack, omega, delta, *, use_pallas: bool = False,
+                      bm: int = 128, bq: int = 128, bk: int = 128,
+                      interpret: bool = True):
+    """vmap-compatible RFF embedding over a client axis.
+
+    x_stack: (n, l, d), omega: (d, q), delta: (q,) -> (n, l, q).  The jnp
+    path vmaps the reference map; the Pallas path flattens the client axis
+    into the row dimension so the whole stack is ONE tiled kernel call (one
+    padding round instead of n).
+    """
+    if not use_pallas:
+        return jax.vmap(lambda x: ref.rff_embed(x, omega, delta))(x_stack)
+    n, l, d = x_stack.shape
+    q = omega.shape[1]
+    flat = rff_embed(x_stack.reshape(n * l, d), omega, delta,
+                     use_pallas=True, bm=bm, bq=bq, bk=bk,
+                     interpret=interpret)
+    return flat.reshape(n, l, q)
+
+
 def linreg_grad(x, theta, y, *, use_pallas: bool = False,
                 bm: int = 128, bq: int = 128, interpret: bool = True):
     if not use_pallas:
@@ -51,10 +80,38 @@ def linreg_grad(x, theta, y, *, use_pallas: bool = False,
     m, q = x.shape
     c = theta.shape[1]
     xp = _pad_to(x, (bm, bq))
-    tp = _pad_to(theta, (bq, 1))
-    yp = _pad_to(y, (bm, 1))
+    tp = _pad_to(theta, (bq, _LANE))
+    yp = _pad_to(y, (bm, _LANE))
     out = _linreg_grad_kernel(xp, tp, yp, bm=bm, bq=bq, interpret=interpret)
     return out[:q, :c]
+
+
+def linreg_grad_masked(x_stack, theta, y_stack, mask, *,
+                       use_pallas: bool = False, bm: int = 128, bq: int = 128,
+                       interpret: bool = True):
+    """Per-client row-masked gradients over a dense padded client axis.
+
+    x_stack: (n, l, q), theta: (q, c), y_stack: (n, l, c), mask: (n, l)
+    -> (n, q, c) with  g_j = X_j^T diag(mask_j) (X_j theta - Y_j).
+
+    This is the batched engine's hot path: the federated runtime hands over
+    its dense mask-padded client tensor and the whole round's n gradients
+    come from ONE kernel call (client axis = outermost grid dim).  Padding
+    rows carry mask 0, so the caller need not pre-zero them.
+    """
+    if not use_pallas:
+        return jax.vmap(
+            lambda x, y, w: ref.linreg_grad_masked(x, theta, y, w))(
+                x_stack, y_stack, mask)
+    n, l, q = x_stack.shape
+    c = theta.shape[1]
+    xp = _pad_to(x_stack, (1, bm, bq))
+    tp = _pad_to(theta, (bq, _LANE))
+    yp = _pad_to(y_stack, (1, bm, _LANE))
+    mp = _pad_to(mask, (1, bm))
+    out = _linreg_grad_masked_kernel(xp, tp, yp, mp, bm=bm, bq=bq,
+                                     interpret=interpret)
+    return out[:, :q, :c]
 
 
 def linreg_grad_batched(x_stack, theta, y_stack, *, use_pallas: bool = False,
@@ -62,17 +119,16 @@ def linreg_grad_batched(x_stack, theta, y_stack, *, use_pallas: bool = False,
     """Per-client gradients over a dense client axis.
 
     x_stack: (n, l, q), theta: (q, c), y_stack: (n, l, c) -> (n, q, c).
-    The jnp path vmaps the reference kernel (one fused batched matmul);
-    the Pallas path runs the tiled kernel per client so each call keeps its
-    own padding to block multiples.
+    The jnp path vmaps the reference kernel (one fused batched matmul); the
+    Pallas path is the masked batched kernel with an all-ones mask, i.e. one
+    tiled kernel call for all n clients.
     """
     if not use_pallas:
         return jax.vmap(lambda x, y: ref.linreg_grad(x, theta, y))(
             x_stack, y_stack)
-    return jnp.stack([
-        linreg_grad(x_stack[j], theta, y_stack[j], use_pallas=True,
-                    bm=bm, bq=bq, interpret=interpret)
-        for j in range(x_stack.shape[0])])
+    mask = jnp.ones(x_stack.shape[:2], x_stack.dtype)
+    return linreg_grad_masked(x_stack, theta, y_stack, mask, use_pallas=True,
+                              bm=bm, bq=bq, interpret=interpret)
 
 
 def parity_encode(g, w, x, *, use_pallas: bool = False,

@@ -29,6 +29,18 @@ def linreg_grad(x, theta, y):
     return x.T @ (x @ theta - y)
 
 
+def linreg_grad_masked(x, theta, y, mask):
+    """Row-masked gradient (batched-engine form of eq. 7/10).
+
+    x: (l, q), theta: (q, c), y: (l, c), mask: (l,) validity (0/1) ->
+      g = x^T diag(mask) (x @ theta - y)
+    Rows with mask 0 contribute exactly zero, so callers may hand over
+    mask-padded dense subsets without pre-zeroing the padding.
+    """
+    r = (x @ theta - y) * mask[:, None].astype(x.dtype)
+    return x.T @ r
+
+
 def parity_encode(g, w, x):
     """Local parity dataset encoding (paper eq. 19).
 

@@ -1,1 +1,2 @@
-"""Launchers: make_production_mesh, multi-pod dryrun, train, serve."""
+"""Launchers: make_production_mesh, multi-pod dryrun, train, serve, and the
+scheme-comparison benchmark harness (bench)."""

@@ -1,0 +1,205 @@
+"""Scheme-comparison benchmark launcher (Fig. 4/5 trajectory artifact).
+
+Runs coded / naive-uncoded / greedy-uncoded under the batched engine's
+multi-realization mode (`FederatedSimulation.run_multi`) across a set of
+heterogeneity profiles, adds an analytic *ideal-no-straggler* baseline, and
+writes the ``BENCH_fed_training.json`` artifact so the repo's perf
+trajectory is recorded run over run (CI asserts the artifact is written and
+well-formed).
+
+The ideal baseline is the deterministic lower bound for the FULL-LOAD
+(naive/greedy) schemes: every client processes its full minibatch with no
+stochastic compute tail and exactly one transmission per link direction, so
+a round costs ``max_j (l / mu_j + tau_j^down + tau_j^up)`` simulated
+seconds.  The coded scheme assigns *reduced* per-client loads (the parity
+set substitutes for the rest), so it may legitimately finish below this
+baseline — ``coded_overhead_vs_ideal`` < 1 means coding beat the full-load
+floor, not a measurement error.
+
+Profiles sweep the paper's §V-A geometric decay knobs (k1 = rate_decay for
+link rates, k2 = mac_decay for MAC rates): ``uniform`` is a homogeneous
+network, ``paper`` the §V-A operating point, ``extreme`` a heavier-tailed
+straggler population.
+
+Usage (CLI lives in benchmarks/bench_scheme_compare.py):
+  PYTHONPATH=src python -m benchmarks.bench_scheme_compare --smoke \
+      --out BENCH_fed_training.json
+  PYTHONPATH=src python -m benchmarks.bench_scheme_compare \
+      --validate BENCH_fed_training.json
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.config import FLConfig, TrainConfig
+from repro.core import fed_runtime
+from repro.core.delay_model import stack_node_params
+
+SCHEMA_VERSION = 1
+ARTIFACT_NAME = "BENCH_fed_training.json"
+SCHEMES = ("coded", "naive", "greedy")
+
+# Paper §V-A heterogeneity knobs: effective link rates decay as k1^i and MAC
+# rates as k2^i over clients (random permutation), so smaller factors mean a
+# heavier straggler tail.
+HETEROGENEITY_PROFILES = {
+    "uniform": dict(rate_decay=1.0, mac_decay=1.0),
+    "paper": dict(rate_decay=0.95, mac_decay=0.8),
+    "extreme": dict(rate_decay=0.9, mac_decay=0.6),
+}
+
+
+def ideal_round_time(nodes, l: float) -> float:
+    """Deterministic no-straggler round time (seconds).
+
+    One transmission per direction, deterministic compute, full load l on
+    every client — the floor for the full-load (naive/greedy) schemes.
+    """
+    prm = stack_node_params(nodes)
+    return float(np.max(l / prm["mu"] + prm["tau_down"] + prm["tau_up"]))
+
+
+def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
+                iters: int = 40, realizations: int = 6, delta: float = 0.2,
+                psi: float = 0.2, seed: int = 0,
+                profiles: Optional[dict] = None,
+                kernel_backend: str = "xla") -> dict:
+    """Run the scheme comparison over heterogeneity profiles.
+
+    Returns the artifact dict (see `write_artifact` / `validate_artifact`).
+    Simulated wall-clocks come from `run_multi` (mean ± std over independent
+    delay realizations); host_seconds is the host-side cost of that one
+    compiled multi-realization call.
+    """
+    profiles = profiles if profiles is not None else HETEROGENEITY_PROFILES
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n_clients, l, q)).astype(np.float32) * 0.2
+    ys = rng.normal(size=(n_clients, l, c)).astype(np.float32)
+
+    out_profiles = {}
+    for pname, knobs in profiles.items():
+        fl = FLConfig(n_clients=n_clients, delta=delta, psi=psi, seed=seed,
+                      **knobs)
+        tc = TrainConfig(learning_rate=0.5, l2_reg=1e-5,
+                         lr_decay_epochs=(max(1, iters // 2),))
+        schemes = {}
+        nodes = None
+        for scheme in SCHEMES:
+            sim = fed_runtime.FederatedSimulation(
+                xs, ys, fl, tc, scheme=scheme,
+                kernel_backend=kernel_backend)
+            if nodes is None:
+                # the delay network depends only on fl, not on the scheme
+                nodes = sim.nodes
+            t0 = time.perf_counter()
+            multi = sim.run_multi(iters, realizations)
+            host = time.perf_counter() - t0
+            mean, std = multi.wall_clock_bands()
+            schemes[scheme] = {
+                "final_wall_clock_mean": float(mean[-1]),
+                "final_wall_clock_std": float(std[-1]),
+                "per_round_mean": float(np.diff(
+                    mean, prepend=sim.setup_time).mean()),
+                "setup_time": float(sim.setup_time),
+                "t_star": None if sim.t_star is None else float(sim.t_star),
+                "returned_mean": float(np.asarray(multi.returned).mean()),
+                "host_seconds": float(host),
+            }
+            if scheme == "coded":
+                schemes[scheme]["total_load"] = float(np.sum(sim.loads))
+        ideal_final = ideal_round_time(nodes, float(l)) * iters
+        schemes["ideal"] = {
+            "final_wall_clock_mean": float(ideal_final),
+            "final_wall_clock_std": 0.0,
+            "per_round_mean": float(ideal_final / iters),
+            "setup_time": 0.0,
+            "t_star": None,
+            "returned_mean": float(n_clients),
+            "host_seconds": 0.0,
+        }
+        naive_f = schemes["naive"]["final_wall_clock_mean"]
+        coded_f = schemes["coded"]["final_wall_clock_mean"]
+        out_profiles[pname] = {
+            "knobs": dict(knobs),
+            "schemes": schemes,
+            "coded_speedup_vs_naive": float(naive_f / coded_f),
+            "coded_overhead_vs_ideal": float(coded_f / ideal_final),
+        }
+
+    return {
+        "benchmark": "fed_training_scheme_compare",
+        "schema_version": SCHEMA_VERSION,
+        "generated": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
+        "config": {
+            "n_clients": n_clients, "l": l, "q": q, "c": c, "iters": iters,
+            "realizations": realizations, "delta": delta, "psi": psi,
+            "seed": seed, "kernel_backend": kernel_backend,
+        },
+        "profiles": out_profiles,
+    }
+
+
+def write_artifact(result: dict, out_path: str = ARTIFACT_NAME) -> str:
+    with open(out_path, "w") as fh:
+        json.dump(result, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return out_path
+
+
+_SCHEME_FIELDS = ("final_wall_clock_mean", "final_wall_clock_std",
+                  "per_round_mean", "setup_time", "returned_mean",
+                  "host_seconds")
+
+
+def validate_artifact(obj) -> list[str]:
+    """Structural check of the BENCH_fed_training.json artifact.
+
+    `obj` is a dict or a path.  Returns a list of problems (empty == valid)
+    rather than raising, so CI can print every issue at once.
+    """
+    if isinstance(obj, str):
+        try:
+            with open(obj) as fh:
+                obj = json.load(fh)
+        except (OSError, json.JSONDecodeError) as exc:
+            return [f"cannot load artifact: {exc}"]
+    errs = []
+    if not isinstance(obj, dict):
+        return [f"artifact must be a JSON object, got {type(obj).__name__}"]
+    if obj.get("benchmark") != "fed_training_scheme_compare":
+        errs.append(f"bad benchmark id: {obj.get('benchmark')!r}")
+    if obj.get("schema_version") != SCHEMA_VERSION:
+        errs.append(f"bad schema_version: {obj.get('schema_version')!r}")
+    for key in ("generated", "config"):
+        if key not in obj:
+            errs.append(f"missing top-level key {key!r}")
+    profiles = obj.get("profiles")
+    if not isinstance(profiles, dict) or not profiles:
+        return errs + ["missing/empty 'profiles'"]
+    for pname, prof in profiles.items():
+        schemes = prof.get("schemes", {})
+        for scheme in SCHEMES + ("ideal",):
+            entry = schemes.get(scheme)
+            if not isinstance(entry, dict):
+                errs.append(f"{pname}: missing scheme {scheme!r}")
+                continue
+            for field in _SCHEME_FIELDS:
+                val = entry.get(field)
+                if not isinstance(val, (int, float)) or not np.isfinite(val) \
+                        or val < 0:
+                    errs.append(f"{pname}/{scheme}/{field}: bad value {val!r}")
+        if isinstance(schemes.get("coded"), dict) and \
+                schemes["coded"].get("t_star") in (None, 0):
+            errs.append(f"{pname}/coded: t_star missing")
+        for field in ("coded_speedup_vs_naive", "coded_overhead_vs_ideal"):
+            val = prof.get(field)
+            if not isinstance(val, (int, float)) or not np.isfinite(val) \
+                    or val <= 0:
+                errs.append(f"{pname}/{field}: bad value {val!r}")
+    return errs

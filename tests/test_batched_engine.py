@@ -22,12 +22,13 @@ def _data(n=8, l=24, q=32, c=3, seed=0):
     return xs, ys
 
 
-def _run(xs, ys, scheme, engine, iters=25, **fl_kw):
+def _run(xs, ys, scheme, engine, iters=25, kernel_backend="xla", **fl_kw):
     fl = FLConfig(n_clients=xs.shape[0], delta=0.25, psi=0.3, seed=3, **fl_kw)
     tc = TrainConfig(learning_rate=0.5, l2_reg=1e-4,
                      lr_decay_epochs=(10, 18))
     sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme=scheme,
-                                          engine=engine)
+                                          engine=engine,
+                                          kernel_backend=kernel_backend)
     trace = lambda th: (float(np.abs(np.asarray(th)).sum()), 0.0)
     return sim.run(iters, eval_fn=trace, eval_every=1)
 
@@ -44,6 +45,72 @@ def test_batched_matches_legacy_trajectory(scheme):
         np.testing.assert_allclose(hb.wall_clock, hl.wall_clock, rtol=1e-5)
         # per-round theta trace (the eval_fn records |theta|_1 every round)
         np.testing.assert_allclose(hb.loss, hl.loss, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("scheme", ["naive", "greedy", "coded"])
+def test_pallas_backend_matches_xla_and_legacy(scheme):
+    """kernel_backend="pallas" (interpret mode in CI) must reproduce both
+    the XLA batched trajectory and the legacy per-client oracle."""
+    xs, ys = _data()
+    res_p = _run(xs, ys, scheme, "batched", kernel_backend="pallas",
+                 iters=15)
+    res_x = _run(xs, ys, scheme, "batched", kernel_backend="xla", iters=15)
+    res_l = _run(xs, ys, scheme, "legacy", iters=15)
+    np.testing.assert_allclose(np.asarray(res_p.theta),
+                               np.asarray(res_x.theta), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(res_p.theta),
+                               np.asarray(res_l.theta), atol=1e-5)
+    for hp, hx, hl in zip(res_p.history, res_x.history, res_l.history):
+        assert hp.returned == hx.returned == hl.returned
+        np.testing.assert_allclose(hp.wall_clock, hl.wall_clock, rtol=1e-5)
+        # per-round |theta|_1 trace recorded via eval_fn
+        np.testing.assert_allclose(hp.loss, hx.loss, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(hp.loss, hl.loss, rtol=1e-4, atol=1e-5)
+
+
+def test_bad_kernel_backend_raises():
+    xs, ys = _data(n=2)
+    with pytest.raises(ValueError, match="kernel_backend"):
+        fed_runtime.FederatedSimulation(
+            xs, ys, FLConfig(n_clients=2), TrainConfig(),
+            kernel_backend="cuda")
+    with pytest.raises(ValueError, match="alloc_backend"):
+        fed_runtime.FederatedSimulation(
+            xs, ys, FLConfig(n_clients=2), TrainConfig(),
+            alloc_backend="scipy")
+
+
+@pytest.mark.parametrize("kernel_backend", ["xla", "pallas"])
+def test_run_multi_deterministic_across_fresh_sims(kernel_backend):
+    """Two identically-seeded deployments must give bit-identical run_multi
+    surfaces — the determinism contract the Fig. 4/5 bands rely on."""
+    xs, ys = _data(n=5, l=12, q=16, c=2)
+    outs = []
+    for _ in range(2):
+        fl = FLConfig(n_clients=5, delta=0.25, psi=0.3, seed=3)
+        tc = TrainConfig(learning_rate=0.5, l2_reg=0.0)
+        sim = fed_runtime.FederatedSimulation(
+            xs, ys, fl, tc, scheme="coded", kernel_backend=kernel_backend)
+        outs.append(sim.run_multi(8, 3))
+    np.testing.assert_array_equal(outs[0].wall_clock, outs[1].wall_clock)
+    np.testing.assert_array_equal(outs[0].returned, outs[1].returned)
+    np.testing.assert_array_equal(np.asarray(outs[0].theta),
+                                  np.asarray(outs[1].theta))
+
+
+def test_run_multi_pallas_matches_xla():
+    xs, ys = _data(n=5, l=12, q=16, c=2)
+    res = {}
+    for kb in ("xla", "pallas"):
+        fl = FLConfig(n_clients=5, delta=0.25, psi=0.3, seed=3)
+        tc = TrainConfig(learning_rate=0.5, l2_reg=0.0)
+        sim = fed_runtime.FederatedSimulation(
+            xs, ys, fl, tc, scheme="coded", kernel_backend=kb)
+        res[kb] = sim.run_multi(8, 3)
+    np.testing.assert_allclose(res["pallas"].wall_clock,
+                               res["xla"].wall_clock, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(res["pallas"].theta),
+                               np.asarray(res["xla"].theta), atol=1e-5)
 
 
 def test_masked_padded_grads_match_ragged():

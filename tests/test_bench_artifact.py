@@ -1,0 +1,92 @@
+"""Scheme-comparison benchmark harness + BENCH_fed_training.json artifact.
+
+Runs a tiny deployment through `repro.launch.bench` and asserts the artifact
+is written, well-formed, and that the validator actually rejects malformed
+artifacts (the CI smoke step relies on both directions).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.launch import bench as launch_bench
+
+TINY = dict(n_clients=4, l=8, q=12, c=2, iters=5, realizations=2,
+            profiles={"uniform": dict(rate_decay=1.0, mac_decay=1.0),
+                      "paper": dict(rate_decay=0.95, mac_decay=0.8)})
+
+
+@pytest.fixture(scope="module")
+def artifact(tmp_path_factory):
+    result = launch_bench.run_schemes(**TINY)
+    path = tmp_path_factory.mktemp("bench") / "BENCH_fed_training.json"
+    launch_bench.write_artifact(result, str(path))
+    return result, path
+
+
+def test_artifact_written_and_valid(artifact):
+    result, path = artifact
+    assert path.exists()
+    assert launch_bench.validate_artifact(str(path)) == []
+    assert launch_bench.validate_artifact(result) == []
+
+
+def test_artifact_contents(artifact):
+    result, path = artifact
+    loaded = json.loads(path.read_text())
+    assert loaded["benchmark"] == "fed_training_scheme_compare"
+    assert loaded["schema_version"] == launch_bench.SCHEMA_VERSION
+    assert set(loaded["profiles"]) == {"uniform", "paper"}
+    for prof in loaded["profiles"].values():
+        schemes = prof["schemes"]
+        assert set(schemes) == {"coded", "naive", "greedy", "ideal"}
+        # ideal is the deterministic FULL-LOAD floor: naive/greedy cannot
+        # beat it (coded can — its clients process reduced loads)
+        ideal = schemes["ideal"]["final_wall_clock_mean"]
+        for s in ("naive", "greedy"):
+            assert schemes[s]["final_wall_clock_mean"] >= ideal - 1e-9
+        assert schemes["coded"]["t_star"] > 0
+        assert prof["coded_speedup_vs_naive"] > 0
+        assert prof["coded_overhead_vs_ideal"] > 0
+
+
+def test_ideal_round_time_is_naive_lower_bound(artifact):
+    """E[naive round] can never beat the deterministic ideal round."""
+    result, _ = artifact
+    for prof in result["profiles"].values():
+        naive = prof["schemes"]["naive"]
+        ideal = prof["schemes"]["ideal"]
+        assert naive["per_round_mean"] >= ideal["per_round_mean"] - 1e-9
+
+
+@pytest.mark.parametrize("mutate,frag", [
+    (lambda d: d.pop("profiles"), "profiles"),
+    (lambda d: d.update(schema_version=99), "schema_version"),
+    (lambda d: d["profiles"]["uniform"]["schemes"].pop("ideal"), "ideal"),
+    (lambda d: d["profiles"]["uniform"]["schemes"]["coded"].update(
+        final_wall_clock_mean=float("nan")), "final_wall_clock_mean"),
+    (lambda d: d["profiles"]["uniform"].update(
+        coded_speedup_vs_naive=-1.0), "coded_speedup_vs_naive"),
+])
+def test_validator_rejects_malformed(artifact, mutate, frag):
+    result, _ = artifact
+    broken = json.loads(json.dumps(result))   # deep copy
+    mutate(broken)
+    problems = launch_bench.validate_artifact(broken)
+    assert problems, "validator accepted a malformed artifact"
+    assert any(frag in p for p in problems)
+
+
+def test_validator_rejects_garbage(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert launch_bench.validate_artifact(str(bad))
+    assert launch_bench.validate_artifact([1, 2, 3])
+    assert launch_bench.validate_artifact(str(tmp_path / "missing.json"))
+
+
+def test_cli_validate_roundtrip(artifact, capsys):
+    from benchmarks import bench_scheme_compare as cli
+    _, path = artifact
+    assert cli.main(["--validate", str(path)]) == 0
+    assert cli.main(["--validate", str(path) + ".nope"]) == 1

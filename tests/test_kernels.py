@@ -1,9 +1,18 @@
-"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles in ref.py."""
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles in ref.py.
+
+Every Pallas kernel (interpret mode on CPU) is asserted allclose against
+the jnp oracle of the same name across shapes, dtypes (f32/bf16), padded
+q_true, and ragged validity masks.  Marked `kernels` so CI can run the
+kernel/property job separately from the system suite.
+"""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+
+pytestmark = pytest.mark.kernels
 
 RNG = np.random.default_rng(42)
 
@@ -57,6 +66,141 @@ def test_parity_encode(u, l, q):
     denom = max(float(jnp.abs(want).max()), 1.0)
     np.testing.assert_allclose(np.asarray(got) / denom,
                                np.asarray(want) / denom, atol=3e-5)
+
+
+# n, l, q, c — deliberately non-divisible shapes to exercise the padding
+SHAPES_MASKED = [(4, 128, 128, 8), (3, 100, 70, 3), (6, 257, 130, 1),
+                 (1, 64, 300, 5)]
+
+
+@pytest.mark.parametrize("n,l,q,c", SHAPES_MASKED)
+def test_linreg_grad_masked(n, l, q, c):
+    """Batched masked kernel == per-client masked jnp oracle, ragged masks."""
+    x = _arr((n, l, q), scale=0.3)
+    theta = _arr((q, c), scale=0.3)
+    y = _arr((n, l, c))
+    # ragged validity: client j keeps a random prefix-free subset of rows
+    mask = jnp.asarray((RNG.uniform(size=(n, l)) < 0.6).astype(np.float32))
+    got = ops.linreg_grad_masked(x, theta, y, mask, use_pallas=True)
+    want = ops.linreg_grad_masked(x, theta, y, mask)
+    denom = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got) / denom,
+                               np.asarray(want) / denom, atol=3e-5)
+    # and the jnp fallback against the scalar oracle, client by client
+    for j in range(n):
+        single = ref.linreg_grad_masked(x[j], theta, y[j], mask[j])
+        np.testing.assert_allclose(np.asarray(want[j]), np.asarray(single),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_linreg_grad_masked_ignores_unzeroed_padding():
+    """Rows with mask 0 contribute nothing even when x/y are NOT pre-zeroed."""
+    n, l, q, c = 3, 40, 24, 2
+    x = _arr((n, l, q), scale=0.5)
+    theta = _arr((q, c), scale=0.5)
+    y = _arr((n, l, c))
+    keep = np.zeros((n, l), np.float32)
+    keep[:, : l // 2] = 1.0
+    mask = jnp.asarray(keep)
+    for use_pallas in (False, True):
+        got = ops.linreg_grad_masked(x, theta, y, mask,
+                                     use_pallas=use_pallas)
+        want = jnp.stack([ref.linreg_grad(x[j, : l // 2], theta,
+                                          y[j, : l // 2])
+                          for j in range(n)])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_linreg_grad_masked_matches_batched_all_ones():
+    """All-ones mask reduces the masked kernel to the plain batched path."""
+    n, l, q, c = 4, 60, 40, 4
+    x = _arr((n, l, q), scale=0.3)
+    theta = _arr((q, c), scale=0.3)
+    y = _arr((n, l, c))
+    ones = jnp.ones((n, l), jnp.float32)
+    a = ops.linreg_grad_masked(x, theta, y, ones, use_pallas=True)
+    b = ops.linreg_grad_batched(x, theta, y, use_pallas=True)
+    cpl = ops.linreg_grad_batched(x, theta, y)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(cpl),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_linreg_grad_masked_bf16():
+    n, l, q, c = 2, 128, 128, 4
+    x = _arr((n, l, q), jnp.bfloat16, scale=0.3)
+    theta = _arr((q, c), jnp.bfloat16, scale=0.3)
+    y = _arr((n, l, c), jnp.bfloat16)
+    mask = jnp.asarray((RNG.uniform(size=(n, l)) < 0.5), jnp.bfloat16)
+    got = ops.linreg_grad_masked(x, theta, y, mask, use_pallas=True)
+    want = ops.linreg_grad_masked(x, theta, y, mask)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=0.5, rtol=0.1)
+
+
+def test_linreg_grad_c_too_wide_raises_clear_error():
+    """Satellite: c that cannot fit a VMEM tile must raise a clear error,
+    not an opaque Pallas shape assert."""
+    x = jnp.zeros((128, 128), jnp.float32)
+    wide = 300_000
+    theta = jnp.zeros((128, wide), jnp.float32)
+    y = jnp.zeros((128, wide), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM"):
+        ops.linreg_grad(x, theta, y, use_pallas=True)
+    with pytest.raises(ValueError, match="VMEM"):
+        ops.linreg_grad_masked(x[None], theta, y[None],
+                               jnp.ones((1, 128), jnp.float32),
+                               use_pallas=True)
+
+
+def test_rff_embed_padded_q_true():
+    """Zero-padding q must keep the sqrt(2/q_true) scale of the real q."""
+    from repro.kernels.rff_embed import rff_embed as kernel
+    m, d, q = 128, 128, 100
+    x = _arr((m, d))
+    omega = _arr((d, q))
+    delta = jnp.asarray(RNG.uniform(0, 2 * np.pi, size=(q,)), jnp.float32)
+    want = ref.rff_embed(x, omega, delta)
+    # ops-level padding path (pads q 100 -> 128 and passes q_true=100)
+    got = ops.rff_embed(x, omega, delta, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # direct kernel call on hand-padded operands
+    op = jnp.pad(omega, ((0, 0), (0, 28)))
+    dp = jnp.pad(delta, (0, 28))
+    direct = kernel(x, op, dp, q_true=q)[:, :q]
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # omitting q_true silently rescales by sqrt(q_true/q_pad) — make sure
+    # the guard actually matters
+    wrong = kernel(x, op, dp)[:, :q]
+    assert not np.allclose(np.asarray(wrong), np.asarray(want), atol=1e-3)
+
+
+def test_rff_embed_batched_matches_vmapped_oracle():
+    n, l, d, q = 3, 50, 33, 70
+    x = _arr((n, l, d))
+    omega = _arr((d, q))
+    delta = jnp.asarray(RNG.uniform(0, 2 * np.pi, size=(q,)), jnp.float32)
+    got = ops.rff_embed_batched(x, omega, delta, use_pallas=True)
+    want = jax.vmap(lambda xj: ref.rff_embed(xj, omega, delta))(x)
+    assert got.shape == (n, l, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_parity_encode_bf16():
+    u, l, q = 128, 128, 128
+    g = _arr((u, l), jnp.bfloat16)
+    w = jnp.asarray(RNG.uniform(0.2, 1.0, size=(l,)), jnp.bfloat16)
+    x = _arr((l, q), jnp.bfloat16, scale=0.5)
+    got = ops.parity_encode(g, w, x, use_pallas=True)
+    want = ref.parity_encode(g, w, x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=0.6, rtol=0.1)
 
 
 DECODE_SHAPES = [

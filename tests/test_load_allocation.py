@@ -115,3 +115,105 @@ class TestTwoStep:
         clients = [NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=0.1)]
         with pytest.raises(ValueError):
             la.two_step_allocate(clients, [10.0], None, u_max=1.0, m=100.0)
+
+
+def _population(n, seed, p_max=0.5):
+    rng = np.random.default_rng(seed)
+    return [NodeDelayParams(mu=float(rng.uniform(1, 10)),
+                            alpha=float(rng.uniform(0.5, 5)),
+                            tau=float(rng.uniform(0.01, 0.3)),
+                            p=float(rng.uniform(0, p_max)))
+            for _ in range(n)]
+
+
+class TestVectorizedSolver:
+    """Vectorized fixed-iteration JAX solver vs the scalar NumPy oracle."""
+
+    def test_step1_matches_scalar_node_for_node(self):
+        clients = _population(40, seed=7)
+        caps = [40.0] * 40
+        for t in (0.5, 2.5, 8.0):
+            lv, rv = la.vectorized_optimal_loads(clients, t, caps)
+            for j, nd in enumerate(clients):
+                l_s, r_s = la.optimal_load(nd, t, caps[j])
+                assert abs(lv[j] - l_s) < 1e-6 * (1.0 + caps[j])
+                assert abs(rv[j] - r_s) < 1e-6 * (1.0 + r_s)
+
+    def test_step1_matches_lambert_w_closed_form_at_p0(self):
+        """p=0 must reproduce the AWGN Lambert-W closed form (eq. 34/35)."""
+        awgn = _population(12, seed=3, p_max=0.0)
+        caps = [25.0] * 12
+        for t in (0.2, 1.0, 4.0, 15.0):
+            lv, rv = la.vectorized_optimal_loads(awgn, t, caps)
+            for j, nd in enumerate(awgn):
+                l_c = la.awgn_optimal_load(nd, t, caps[j])
+                r_c = la.awgn_optimal_return(nd, t, caps[j])
+                assert abs(lv[j] - l_c) < 1e-6 * (1.0 + caps[j])
+                assert abs(rv[j] - r_c) < 1e-6 * (1.0 + r_c)
+
+    def test_two_step_matches_scalar(self):
+        clients = _population(10, seed=11)
+        caps = [30.0] * 10
+        m = 10 * 30.0
+        a_s = la.two_step_allocate(clients, caps, None, 0.2 * m, m)
+        a_v = la.two_step_allocate_vectorized(clients, caps, None,
+                                              0.2 * m, m)
+        # scalar bisection stops at tol=1e-6*(1+t); the vectorized root is
+        # tighter, so agreement is bounded by the scalar's own tolerance
+        assert abs(a_v.t_star - a_s.t_star) <= 2e-6 * (1.0 + a_s.t_star)
+        np.testing.assert_allclose(a_v.loads, a_s.loads,
+                                   atol=1e-4, rtol=1e-4)
+        assert abs(a_v.total_return - m) < 1e-2 * m
+        # node-for-node at the SAME deadline: within 1e-6
+        lv, _ = la.vectorized_optimal_loads(clients, a_v.t_star, caps)
+        for j, nd in enumerate(clients):
+            l_s, _ = la.optimal_load(nd, a_v.t_star, caps[j])
+            assert abs(lv[j] - l_s) < 1e-6 * (1.0 + caps[j])
+
+    def test_two_step_with_server_node(self):
+        """The n+1-th (MEC server) node is solved in the same call."""
+        clients = [NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=0.1)
+                   for _ in range(4)]
+        server = NodeDelayParams(mu=500.0, alpha=20.0, tau=0.001, p=0.01)
+        m = 4 * 20.0
+        a_s = la.two_step_allocate(clients, [20.0] * 4, server,
+                                   u_max=0.5 * m, m=m)
+        a_v = la.two_step_allocate_vectorized(clients, [20.0] * 4, server,
+                                              u_max=0.5 * m, m=m)
+        assert abs(a_v.t_star - a_s.t_star) <= 2e-6 * (1.0 + a_s.t_star)
+        assert abs(a_v.u_star - a_s.u_star) < 1e-4 * (1.0 + a_s.u_star)
+        assert abs(a_v.coded_return - a_s.coded_return) < 1e-4
+        assert a_v.loads.shape == (4,)
+
+    def test_thousand_nodes_single_jitted_call(self):
+        """n >= 1000 heterogeneous nodes in one fixed-iteration jitted solve."""
+        n = 1000
+        clients = _population(n, seed=5, p_max=0.1)
+        caps = [40.0] * n
+        m = float(n * 40.0)
+        alloc = la.two_step_allocate_vectorized(
+            clients, caps, None, u_max=0.2 * m, m=m, t_hi=8.0, n_bisect=44)
+        assert alloc.t_star > 0
+        assert alloc.loads.shape == (n,)
+        assert np.all(alloc.loads >= -1e-9)
+        assert np.all(alloc.loads <= 40.0 + 1e-6)
+        assert abs(alloc.total_return - m) < 1e-4 * m
+        # spot-check a handful of nodes against the scalar oracle at t*
+        for j in (0, 123, 456, 789, 999):
+            l_s, _ = la.optimal_load(clients[j], alloc.t_star, 40.0)
+            assert abs(alloc.loads[j] - l_s) < 1e-6 * 41.0
+
+    def test_infeasible_raises(self):
+        clients = [NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=0.1)]
+        with pytest.raises(ValueError, match="infeasible"):
+            la.two_step_allocate_vectorized(clients, [10.0], None,
+                                            u_max=1.0, m=100.0)
+
+    def test_asymmetric_links_rejected(self):
+        nd = NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=0.1,
+                             tau_up=0.1)
+        with pytest.raises(ValueError, match="symmetric"):
+            la.two_step_allocate_vectorized([nd], [10.0], None,
+                                            u_max=5.0, m=8.0)
+        with pytest.raises(ValueError, match="symmetric"):
+            la.vectorized_optimal_loads([nd], 1.0, [10.0])

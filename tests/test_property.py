@@ -1,7 +1,8 @@
 """Hypothesis property-based tests on system invariants.
 
 Degrades to a pytest skip (not a collection error) when `hypothesis` is not
-installed in the environment.
+installed in the environment.  Marked `kernels` so the CI kernel/property
+job picks these up alongside the kernel oracle-equivalence sweeps.
 """
 import math
 
@@ -14,6 +15,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core import load_allocation as la
 from repro.core.delay_model import NodeDelayParams
 from repro.core import encoding
+
+pytestmark = pytest.mark.kernels
 
 node_st = st.builds(
     NodeDelayParams,
@@ -75,6 +78,56 @@ def test_two_step_meets_target_return(n, cap, delta, seed):
     assert abs(alloc.total_return - m) <= 1e-2 * m
     assert np.all(alloc.loads >= -1e-12)
     assert np.all(alloc.loads <= cap + 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(node_st, min_size=1, max_size=8),
+       st.floats(0.3, 20.0), st.floats(1.0, 60.0))
+def test_vectorized_step1_matches_scalar_node_for_node(nodes, t, cap):
+    """The jitted vectorized step-1 solver == the scalar golden-section
+    loop, node for node, on randomized populations."""
+    caps = [cap] * len(nodes)
+    lv, rv = la.vectorized_optimal_loads(nodes, t, caps)
+    for j, nd in enumerate(nodes):
+        l_s, r_s = la.optimal_load(nd, t, cap)
+        assert abs(lv[j] - l_s) <= 1e-6 * (1.0 + cap)
+        assert abs(rv[j] - r_s) <= 1e-6 * (1.0 + r_s)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.5, 50.0), st.floats(0.2, 30.0), st.floats(0.01, 2.0),
+       st.floats(0.3, 20.0), st.floats(1.0, 60.0))
+def test_vectorized_step1_matches_lambert_w_at_p0(mu, alpha, tau, t, cap):
+    """At p = 0 the vectorized solver must reproduce the AWGN Lambert-W
+    closed form (paper eq. 34/35, Appendix D)."""
+    nd = NodeDelayParams(mu=mu, alpha=alpha, tau=tau, p=0.0)
+    lv, rv = la.vectorized_optimal_loads([nd], t, [cap])
+    l_c = la.awgn_optimal_load(nd, t, cap)
+    r_c = la.awgn_optimal_return(nd, t, cap)
+    assert abs(lv[0] - l_c) <= 1e-6 * (1.0 + cap)
+    assert abs(rv[0] - r_c) <= 1e-6 * (1.0 + r_c)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 8), st.integers(5, 25),
+       st.floats(0.05, 0.4), st.integers(0, 10_000))
+def test_vectorized_two_step_matches_scalar(n, cap, delta, seed):
+    """Full two-step: vectorized t* within the scalar bisection tolerance,
+    and the total expected return still hits m."""
+    rng = np.random.default_rng(seed)
+    clients = [NodeDelayParams(mu=float(rng.uniform(1, 10)), alpha=2.0,
+                               tau=float(rng.uniform(0.01, 0.5)),
+                               p=float(rng.uniform(0, 0.5)))
+               for _ in range(n)]
+    m = float(n * cap)
+    a_s = la.two_step_allocate(clients, [float(cap)] * n, None,
+                               u_max=delta * m, m=m)
+    a_v = la.two_step_allocate_vectorized(clients, [float(cap)] * n, None,
+                                          u_max=delta * m, m=m)
+    assert abs(a_v.t_star - a_s.t_star) <= 2e-6 * (1.0 + a_s.t_star)
+    assert abs(a_v.total_return - m) <= 1e-2 * m
+    assert np.all(a_v.loads >= -1e-12)
+    assert np.all(a_v.loads <= cap + 1e-6)
 
 
 @settings(max_examples=20, deadline=None)
