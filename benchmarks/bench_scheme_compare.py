@@ -28,9 +28,12 @@ _SCALES = {
 
 
 def run(out_path: str = launch_bench.ARTIFACT_NAME, scale: str = "default",
-        kernel_backend: str = "xla"):
+        kernel_backend: str = "xla", engine: str = "sweep",
+        measure_loop: bool = True):
     """Run the comparison, write the artifact, return CSV rows."""
     result = launch_bench.run_schemes(kernel_backend=kernel_backend,
+                                      engine=engine,
+                                      measure_loop=measure_loop,
                                       **_SCALES[scale])
     launch_bench.write_artifact(result, out_path)
     problems = launch_bench.validate_artifact(out_path)
@@ -47,6 +50,12 @@ def run(out_path: str = launch_bench.ARTIFACT_NAME, scale: str = "default",
         rows.append((f"fed_compare_{pname}_speedup", 0.0,
                      f"vs_naive={prof['coded_speedup_vs_naive']:.2f}x;"
                      f"vs_ideal={prof['coded_overhead_vs_ideal']:.2f}x"))
+    sweep = result.get("sweep")
+    if sweep:
+        derived = (f"loop={sweep['loop_host_seconds']:.2f}s;"
+                   f"speedup={sweep['speedup']:.2f}x"
+                   if sweep.get("speedup") else "loop=unmeasured")
+        rows.append(("fed_sweep_grid", sweep["host_seconds"] * 1e6, derived))
     return rows
 
 
@@ -59,6 +68,12 @@ def main(argv=None) -> int:
                     help="paper-scale run")
     ap.add_argument("--kernel-backend", default="xla",
                     choices=("xla", "pallas"))
+    ap.add_argument("--engine", default="sweep", choices=("sweep", "loop"),
+                    help="compiled (profile x realization) sweep per scheme "
+                         "(default) or the pre-sweep per-profile loop")
+    ap.add_argument("--no-loop-baseline", action="store_true",
+                    help="skip timing the looped path (sweep engine only); "
+                         "the artifact then omits the measured speedup")
     ap.add_argument("--validate", metavar="PATH",
                     help="validate an existing artifact and exit")
     args = ap.parse_args(argv)
@@ -74,7 +89,9 @@ def main(argv=None) -> int:
 
     scale = "full" if args.full else ("smoke" if args.smoke else "default")
     for name, us, derived in run(args.out, scale=scale,
-                                 kernel_backend=args.kernel_backend):
+                                 kernel_backend=args.kernel_backend,
+                                 engine=args.engine,
+                                 measure_loop=not args.no_loop_baseline):
         print(f"{name},{us:.1f},{derived}")
     print(f"wrote {args.out}")
     return 0

@@ -50,6 +50,41 @@ def masked_gradient_sum(client_grads, returned_mask):
     return jnp.sum(client_grads * mask, axis=0)
 
 
+def fused_client_parity_tensors(sub_x, sub_y, mask, parity_x, parity_y, *,
+                                pnr_c: float = 0.0,
+                                l_target: int | None = None):
+    """Append the global parity set as an (n+1)-th pseudo-client row.
+
+    sub_x: (n, l_max, q), sub_y: (n, l_max, c), mask: (n, l_max) validity;
+    parity_x: (u, q), parity_y: (u, c).  Returns (fx, fy, fmask) of shapes
+    ((n+1, L, q), (n+1, L, c), (n+1, L)) with L = max(l_max, u, l_target).
+
+    The coded-gradient scale 1/(u (1-pnr_C)) (eq. 28, incl. the G^T G / u
+    concentration of eq. 31) is folded into the parity row's mask entries:
+    `linreg_grad_masked` multiplies the residual by the mask, so the parity
+    row yields  Xv^T ((Xv theta - Yv) / (u (1-pnr_C)))  — exactly the coded
+    gradient — from the SAME kernel call that produces the n client
+    gradients.  Zero-mask padding contributes exactly nothing, so rows of
+    different true lengths tile together.  `l_target` pads L further so
+    deployments with different loads stack along a sweep axis.
+    """
+    n, l_max, q = sub_x.shape
+    c = sub_y.shape[-1]
+    u = parity_x.shape[0]
+    L = max(l_max, u, l_target or 1)
+    fx = jnp.zeros((n + 1, L, q), sub_x.dtype)
+    fy = jnp.zeros((n + 1, L, c), sub_y.dtype)
+    # the mask must be floating so the fractional parity scale survives —
+    # a bool/int validity mask would truncate 1/u to 1 or 0
+    mask = jnp.asarray(mask, sub_x.dtype)
+    fmask = jnp.zeros((n + 1, L), mask.dtype)
+    fx = fx.at[:n, :l_max].set(sub_x).at[n, :u].set(parity_x)
+    fy = fy.at[:n, :l_max].set(sub_y).at[n, :u].set(parity_y)
+    scale = 1.0 / (u * (1.0 - pnr_c))
+    fmask = fmask.at[:n, :l_max].set(mask).at[n, :u].set(scale)
+    return fx, fy, fmask
+
+
 def client_gradient(x, y, theta, *, use_pallas: bool = False):
     """Unnormalized partial gradient X^T (X theta - Y) over processed points."""
     return ops.linreg_grad(x, theta, y, use_pallas=use_pallas)

@@ -61,23 +61,34 @@ def encode_local(key, x_hat, y, w, u: int, *, kind: str = "normal",
 
 def encode_local_batched(keys, x_stack, y_stack, w_stack, u: int, *,
                          kind: str = "normal",
-                         use_pallas: bool = False) -> LocalParity:
-    """All-clients parity encode in one vmapped call.
+                         use_pallas: bool = False,
+                         interpret: bool = True) -> LocalParity:
+    """All-clients parity encode in one batched call.
 
     keys: (n,) stacked PRNG keys (one per client, identical to what a
     sequential `jax.random.split` chain would hand each client, so the
     parity sets match `encode_local` exactly);
     x_stack: (n, l, q); y_stack: (n, l, c); w_stack: (n, l).
     Returns stacked LocalParity with x: (n, u, q), y: (n, u, c).
+
+    The jnp path vmaps the reference encode; `use_pallas` runs the whole
+    population through ONE tiled `parity_encode_batched` kernel launch per
+    array (client axis = outermost grid dim) — bit-identical to a
+    per-client `encode_local` loop, without its n Python-level kernel
+    launches and padding rounds.
     """
+    l = x_stack.shape[1]
     if use_pallas:
-        # Pallas kernels carry their own padding logic; keep the per-client
-        # loop on that path rather than vmapping through pallas_call.
-        parities = [encode_local(keys[j], x_stack[j], y_stack[j],
-                                 w_stack[j], u, kind=kind, use_pallas=True)
-                    for j in range(x_stack.shape[0])]
-        return LocalParity(x=jnp.stack([p.x for p in parities]),
-                           y=jnp.stack([p.y for p in parities]))
+        g_stack = jax.vmap(
+            lambda k: generator_matrix(k, u, l, kind))(keys)
+        w_stack = jnp.asarray(w_stack)
+        px = ops.parity_encode_batched(g_stack, w_stack,
+                                       jnp.asarray(x_stack),
+                                       use_pallas=True, interpret=interpret)
+        py = ops.parity_encode_batched(g_stack, w_stack,
+                                       jnp.asarray(y_stack),
+                                       use_pallas=True, interpret=interpret)
+        return LocalParity(x=px, y=py)
 
     def one(key, x, y, w):
         g = generator_matrix(key, u, x.shape[0], kind)

@@ -17,10 +17,15 @@ Engines
 training loop as one compiled program:
 
   * per-client processed subsets are padded to a dense ``(n, l_max, q)``
-    tensor with a validity mask (zero rows contribute exactly zero to the
-    linear-regression gradient), so all n client gradients come from a
-    single vmapped call;
-  * the coded-gradient contribution is fused into the same update;
+    tensor with a validity mask (rows with mask 0 contribute exactly zero to
+    the linear-regression gradient), so all n client gradients come from a
+    single call;
+  * the coded scheme appends the global parity set as an (n+1)-th
+    *pseudo-client row* of that tensor, with the 1/(u (1-pnr_C)) coded-
+    gradient scale folded into its mask entries — client gradients AND the
+    coded gradient come from ONE masked-kernel call per round
+    (``fused_coded=False`` keeps the historical two-call path as the
+    numerical oracle);
   * round delays for the *entire run* are pre-sampled with the vectorized
     ``delay_model.sample_round_times`` API (3 RNG draws total instead of
     ``iterations * n`` Python-level calls);
@@ -34,12 +39,25 @@ to fp32 tolerance (see tests/test_batched_engine.py).
 ``kernel_backend`` selects how the batched engine computes gradients:
 ``"xla"`` (default) is the plain-jnp vmapped path; ``"pallas"`` routes every
 per-round gradient through the fused Pallas kernels
-(``kernels.linreg_grad_masked`` over the dense padded client tensor, the
-tiled ``linreg_grad`` for the coded parity set) — interpret mode off-TPU,
-compiled on TPU.  Both backends produce the same trajectory to fp32
-tolerance.  ``alloc_backend`` picks the deadline/load optimizer: the scalar
-NumPy two-step solver or the vectorized fixed-iteration JAX solver
-(``"auto"`` chooses by population size).
+(``kernels.linreg_grad_masked`` over the dense padded client tensor —
+interpret mode off-TPU, compiled on TPU).  Both backends produce the same
+trajectory to fp32 tolerance.  ``alloc_backend`` picks the deadline/load
+optimizer: the scalar NumPy two-step solver or the vectorized
+fixed-iteration JAX solver (``"auto"`` chooses by population size).
+
+Client-mesh mode
+----------------
+``FederatedSimulation(..., mesh=k)`` (an int, or a 1-D ``jax.sharding.Mesh``
+with a single ``"clients"`` axis) partitions the dense client tensor, the
+per-round returned mask, and the per-shard gradient computation over the
+mesh with ``shard_map``; each device computes its local clients' gradients
+and the shards are reduced with a ``psum`` — structurally mirroring the MEC
+server aggregation in paper §III.  The client axis is zero-row padded up to
+a multiple of the mesh size (padded rows carry an all-zero mask, so they
+contribute exactly nothing).  CI-testable on CPU via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; the sharded engine
+reproduces the single-device trajectory to fp32 tolerance at any device
+count (tests/test_sharded_engine.py).
 
 Multi-realization mode
 ----------------------
@@ -47,6 +65,9 @@ Multi-realization mode
 stack of independent delay realizations (same deployment, fresh network
 draws), producing the Fig. 4/5 wall-clock curves *with confidence bands* in
 one compiled call — ``MultiFedResult.wall_clock`` is ``(R, iterations)``.
+For sweeps over many deployments sharing shapes, ``repro.launch.sweep``
+stacks the per-deployment constants built here and vmaps the same step over
+the (profile x realization) grid in one compiled call per scheme.
 """
 from __future__ import annotations
 
@@ -57,11 +78,16 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.config import FLConfig, RFFConfig, TrainConfig
 from repro.core import aggregation, encoding, load_allocation
 from repro.core.delay_model import (NodeDelayParams, mec_network, packet_bits,
                                     sample_round_times, scale_tau)
+
+#: name of the client-partitioned mesh axis (see `repro.launch.mesh`)
+CLIENT_AXIS = "clients"
 
 
 # jitted once at module level so the legacy oracle keeps the same compiled
@@ -109,13 +135,126 @@ class MultiFedResult:
         return (self.wall_clock.mean(axis=0), self.wall_clock.std(axis=0))
 
 
+# ---------------------------------------------------------------------------
+# Scheme step: a module-level factory so the single-run scan, run_multi, and
+# the compiled sweep engine (repro.launch.sweep) all execute the *same*
+# per-round math.  Per-deployment arrays live in a `consts` dict (a pytree
+# vmappable over a profile axis); everything Python-static lives in `static`.
+# ---------------------------------------------------------------------------
+
+def _make_grad_sum(static: dict):
+    """g_sum(gx, gy, gmask, ret, theta) -> (q, c) returned-masked gradient sum.
+
+    Single-device: one masked-kernel call over the whole client tensor.
+    Mesh mode: the same call per client shard inside `shard_map`, reduced
+    with a psum over the `clients` axis (the MEC server aggregation).
+    """
+    use_pallas = static["use_pallas"]
+    interpret = static["interpret"]
+    mesh: Optional[Mesh] = static["mesh"]
+
+    def local(gx, gy, gmask, ret, theta):
+        g = aggregation.batched_client_gradients(
+            gx, gy, theta, mask=gmask, use_pallas=use_pallas,
+            interpret=interpret)
+        return aggregation.masked_gradient_sum(g, ret)
+
+    if mesh is None:
+        return local
+
+    def shard(gx, gy, gmask, ret, theta):
+        return jax.lax.psum(local(gx, gy, gmask, ret, theta), CLIENT_AXIS)
+
+    # check_rep=False: pallas_call has no replication rule; correctness is
+    # covered by the psum (out is explicitly replicated by the reduction).
+    return shard_map(
+        shard, mesh=mesh,
+        in_specs=(P(CLIENT_AXIS), P(CLIENT_AXIS), P(CLIENT_AXIS),
+                  P(CLIENT_AXIS), P()),
+        out_specs=P(), check_rep=False)
+
+
+def build_step(static: dict):
+    """One scan step ``step(consts, theta, (t_row, lr))``.
+
+    `static` (Python-level, fixed at trace time): scheme, n, n_wait, l2, m,
+    l, fused, mesh, use_pallas, interpret, collect_theta.
+    `consts` (arrays, vmappable): gx (rows, L, q), gy (rows, L, c), gmask
+    (rows, L), ret_tail (rows - n,); coded adds t_star (), active (n,) and —
+    when unfused — par_x (u, q) / par_y (u, c).
+
+    Scheme dispatch is static, so each scheme compiles to a straight-line
+    fused update.
+    """
+    scheme = static["scheme"]
+    n = static["n"]
+    n_wait = static["n_wait"]
+    l2 = static["l2"]
+    m = static["m"]
+    l = static["l"]
+    fused = static["fused"]
+    collect_theta = static["collect_theta"]
+    use_pallas = static["use_pallas"]
+    interpret = static["interpret"]
+    grad_sum = _make_grad_sum(static)
+
+    def step(consts, theta, inp):
+        t_row, lr = inp
+        if scheme == "naive":
+            n_ret = jnp.int32(n)
+            t_round = jnp.max(t_row)
+            ret_real = jnp.ones_like(t_row)
+            denom = m
+        elif scheme == "greedy":
+            t_round = jnp.sort(t_row)[n_wait - 1]
+            ret_real = (t_row <= t_round).astype(t_row.dtype)
+            n_ret = jnp.sum(ret_real).astype(jnp.int32)
+            denom = n_ret.astype(jnp.float32) * l
+        elif scheme == "coded":
+            t_star = consts["t_star"]
+            t_round = t_star
+            by_deadline = (t_row <= t_star).astype(t_row.dtype)
+            n_ret = jnp.sum(by_deadline).astype(jnp.int32)
+            ret_real = by_deadline * consts["active"]
+            denom = m
+        else:
+            raise ValueError(scheme)
+        # ret_tail covers the pseudo-client rows: the always-active parity
+        # row (fused coded) and any zero-mask mesh padding rows.
+        ret = jnp.concatenate([ret_real.astype(jnp.float32),
+                               consts["ret_tail"]])
+        g_sum = grad_sum(consts["gx"], consts["gy"], consts["gmask"], ret,
+                         theta)
+        if scheme == "coded" and not fused:
+            g_sum = g_sum + aggregation.coded_gradient(
+                consts["par_x"], consts["par_y"], theta, pnr_c=0.0,
+                use_pallas=use_pallas, interpret=interpret)
+        theta_new = theta - lr * (g_sum / denom + l2 * theta)
+        out = (t_round, n_ret)
+        if collect_theta:
+            out = out + (theta_new,)
+        return theta_new, out
+
+    return step
+
+
+def _pad_rows(arr: jnp.ndarray, rows: int) -> jnp.ndarray:
+    """Zero-pad the leading (client) axis up to `rows`."""
+    extra = rows - arr.shape[0]
+    if extra == 0:
+        return arr
+    return jnp.pad(arr, ((0, extra),) + ((0, 0),) * (arr.ndim - 1))
+
+
 class FederatedSimulation:
     """Simulates one FL deployment: n clients + MEC server, one scheme.
 
     Clients hold equally sized local minibatches of RFF-transformed data
     (x_stack: (n, l, q), y_stack: (n, l, c)); the delay network follows
     paper §V-A.  ``engine`` selects the compiled batched scan loop
-    ("batched", default) or the per-client Python oracle ("legacy").
+    ("batched", default) or the per-client Python oracle ("legacy");
+    ``mesh`` (int or a 1-D "clients" Mesh) shards the batched engine's
+    client axis over devices.
     """
 
     def __init__(self, x_stack, y_stack, fl_cfg: FLConfig,
@@ -125,7 +264,9 @@ class FederatedSimulation:
                  secure_aggregation: bool = False,
                  engine: str = "batched",
                  kernel_backend: str = "xla",
-                 alloc_backend: str = "auto"):
+                 alloc_backend: str = "auto",
+                 mesh: "Mesh | int | None" = None,
+                 fused_coded: bool = True):
         if engine not in ("batched", "legacy"):
             raise ValueError(f"unknown engine {engine!r}")
         if kernel_backend not in ("xla", "pallas"):
@@ -142,6 +283,8 @@ class FederatedSimulation:
         self.kernel_backend = kernel_backend
         self.alloc_backend = alloc_backend
         self._interpret = jax.default_backend() != "tpu"
+        self.mesh = self._resolve_mesh(mesh)
+        self.fused_coded = fused_coded
         self.secure_aggregation = secure_aggregation
         self.scheme = scheme or fl_cfg.scheme
         self.fl = fl_cfg
@@ -167,6 +310,20 @@ class FederatedSimulation:
         self._scan_cache: dict = {}
         if self.scheme == "coded":
             self._setup_coded()
+        self._consts = None     # built lazily on first run/run_multi
+
+    @staticmethod
+    def _resolve_mesh(mesh) -> Optional[Mesh]:
+        if mesh is None:
+            return None
+        if isinstance(mesh, int):
+            from repro.launch.mesh import make_client_mesh
+            mesh = make_client_mesh(mesh)
+        if tuple(mesh.axis_names) != (CLIENT_AXIS,):
+            raise ValueError(
+                f"mesh must have exactly one axis named {CLIENT_AXIS!r}, "
+                f"got {mesh.axis_names}")
+        return mesh
 
     # ------------------------------------------------------------- coded setup
     def _pick_alloc_backend(self) -> str:
@@ -195,24 +352,39 @@ class FederatedSimulation:
         self.p_return = np.array([
             nd.cdf(self.t_star, float(ld)) if ld > 0 else 0.0
             for nd, ld in zip(self.nodes, self.loads)])
-        # sample the processed subsets + weight matrices; the subkey chain
-        # reproduces what a sequential per-client split would hand out, so
-        # the batched encode below is bit-identical to the per-client one
-        key = jax.random.PRNGKey(self.fl.seed + 99)
-        subkeys = []
-        self.processed_idx = []
-        w_stack = np.empty((self.n, self.l), np.float32)
-        for j in range(self.n):
-            idx = self.rng.permutation(self.l)[: self.loads[j]]
-            self.processed_idx.append(np.sort(idx))
-            w_stack[j] = encoding.weight_vector(
-                self.l, idx, float(self.p_return[j]))
+        # Processed-subset sampling v2 (vectorized): one `rng.permuted` draw
+        # over an (n, l) index matrix replaces the per-client
+        # `rng.permutation` loop.  This consumes the numpy RNG stream
+        # differently from v1 (so subsets differ across versions — pinned by
+        # tests/test_batched_engine.py::test_vectorized_subset_sampling_spec)
+        # but stays fully deterministic per seed.
+        perm = self.rng.permuted(
+            np.tile(np.arange(self.l), (self.n, 1)), axis=1)
+        take = np.arange(self.l)[None, :] < self.loads[:, None]   # (n, l)
+        processed = np.zeros((self.n, self.l), dtype=bool)
+        row_ids = np.broadcast_to(np.arange(self.n)[:, None],
+                                  (self.n, self.l))
+        processed[row_ids[take], perm[take]] = True
+        self.processed_idx = [np.nonzero(processed[j])[0]
+                              for j in range(self.n)]
+        # weight matrices (paper §III-D) for the whole population at once:
+        # sqrt(1 - P(return)) on processed points, 1 elsewhere
+        w_stack = np.where(processed,
+                           np.sqrt(1.0 - self.p_return)[:, None],
+                           1.0).astype(np.float32)
+        # per-client PRNG keys: same sequential split chain the per-client
+        # encode would consume, rolled up into one lax.scan
+        def _chain(key, _):
             key, sub = jax.random.split(key)
-            subkeys.append(sub)
-        keys = jnp.stack(subkeys)
-        # all n local parity sets in one vmapped encode (paper eq. 19)
+            return key, sub
+        _, keys = jax.lax.scan(_chain, jax.random.PRNGKey(self.fl.seed + 99),
+                               None, length=self.n)
+        # all n local parity sets in one batched encode (paper eq. 19) —
+        # one vmapped jnp call or one tiled Pallas kernel launch
         stacked = encoding.encode_local_batched(
-            keys, self.x, self.y, w_stack, self.u)
+            keys, self.x, self.y, w_stack, self.u,
+            use_pallas=self.kernel_backend == "pallas",
+            interpret=self._interpret)
         if self.secure_aggregation:
             # paper §VI future work: the server only ever sees masked
             # uploads; pairwise masks cancel in the sum (core/secure_agg.py)
@@ -239,22 +411,91 @@ class FederatedSimulation:
                            for j in range(self.n)]
             self._sub_y = [self.y[j][self.processed_idx[j]]
                            for j in range(self.n)]
-        # dense mask-padded (n, l_max, ·) view: batched run() and run_multi
-        # (which compiles the batched step regardless of engine)
+        # dense mask-padded (n, l_max, ·) view: the chosen indices of each
+        # row, sorted ascending, with unchosen slots pushed past the end by
+        # an `l` sentinel — vectorized replacement for the per-client
+        # pad/gather loop
         l_max = max(1, int(self.loads.max()))
-        pad_idx = np.zeros((self.n, l_max), np.int32)
-        pad_mask = np.zeros((self.n, l_max), np.float32)
-        for j in range(self.n):
-            k = int(self.loads[j])
-            pad_idx[j, :k] = self.processed_idx[j]
-            pad_mask[j, :k] = 1.0
+        sorted_idx = np.sort(np.where(take, perm, self.l), axis=1)[:, :l_max]
+        pad_mask = (sorted_idx < self.l).astype(np.float32)
+        pad_idx = np.where(sorted_idx < self.l, sorted_idx, 0).astype(np.int32)
         rows = jnp.asarray(pad_idx)
         mask = jnp.asarray(pad_mask)[:, :, None]
         gather = jax.vmap(lambda xj, ij: xj[ij])
         self._sub_x_pad = gather(self.x, rows) * mask
         self._sub_y_pad = gather(self.y, rows) * mask
         self._grad_mask = jnp.asarray(pad_mask)       # (n, l_max) row validity
-        self._grad_active = jnp.asarray(self.loads > 0)
+
+    # ------------------------------------------------------------- step consts
+    def consts_point_len(self) -> int:
+        """Point-axis length of `build_consts()["gx"]` — shape arithmetic
+        only, so sweep callers can compute a grid-wide `l_target` without
+        materializing (and discarding) the fused tensors per profile."""
+        if self.scheme != "coded":
+            return self.l
+        l_max = int(self._sub_x_pad.shape[1])
+        return max(l_max, self.u) if self.fused_coded else l_max
+
+    def build_consts(self, l_target: Optional[int] = None) -> dict:
+        """Per-deployment arrays consumed by `build_step`'s step function.
+
+        `l_target` pads the point axis up to a common length so deployments
+        with different per-client loads stack along a profile axis
+        (repro.launch.sweep).  With a mesh, the client axis is additionally
+        zero-row padded to a multiple of the mesh size.
+        """
+        if self.scheme == "coded":
+            if self.fused_coded:
+                gx, gy, gmask = aggregation.fused_client_parity_tensors(
+                    self._sub_x_pad, self._sub_y_pad, self._grad_mask,
+                    self.parity.x, self.parity.y, pnr_c=0.0,
+                    l_target=l_target)
+                tail = [1.0]          # the always-active parity pseudo-row
+            else:
+                gx, gy, gmask = (self._sub_x_pad, self._sub_y_pad,
+                                 self._grad_mask)
+                if l_target is not None and l_target > gx.shape[1]:
+                    pad = ((0, 0), (0, l_target - gx.shape[1]))
+                    gx = jnp.pad(gx, pad + ((0, 0),))
+                    gy = jnp.pad(gy, pad + ((0, 0),))
+                    gmask = jnp.pad(gmask, pad)
+                tail = []
+        else:
+            gx, gy = self.x, self.y
+            gmask = jnp.ones((self.n, self.l), self.x.dtype)
+            tail = []
+        if self.mesh is not None:
+            rows = -(-gx.shape[0] // self.mesh.size) * self.mesh.size
+            tail = tail + [0.0] * (rows - gx.shape[0])
+            gx, gy, gmask = (_pad_rows(gx, rows), _pad_rows(gy, rows),
+                             _pad_rows(gmask, rows))
+        consts = {
+            "gx": gx, "gy": gy, "gmask": gmask,
+            "ret_tail": jnp.asarray(tail, jnp.float32),
+        }
+        if self.scheme == "coded":
+            consts["t_star"] = jnp.float32(self.t_star)
+            consts["active"] = jnp.asarray(self.loads > 0, jnp.float32)
+            if not self.fused_coded:
+                consts["par_x"] = self.parity.x
+                consts["par_y"] = self.parity.y
+        return consts
+
+    def step_static(self, collect_theta: bool = False) -> dict:
+        """Python-static step parameters matching `build_consts`."""
+        return {
+            "scheme": self.scheme,
+            "n": self.n,
+            "n_wait": max(1, int(math.ceil((1.0 - self.fl.psi) * self.n))),
+            "l2": self.train.l2_reg,
+            "m": float(self.m),
+            "l": float(self.l),
+            "fused": self.fused_coded,
+            "mesh": self.mesh,
+            "use_pallas": self.kernel_backend == "pallas",
+            "interpret": self._interpret,
+            "collect_theta": collect_theta,
+        }
 
     # ------------------------------------------------------------------ round
     def _sample_round_times(self, rounds: int = 1) -> np.ndarray:
@@ -274,85 +515,30 @@ class FederatedSimulation:
                          for it in range(iterations)], np.float32)
 
     # --------------------------------------------------------- batched engine
-    def _make_step(self, collect_theta: bool):
-        """One scan step: (theta, (t_row, lr)) -> (theta', per-round outputs).
-
-        Scheme dispatch is static (Python-level), so each scheme compiles to
-        a straight-line fused update.
-        """
-        scheme = self.scheme
-        n_wait = max(1, int(math.ceil((1.0 - self.fl.psi) * self.n)))
-        l2 = self.train.l2_reg
-        m = float(self.m)
-        l = float(self.l)
-        x, y = self.x, self.y
-        use_pallas = self.kernel_backend == "pallas"
-        interpret = self._interpret
-        if scheme == "coded":
-            sub_x, sub_y = self._sub_x_pad, self._sub_y_pad
-            par_x, par_y = self.parity.x, self.parity.y
-            # the Pallas path takes the explicit row-validity mask (fused
-            # into the residual); the XLA path keeps the pre-zeroed padding
-            grad_mask = self._grad_mask if use_pallas else None
-            active = self._grad_active
-            t_star = jnp.float32(self.t_star)
-
-        def step(theta, inp):
-            t_row, lr = inp
-            if scheme == "naive":
-                n_ret = jnp.int32(t_row.shape[0])
-                t_round = jnp.max(t_row)
-                g_all = aggregation.batched_client_gradients(
-                    x, y, theta, use_pallas=use_pallas, interpret=interpret)
-                g_sum = jnp.sum(g_all, axis=0)
-                denom = m
-            elif scheme == "greedy":
-                t_round = jnp.sort(t_row)[n_wait - 1]
-                ret = t_row <= t_round
-                n_ret = jnp.sum(ret).astype(jnp.int32)
-                g_all = aggregation.batched_client_gradients(
-                    x, y, theta, use_pallas=use_pallas, interpret=interpret)
-                g_sum = aggregation.masked_gradient_sum(g_all, ret)
-                denom = n_ret.astype(jnp.float32) * l
-            elif scheme == "coded":
-                ret = t_row <= t_star
-                n_ret = jnp.sum(ret).astype(jnp.int32)
-                t_round = t_star
-                g_all = aggregation.batched_client_gradients(
-                    sub_x, sub_y, theta, mask=grad_mask,
-                    use_pallas=use_pallas, interpret=interpret)
-                g_sum = aggregation.masked_gradient_sum(g_all, ret & active)
-                g_sum = g_sum + aggregation.coded_gradient(
-                    par_x, par_y, theta, pnr_c=0.0, use_pallas=use_pallas,
-                    interpret=interpret)
-                denom = m
-            else:
-                raise ValueError(scheme)
-            theta_new = theta - lr * (g_sum / denom + l2 * theta)
-            out = (t_round, n_ret)
-            if collect_theta:
-                out = out + (theta_new,)
-            return theta_new, out
-
-        return step
-
     def _get_scan(self, collect_theta: bool):
         """jit'd `lax.scan` over rounds, cached per (scheme, collect)."""
         cache_key = (self.scheme, collect_theta)
         fn = self._scan_cache.get(cache_key)
         if fn is None:
-            step = self._make_step(collect_theta)
-            fn = jax.jit(lambda theta0, times, lrs:
-                         jax.lax.scan(step, theta0, (times, lrs)))
+            step = build_step(self.step_static(collect_theta))
+            fn = jax.jit(lambda consts, theta0, times, lrs:
+                         jax.lax.scan(lambda th, inp: step(consts, th, inp),
+                                      theta0, (times, lrs)))
             self._scan_cache[cache_key] = fn
         return fn
+
+    def _get_consts(self) -> dict:
+        if self._consts is None:
+            self._consts = self.build_consts()
+        return self._consts
 
     def _run_batched(self, iterations: int, times: np.ndarray,
                      lrs: np.ndarray, eval_fn, eval_every: int) -> FedResult:
         collect = eval_fn is not None
         scan_fn = self._get_scan(collect)
         theta0 = jnp.zeros((self.q, self.c), jnp.float32)
-        outs = scan_fn(theta0, jnp.asarray(times, jnp.float32),
+        outs = scan_fn(self._get_consts(), theta0,
+                       jnp.asarray(times, jnp.float32),
                        jnp.asarray(lrs, jnp.float32))
         theta, per_round = outs
         t_rounds = np.asarray(per_round[0], np.float64)
@@ -453,7 +639,9 @@ class FederatedSimulation:
 
         Always runs on the batched scan engine (the legacy oracle has no
         vmappable form); the `engine` constructor argument only selects the
-        `run()` path.
+        `run()` path.  The final-iterate eval is vmapped over the
+        realization axis when `eval_fn` is jax-traceable, falling back to a
+        per-realization Python loop otherwise.
         """
         R = int(n_realizations)
         times = self._sample_round_times(R * iterations)
@@ -464,22 +652,34 @@ class FederatedSimulation:
         cache_key = (self.scheme, "multi")
         multi = self._scan_cache.get(cache_key)
         if multi is None:
-            step = self._make_step(collect_theta=False)
+            step = build_step(self.step_static(collect_theta=False))
 
-            def multi(times_r, lrs_r):
+            def multi(consts, times_r, lrs_r):
                 def one(tj):
-                    return jax.lax.scan(step, theta0, (tj, lrs_r))
+                    return jax.lax.scan(
+                        lambda th, inp: step(consts, th, inp),
+                        theta0, (tj, lrs_r))
                 return jax.vmap(one)(times_r)
 
             multi = jax.jit(multi)
             self._scan_cache[cache_key] = multi
 
-        theta, (t_rounds, n_ret) = multi(jnp.asarray(times, jnp.float32), lrs)
+        theta, (t_rounds, n_ret) = multi(self._get_consts(),
+                                         jnp.asarray(times, jnp.float32), lrs)
         wall = self.setup_time + np.cumsum(
             np.asarray(t_rounds, np.float64), axis=1)
         acc = None
         if eval_fn is not None:
-            acc = np.array([eval_fn(theta[r])[1] for r in range(R)])
+            # vmap the eval over the realization axis when eval_fn is
+            # jax-traceable (it must then be pure — it sees a batched
+            # tracer, not R concrete arrays); numpy/host-side eval_fns
+            # raise a tracer-conversion error and fall back to the loop.
+            # Genuine eval_fn bugs (bad shapes etc.) propagate normally.
+            try:
+                acc = np.asarray(jax.vmap(
+                    lambda th: jnp.asarray(eval_fn(th)[1]))(theta))
+            except jax.errors.JAXTypeError:
+                acc = np.array([eval_fn(theta[r])[1] for r in range(R)])
         return MultiFedResult(theta=theta, wall_clock=wall,
                               returned=np.asarray(n_ret),
                               t_star=self.t_star, loads=self.loads,

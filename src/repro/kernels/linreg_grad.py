@@ -13,9 +13,13 @@ across M steps (revisited output block).
 
 `linreg_grad_masked` is the batched variant the federated runtime's scan
 engine feeds with its dense mask-padded (n, l_max, q) client tensor: the
-client axis becomes the outermost grid dimension and the validity mask is
-fused into the residual, so padded rows contribute exactly zero even when
-the caller did not pre-zero them.
+client axis becomes the outermost grid dimension and the mask is fused
+into the residual, so padded rows contribute exactly zero even when the
+caller did not pre-zero them.  Mask entries are general per-row *weights*,
+not just 0/1 validity bits — the runtime's fused coded round appends the
+global parity set as an (n+1)-th pseudo-client row whose mask carries the
+coded-gradient 1/(u (1-pnr_C)) scale, so the whole round (client gradients
++ coded gradient) is ONE launch of this kernel.
 """
 from __future__ import annotations
 
@@ -127,9 +131,11 @@ def linreg_grad_masked(x, theta, y, mask, *, bm: int = 128, bq: int = 128,
 
     x: (n, l, q), theta: (q, c), y: (n, l, c), mask: (n, l) -> (n, q, c).
     Grid (n, L/bm, Q/bq): the client axis is outermost, so one kernel call
-    covers the whole dense mask-padded client tensor of the batched engine.
-    The mask multiplies the residual, so rows with mask 0 contribute exactly
-    zero regardless of the padded x/y contents.
+    covers the whole dense mask-padded client tensor of the batched engine
+    (including the fused parity pseudo-client row in the coded scheme).
+    The mask multiplies the residual — rows with mask 0 contribute exactly
+    zero regardless of the padded x/y contents, and fractional entries act
+    as per-row gradient weights (the coded 1/u scale).
     """
     n, l, q = x.shape
     q2, c = theta.shape

@@ -16,6 +16,8 @@ from repro.kernels.linreg_grad import linreg_grad as _linreg_grad_kernel
 from repro.kernels.linreg_grad import \
     linreg_grad_masked as _linreg_grad_masked_kernel
 from repro.kernels.parity_encode import parity_encode as _parity_encode_kernel
+from repro.kernels.parity_encode import \
+    parity_encode_batched as _parity_encode_batched_kernel
 from repro.kernels.rff_embed import rff_embed as _rff_embed_kernel
 from repro.kernels.gqa_decode import gqa_decode as _gqa_decode_kernel
 
@@ -36,6 +38,21 @@ def _pad_to(x, mults):
     if all(p == (0, 0) for p in pads):
         return x
     return jnp.pad(x, pads)
+
+
+def _clamp_block(block: int, dim: int, interpret: bool, mult: int = 8) -> int:
+    """Shrink a block size down to the (mult-rounded) dim — interpret only.
+
+    The federated runtime's fused client+parity tensor often has a point
+    axis far below the default 128-row block (e.g. l_max = 24); tiling it
+    at the default would zero-pad every client row 5x, which interpret mode
+    (CPU CI) pays for in real host FLOPs.  On a compiled TPU the defaults
+    stay untouched: Mosaic requires 128-multiple lane dims there and the
+    hardware pads implicitly anyway.
+    """
+    if not interpret:
+        return block
+    return max(mult, min(block, -(-dim // mult) * mult))
 
 
 def rff_embed(x, omega, delta, *, use_pallas: bool = False,
@@ -95,9 +112,14 @@ def linreg_grad_masked(x_stack, theta, y_stack, mask, *,
     -> (n, q, c) with  g_j = X_j^T diag(mask_j) (X_j theta - Y_j).
 
     This is the batched engine's hot path: the federated runtime hands over
-    its dense mask-padded client tensor and the whole round's n gradients
-    come from ONE kernel call (client axis = outermost grid dim).  Padding
-    rows carry mask 0, so the caller need not pre-zero them.
+    its dense mask-padded client tensor — with the global parity set fused
+    in as an extra pseudo-client row in the coded scheme — and the whole
+    round's gradients come from ONE kernel call (client axis = outermost
+    grid dim).  Padding rows carry mask 0, so the caller need not pre-zero
+    them; mask entries may be arbitrary per-row *weights* (not just 0/1),
+    which is how the coded-gradient 1/u scale rides along.  In interpret
+    mode the row block is clamped down to the point axis so short fused
+    layouts tile without 5x zero-padding.
     """
     if not use_pallas:
         return jax.vmap(
@@ -105,6 +127,7 @@ def linreg_grad_masked(x_stack, theta, y_stack, mask, *,
                 x_stack, y_stack, mask)
     n, l, q = x_stack.shape
     c = theta.shape[1]
+    bm = _clamp_block(bm, l, interpret)
     xp = _pad_to(x_stack, (1, bm, bq))
     tp = _pad_to(theta, (bq, _LANE))
     yp = _pad_to(y_stack, (1, bm, _LANE))
@@ -144,6 +167,31 @@ def parity_encode(g, w, x, *, use_pallas: bool = False,
     out = _parity_encode_kernel(gp, wp, xp, bu=bu, bq=bq, bl=bl,
                                 interpret=interpret)
     return out[:u, :q]
+
+
+def parity_encode_batched(g_stack, w_stack, x_stack, *,
+                          use_pallas: bool = False, bu: int = 128,
+                          bq: int = 128, bl: int = 128,
+                          interpret: bool = True):
+    """All-clients parity encode over a dense client axis.
+
+    g_stack: (n, u, l), w_stack: (n, l), x_stack: (n, l, q) -> (n, u, q)
+    with  parity_j = G_j diag(w_j) X_j.  The jnp path vmaps the reference
+    kernel; the Pallas path is ONE tiled kernel launch with the client axis
+    as the outermost grid dimension (in interpret mode, row blocks are
+    clamped to the true u so small populations don't pad up to 128).
+    """
+    if not use_pallas:
+        return jax.vmap(ref.parity_encode)(g_stack, w_stack, x_stack)
+    n, u, l = g_stack.shape
+    q = x_stack.shape[2]
+    bu = _clamp_block(bu, u, interpret)
+    gp = _pad_to(g_stack, (1, bu, bl))
+    wp = _pad_to(w_stack, (1, bl))
+    xp = _pad_to(x_stack, (1, bl, bq))
+    out = _parity_encode_batched_kernel(gp, wp, xp, bu=bu, bq=bq, bl=bl,
+                                        interpret=interpret)
+    return out[:, :u, :q]
 
 
 def gqa_decode(q, k, v, k_pos, q_pos, *, window: int = 0,

@@ -7,6 +7,13 @@ its parity set.  The diagonal weighting is fused into the generator tile in
 VMEM (G_tile * w_tile) so diag(w) @ X is never materialized.  Grid
 (U/bu, Q/bq, L/bl) with the contraction dim innermost; the output block
 accumulates across L steps.
+
+`parity_encode_batched` is the all-clients variant the federated runtime's
+coded setup feeds: the client axis becomes the outermost grid dimension
+(like `linreg_grad_masked`), so all n local parity sets come from ONE tiled
+kernel launch instead of a per-client Python loop.  Block-for-block it runs
+the same dots in the same order as n single-client calls, so the two are
+bit-identical.
 """
 from __future__ import annotations
 
@@ -50,3 +57,43 @@ def parity_encode(g, w, x, *, bu: int = 128, bq: int = 128, bl: int = 128,
         out_shape=jax.ShapeDtypeStruct((u, q), g.dtype),
         interpret=interpret,
     )(g, w2, x)
+
+
+def _batched_kernel(g_ref, w_ref, x_ref, o_ref):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    gw = g_ref[0] * w_ref[0]                     # (bu, bl) * (1, bl)
+    o_ref[...] += jnp.dot(gw, x_ref[0],
+                          preferred_element_type=o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bq", "bl", "interpret"))
+def parity_encode_batched(g, w, x, *, bu: int = 128, bq: int = 128,
+                          bl: int = 128, interpret: bool = True):
+    """All-clients parity encode: (n, u, l), (n, l), (n, l, q) -> (n, u, q).
+
+    Grid (n, U/bu, Q/bq, L/bl): the client axis is outermost, so the whole
+    population's parity sets come from one kernel launch.  Requires block
+    divisibility on u/q/l (ops.parity_encode_batched pads).
+    """
+    n, u, l = g.shape
+    n2, l2, q = x.shape
+    assert n == n2 and l == l2 and w.shape == (n, l)
+    assert u % bu == 0 and q % bq == 0 and l % bl == 0, (u, l, q, bu, bq, bl)
+    w3 = w.reshape(n, 1, l)
+    return pl.pallas_call(
+        _batched_kernel,
+        grid=(n, u // bu, q // bq, l // bl),
+        in_specs=[
+            pl.BlockSpec((1, bu, bl), lambda b, i, j, k: (b, i, k)),
+            pl.BlockSpec((1, 1, bl), lambda b, i, j, k: (b, 0, k)),
+            pl.BlockSpec((1, bl, bq), lambda b, i, j, k: (b, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bu, bq), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, u, q), g.dtype),
+        interpret=interpret,
+    )(g, w3, x)

@@ -32,10 +32,11 @@ def linreg_grad(x, theta, y):
 def linreg_grad_masked(x, theta, y, mask):
     """Row-masked gradient (batched-engine form of eq. 7/10).
 
-    x: (l, q), theta: (q, c), y: (l, c), mask: (l,) validity (0/1) ->
+    x: (l, q), theta: (q, c), y: (l, c), mask: (l,) per-row weights ->
       g = x^T diag(mask) (x @ theta - y)
     Rows with mask 0 contribute exactly zero, so callers may hand over
-    mask-padded dense subsets without pre-zeroing the padding.
+    mask-padded dense subsets without pre-zeroing the padding; fractional
+    entries scale a row's gradient (the fused coded round's 1/u factor).
     """
     r = (x @ theta - y) * mask[:, None].astype(x.dtype)
     return x.T @ r

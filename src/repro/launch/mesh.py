@@ -1,6 +1,6 @@
 """Production mesh construction.
 
-A FUNCTION (not a module-level constant) so importing this module never
+FUNCTIONS (not module-level constants) so importing this module never
 touches jax device state — the dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init,
 and nothing else should.
@@ -8,6 +8,7 @@ and nothing else should.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,3 +17,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_client_mesh(num_devices: int | None = None, *, devices=None):
+    """1-D mesh over a single ``"clients"`` axis for the federated engine.
+
+    `FederatedSimulation(..., mesh=...)` partitions its dense client tensor
+    over this axis and psum-aggregates per-shard gradients (the MEC server
+    reduction of paper §III).  CI exercises it on CPU host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    k = len(devs) if num_devices is None else int(num_devices)
+    if not 1 <= k <= len(devs):
+        raise ValueError(
+            f"requested {k} devices for the client mesh but "
+            f"{len(devs)} are available (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=<k> before jax init "
+            "to fake host devices)")
+    return jax.sharding.Mesh(np.array(devs[:k]), ("clients",))

@@ -1,0 +1,167 @@
+"""Compiled multi-deployment sweep engine (the Fig. 4/5 profile grid).
+
+The scheme-comparison benchmark sweeps deployments over heterogeneity
+profiles (paper §V-A's k1/k2 decay knobs).  Pre-PR that was a Python loop
+of independent `FederatedSimulation.run_multi` calls — one XLA compilation
+per (scheme, profile) even though every deployment shares shapes.  This
+module stacks the per-deployment step constants built by
+`FederatedSimulation.build_consts` along a profile axis and vmaps the SAME
+scan step (`fed_runtime.build_step`) over the (profile x realization) grid:
+one compiled call per scheme covers the whole grid.
+
+Deployments must share shapes: same (n, l, q, c), iterations, realizations,
+psi, and training config.  Coded deployments may have different per-client
+load allocations — their dense client tensors are padded to the grid-wide
+point-axis maximum (`l_target`), which contributes exactly zero through the
+validity mask.
+
+    sweep = run_sweep(xs, ys, profiles=PROFILES, train_cfg=tc,
+                      iterations=40, realizations=6)
+    sweep.results["coded"]["paper"].wall_clock_bands()
+
+Equivalence to the looped path is locked down by
+tests/test_sweep_engine.py; `repro.launch.bench` records the measured
+speedup in BENCH_fed_training.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FLConfig, TrainConfig
+from repro.core import fed_runtime
+from repro.core.fed_runtime import FederatedSimulation, MultiFedResult
+
+SCHEMES = ("coded", "naive", "greedy")
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """One compiled sweep: results[scheme][profile] is a MultiFedResult.
+
+    host_seconds[scheme] is the host-side cost of that scheme's ONE
+    compiled (profile x realization) call, including compilation; sims
+    holds the per-(scheme, profile) deployments for metadata (t_star,
+    loads, setup_time).
+    """
+    results: dict
+    sims: dict
+    host_seconds: dict
+
+
+def _build_sims(x_stack, y_stack, profiles: dict, train_cfg: TrainConfig,
+                scheme: str, fl_kwargs: dict, kernel_backend: str) -> dict:
+    sims = {}
+    for pname, knobs in profiles.items():
+        fl = FLConfig(**{**fl_kwargs, **knobs})
+        sims[pname] = FederatedSimulation(
+            x_stack, y_stack, fl, train_cfg, scheme=scheme,
+            kernel_backend=kernel_backend)
+    return sims
+
+
+def run_sweep(x_stack, y_stack, *, profiles: dict,
+              train_cfg: TrainConfig, iterations: int, realizations: int,
+              schemes: Sequence[str] = SCHEMES,
+              fl_kwargs: Optional[dict] = None,
+              kernel_backend: str = "xla",
+              sims: Optional[dict] = None) -> SweepResult:
+    """Run every (scheme, profile) deployment in one compiled call per scheme.
+
+    profiles: {name: FLConfig-override dict} (e.g. rate_decay/mac_decay
+    heterogeneity knobs); fl_kwargs: shared FLConfig fields (n_clients,
+    delta, psi, seed, ...).  Setup (load allocation, parity encoding, delay
+    pre-sampling) runs per deployment on the host exactly as the looped
+    path would, so equal seeds reproduce looped `run_multi` results.
+    Callers that already built the deployments (e.g. the benchmark
+    launcher, which times setup separately from the grid execution) pass
+    them via `sims` ({scheme: {profile: FederatedSimulation}}).
+    """
+    fl_kwargs = dict(fl_kwargs or {})
+    fl_kwargs.setdefault("n_clients", int(x_stack.shape[0]))
+    R = int(realizations)
+    n = int(x_stack.shape[0])
+    q, c = int(x_stack.shape[2]), int(y_stack.shape[2])
+    theta0 = jnp.zeros((q, c), jnp.float32)
+
+    results: dict = {}
+    all_sims: dict = dict(sims or {})
+    host_seconds: dict = {}
+    for scheme in schemes:
+        scheme_sims = all_sims.get(scheme)
+        if scheme_sims is None:
+            scheme_sims = _build_sims(
+                x_stack, y_stack, profiles, train_cfg, scheme, fl_kwargs,
+                kernel_backend)
+        elif set(scheme_sims) != set(profiles):
+            raise ValueError(
+                f"prebuilt sims for scheme {scheme!r} cover profiles "
+                f"{sorted(scheme_sims)} but the sweep grid expects "
+                f"{sorted(profiles)}")
+        all_sims[scheme] = scheme_sims
+        names = list(scheme_sims)
+        # one step serves every profile, so everything Python-static must
+        # agree across the grid — a psi (n_wait) or l2 override would
+        # otherwise silently diverge from the looped run_multi results
+        statics = {p: scheme_sims[p].step_static(collect_theta=False)
+                   for p in names}
+        ref_static = statics[names[0]]
+        for p, st in statics.items():
+            bad = [k for k in st if st[k] != ref_static[k]]
+            if bad:
+                raise ValueError(
+                    f"profile {p!r} differs from {names[0]!r} in "
+                    f"step-static field(s) {bad}; sweep profiles may only "
+                    "vary array-level deployment constants (delay knobs, "
+                    "loads, parity), not scheme statics like psi/l2")
+        lr_schedules = {p: scheme_sims[p]._lr_schedule(iterations)
+                        for p in names}
+        for p, sched in lr_schedules.items():
+            if not np.array_equal(sched, lr_schedules[names[0]]):
+                raise ValueError(
+                    f"profile {p!r} has a different learning-rate schedule "
+                    f"than {names[0]!r}; all sweep deployments must share "
+                    "one TrainConfig")
+        # common point-axis length so coded tensors stack across profiles
+        l_target = max(scheme_sims[p].consts_point_len() for p in names)
+        consts = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves),
+            *[scheme_sims[p].build_consts(l_target=l_target) for p in names])
+        times = np.stack([
+            scheme_sims[p]._sample_round_times(R * iterations)
+                          .reshape(R, iterations, n)
+            for p in names])
+        lrs = jnp.asarray(lr_schedules[names[0]])
+        step = fed_runtime.build_step(ref_static)
+
+        def profile_run(consts_p, times_p, lrs_r):
+            def one(tj):
+                return jax.lax.scan(
+                    lambda th, inp: step(consts_p, th, inp),
+                    theta0, (tj, lrs_r))
+            return jax.vmap(one)(times_p)
+
+        sweep_fn = jax.jit(jax.vmap(profile_run, in_axes=(0, 0, None)))
+        t0 = time.perf_counter()
+        theta, (t_rounds, n_ret) = jax.block_until_ready(
+            sweep_fn(consts, jnp.asarray(times, jnp.float32), lrs))
+        host_seconds[scheme] = time.perf_counter() - t0
+
+        per_profile = {}
+        t_rounds = np.asarray(t_rounds, np.float64)    # (P, R, iters)
+        n_ret = np.asarray(n_ret)
+        for i, pname in enumerate(names):
+            sim = scheme_sims[pname]
+            wall = sim.setup_time + np.cumsum(t_rounds[i], axis=1)
+            per_profile[pname] = MultiFedResult(
+                theta=theta[i], wall_clock=wall, returned=n_ret[i],
+                t_star=sim.t_star, loads=sim.loads,
+                setup_time=sim.setup_time)
+        results[scheme] = per_profile
+    return SweepResult(results=results, sims=all_sims,
+                       host_seconds=host_seconds)

@@ -198,6 +198,94 @@ def test_run_multi_realizations_differ_uncoded():
     assert np.std(res.wall_clock[:, -1]) > 0.0
 
 
+@pytest.mark.parametrize("kernel_backend", ["xla", "pallas"])
+def test_fused_coded_round_matches_two_call_oracle(kernel_backend):
+    """Fused parity-as-pseudo-client round == the historical two-call path
+    (batched_client_gradients + separate coded_gradient launch)."""
+    xs, ys = _data()
+    res_f = _run(xs, ys, "coded", "batched", iters=15,
+                 kernel_backend=kernel_backend)
+    fl = FLConfig(n_clients=xs.shape[0], delta=0.25, psi=0.3, seed=3)
+    tc = TrainConfig(learning_rate=0.5, l2_reg=1e-4, lr_decay_epochs=(10, 18))
+    sim_u = fed_runtime.FederatedSimulation(
+        xs, ys, fl, tc, scheme="coded", kernel_backend=kernel_backend,
+        fused_coded=False)
+    trace = lambda th: (float(np.abs(np.asarray(th)).sum()), 0.0)
+    res_u = sim_u.run(15, eval_fn=trace, eval_every=1)
+    np.testing.assert_allclose(np.asarray(res_f.theta),
+                               np.asarray(res_u.theta), atol=1e-5)
+    for hf, hu in zip(res_f.history, res_u.history):
+        assert hf.returned == hu.returned
+        np.testing.assert_allclose(hf.loss, hu.loss, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_tensor_single_call_equals_two_kernels():
+    """One masked-kernel call over the (n+1)-row fused tensor == n client
+    gradients + the separately scaled coded gradient."""
+    rng = np.random.default_rng(5)
+    n, l, q, c, u = 5, 12, 16, 3, 9
+    sub_x = rng.normal(size=(n, l, q)).astype(np.float32)
+    sub_y = rng.normal(size=(n, l, c)).astype(np.float32)
+    mask = (rng.random((n, l)) < 0.7).astype(np.float32)
+    sub_x *= mask[:, :, None]
+    sub_y *= mask[:, :, None]
+    par_x = rng.normal(size=(u, q)).astype(np.float32)
+    par_y = rng.normal(size=(u, c)).astype(np.float32)
+    theta = rng.normal(size=(q, c)).astype(np.float32)
+    fx, fy, fmask = aggregation.fused_client_parity_tensors(
+        jnp.asarray(sub_x), jnp.asarray(sub_y), jnp.asarray(mask),
+        jnp.asarray(par_x), jnp.asarray(par_y))
+    assert fx.shape == (n + 1, max(l, u), q)
+    g_all = aggregation.batched_client_gradients(fx, fy, theta, mask=fmask)
+    g_clients = aggregation.batched_client_gradients(
+        jnp.asarray(sub_x), jnp.asarray(sub_y), theta,
+        mask=jnp.asarray(mask))
+    g_coded = aggregation.coded_gradient(par_x, par_y, theta, pnr_c=0.0)
+    np.testing.assert_allclose(np.asarray(g_all[:n]), np.asarray(g_clients),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_all[n]), np.asarray(g_coded),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_vectorized_subset_sampling_spec():
+    """Pin the v2 processed-subset sampling contract: one `rng.permuted`
+    draw over an (n, l) index matrix, first loads[j] entries per row,
+    sorted; weights sqrt(1 - p_return) on processed points, 1 elsewhere.
+    (v1 drew rng.permutation per client — a different, unversioned
+    stream.)"""
+    xs, ys = _data(n=5, l=16, q=12, c=2)
+    fl = FLConfig(n_clients=5, delta=0.3, seed=11)
+    tc = TrainConfig(learning_rate=0.5)
+    sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme="coded")
+    # replay: the setup rng chain consumes the permuted draw first
+    rng = np.random.default_rng(fl.seed + 17)
+    perm = rng.permuted(np.tile(np.arange(sim.l), (sim.n, 1)), axis=1)
+    for j in range(sim.n):
+        want = np.sort(perm[j, : int(sim.loads[j])])
+        np.testing.assert_array_equal(sim.processed_idx[j], want)
+
+
+def test_encode_local_batched_pallas_single_call_bit_equal():
+    """Satellite: the Pallas path of encode_local_batched is ONE batched
+    kernel launch, bit-equal to the per-client encode_local loop."""
+    from repro.core import encoding
+    rng = np.random.default_rng(3)
+    n, l, q, c, u = 6, 20, 24, 4, 13
+    xs = jnp.asarray(rng.normal(size=(n, l, q)).astype(np.float32))
+    ys = jnp.asarray(rng.normal(size=(n, l, c)).astype(np.float32))
+    ws = rng.random((n, l)).astype(np.float32)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(n))
+    batched = encoding.encode_local_batched(keys, xs, ys, ws, u,
+                                            use_pallas=True)
+    for j in range(n):
+        one = encoding.encode_local(keys[j], xs[j], ys[j], ws[j], u,
+                                    use_pallas=True)
+        np.testing.assert_array_equal(np.asarray(batched.x[j]),
+                                      np.asarray(one.x))
+        np.testing.assert_array_equal(np.asarray(batched.y[j]),
+                                      np.asarray(one.y))
+
+
 def test_batched_parity_matches_sequential_encode():
     """Vmapped encode in _setup_coded == the sequential per-client chain."""
     from repro.core import encoding

@@ -68,6 +68,29 @@ def test_parity_encode(u, l, q):
                                np.asarray(want) / denom, atol=3e-5)
 
 
+SHAPES_PAR_BATCHED = [(1, 128, 128, 128), (4, 96, 200, 130), (7, 13, 20, 24),
+                      (3, 64, 64, 500)]
+
+
+@pytest.mark.parametrize("n,u,l,q", SHAPES_PAR_BATCHED)
+def test_parity_encode_batched(n, u, l, q):
+    """All-clients kernel (client axis = outer grid dim) vs the vmapped
+    oracle AND the per-client single kernel (bit-equal: same dots, same
+    accumulation order per client)."""
+    g = _arr((n, u, l))
+    w = jnp.asarray(RNG.uniform(0.2, 1.0, size=(n, l)), jnp.float32)
+    x = _arr((n, l, q), scale=0.5)
+    got = ops.parity_encode_batched(g, w, x, use_pallas=True)
+    want = jax.vmap(ref.parity_encode)(g, w, x)
+    denom = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got) / denom,
+                               np.asarray(want) / denom, atol=3e-5)
+    per_client = jnp.stack([
+        ops.parity_encode(g[j], w[j], x[j], use_pallas=True)
+        for j in range(n)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(per_client))
+
+
 # n, l, q, c — deliberately non-divisible shapes to exercise the padding
 SHAPES_MASKED = [(4, 128, 128, 8), (3, 100, 70, 3), (6, 257, 130, 1),
                  (1, 64, 300, 5)]

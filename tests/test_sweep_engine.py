@@ -1,0 +1,164 @@
+"""Compiled sweep engine vs. the looped `run_multi` path.
+
+`repro.launch.sweep.run_sweep` stacks per-deployment step constants along a
+profile axis and vmaps the SAME scan step over the (profile x realization)
+grid — one compiled call per scheme.  With equal seeds it must reproduce a
+Python loop of independent, identically-seeded `run_multi` calls exactly
+(the step math is shared; profile-axis padding contributes zero through the
+validity mask).
+"""
+import numpy as np
+import pytest
+
+from repro.config import FLConfig, TrainConfig
+from repro.core import fed_runtime
+from repro.launch import sweep as sweep_mod
+
+# grouped with the sharded-engine suite in the `multidevice` CI job (the
+# sweep itself is single-device, but the suites ship together); runs at
+# any device count.
+pytestmark = pytest.mark.multidevice
+
+PROFILES = {
+    "uniform": dict(rate_decay=1.0, mac_decay=1.0),
+    "paper": dict(rate_decay=0.95, mac_decay=0.8),
+    "extreme": dict(rate_decay=0.9, mac_decay=0.6),
+}
+BASE = dict(n_clients=6, delta=0.25, psi=0.3, seed=3)
+
+
+def _data(n=6, l=16, q=24, c=3, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n, l, q)).astype(np.float32) * 0.2
+    ys = rng.normal(size=(n, l, c)).astype(np.float32)
+    return xs, ys
+
+
+def _tc():
+    return TrainConfig(learning_rate=0.5, l2_reg=1e-5, lr_decay_epochs=(5,))
+
+
+@pytest.fixture(scope="module")
+def sweep_result():
+    xs, ys = _data()
+    return xs, ys, sweep_mod.run_sweep(
+        xs, ys, profiles=PROFILES, train_cfg=_tc(), iterations=10,
+        realizations=4, fl_kwargs=BASE)
+
+
+@pytest.mark.parametrize("scheme", sweep_mod.SCHEMES)
+def test_sweep_matches_looped_run_multi(sweep_result, scheme):
+    """Every (scheme, profile) cell reproduces an identically-seeded
+    standalone run_multi — wall-clock, return counts, and final iterates."""
+    xs, ys, sw = sweep_result
+    for pname, knobs in PROFILES.items():
+        fl = FLConfig(**{**BASE, **knobs})
+        sim = fed_runtime.FederatedSimulation(xs, ys, fl, _tc(),
+                                              scheme=scheme)
+        loop = sim.run_multi(10, 4)
+        got = sw.results[scheme][pname]
+        np.testing.assert_allclose(got.wall_clock, loop.wall_clock,
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(got.returned, loop.returned)
+        np.testing.assert_allclose(np.asarray(got.theta),
+                                   np.asarray(loop.theta), atol=1e-5)
+        assert got.setup_time == loop.setup_time
+        if scheme == "coded":
+            assert got.t_star == loop.t_star
+            np.testing.assert_array_equal(got.loads, loop.loads)
+
+
+def test_sweep_shapes_and_metadata(sweep_result):
+    xs, ys, sw = sweep_result
+    n, q, c = xs.shape[0], xs.shape[2], ys.shape[2]
+    for scheme in sweep_mod.SCHEMES:
+        assert set(sw.results[scheme]) == set(PROFILES)
+        assert sw.host_seconds[scheme] > 0
+        for res in sw.results[scheme].values():
+            assert res.theta.shape == (4, q, c)
+            assert res.wall_clock.shape == (4, 10)
+            assert res.returned.shape == (4, 10)
+            assert np.all(np.diff(res.wall_clock, axis=1) > 0)
+
+
+def test_sweep_accepts_prebuilt_sims():
+    """The benchmark launcher times setup separately and hands sims in."""
+    xs, ys = _data()
+    sims = {"coded": {}}
+    for pname, knobs in PROFILES.items():
+        fl = FLConfig(**{**BASE, **knobs})
+        sims["coded"][pname] = fed_runtime.FederatedSimulation(
+            xs, ys, fl, _tc(), scheme="coded")
+    sw = sweep_mod.run_sweep(xs, ys, profiles=PROFILES, train_cfg=_tc(),
+                             iterations=6, realizations=2,
+                             schemes=("coded",), fl_kwargs=BASE, sims=sims)
+    assert sw.sims["coded"] is sims["coded"]
+    assert set(sw.results["coded"]) == set(PROFILES)
+
+
+def test_sweep_pads_coded_profiles_to_common_length():
+    """Profiles with different load allocations (different dense l_max)
+    stack via l_target padding without perturbing any cell."""
+    xs, ys = _data()
+    sw = sweep_mod.run_sweep(xs, ys, profiles=PROFILES, train_cfg=_tc(),
+                             iterations=6, realizations=2,
+                             schemes=("coded",), fl_kwargs=BASE)
+    lens = set()
+    for pname in PROFILES:
+        sim = sw.sims["coded"][pname]
+        lens.add(sim.build_consts()["gx"].shape[1])
+        got = sw.results["coded"][pname]
+        fl = FLConfig(**{**BASE, **PROFILES[pname]})
+        loop = fed_runtime.FederatedSimulation(
+            xs, ys, fl, _tc(), scheme="coded").run_multi(6, 2)
+        np.testing.assert_allclose(np.asarray(got.theta),
+                                   np.asarray(loop.theta), atol=1e-5)
+    # the deployments genuinely differ in allocated loads across this grid
+    assert len({sw.sims["coded"][p].t_star for p in PROFILES}) > 1
+
+
+def test_sweep_rejects_sims_profile_mismatch():
+    """Prebuilt sims must cover exactly the sweep's profile grid."""
+    xs, ys = _data()
+    fl = FLConfig(**{**BASE, **PROFILES["paper"]})
+    partial = {"coded": {"paper": fed_runtime.FederatedSimulation(
+        xs, ys, fl, _tc(), scheme="coded")}}
+    with pytest.raises(ValueError, match="cover profiles"):
+        sweep_mod.run_sweep(xs, ys, profiles=PROFILES, train_cfg=_tc(),
+                            iterations=3, realizations=2,
+                            schemes=("coded",), fl_kwargs=BASE, sims=partial)
+
+
+def test_sweep_rejects_step_static_overrides():
+    """Profiles share ONE compiled step: overriding a scheme-static knob
+    like psi must fail loudly, not silently diverge from the loop."""
+    xs, ys = _data()
+    bad_profiles = {"a": dict(psi=0.1), "b": dict(psi=0.9)}
+    with pytest.raises(ValueError, match="n_wait"):
+        sweep_mod.run_sweep(xs, ys, profiles=bad_profiles, train_cfg=_tc(),
+                            iterations=3, realizations=2,
+                            schemes=("greedy",), fl_kwargs=BASE)
+
+
+def test_run_multi_eval_vmapped_matches_loop():
+    """Satellite: the final-iterate eval is vmapped over realizations when
+    traceable; non-traceable eval_fns fall back to the loop — both agree."""
+    import jax.numpy as jnp
+    xs, ys = _data()
+    fl = FLConfig(**BASE)
+
+    def traceable(th):
+        return jnp.mean(th ** 2), jnp.sum(jnp.abs(th))
+
+    def host_only(th):
+        arr = np.asarray(th)          # numpy forces the fallback path
+        return float((arr ** 2).mean()), float(np.abs(arr).sum())
+
+    res_t = fed_runtime.FederatedSimulation(
+        xs, ys, fl, _tc(), scheme="coded").run_multi(6, 3,
+                                                     eval_fn=traceable)
+    res_h = fed_runtime.FederatedSimulation(
+        xs, ys, fl, _tc(), scheme="coded").run_multi(6, 3,
+                                                     eval_fn=host_only)
+    assert res_t.accuracy is not None and res_t.accuracy.shape == (3,)
+    np.testing.assert_allclose(res_t.accuracy, res_h.accuracy, rtol=1e-6)
