@@ -18,8 +18,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import FLConfig, RFFConfig, TrainConfig
-from repro.core import fed_runtime, rff
+from repro.api import build_experiment
+from repro.config import ExperimentSpec, FLConfig, RFFConfig, TrainConfig
+from repro.core import rff
 from repro.core.delay_model import mec_network
 from repro.data import sharding, synthetic
 
@@ -38,10 +39,11 @@ def engine_speedup(n_clients=32, l=64, q=128, c=10, iters=150, seed=0):
     tcfg = TrainConfig(learning_rate=0.5, l2_reg=1e-5)
     timings = {}
     for engine in ("batched", "legacy"):
-        sim = fed_runtime.FederatedSimulation(xs, ys, fl, tcfg,
-                                              scheme="coded", engine=engine)
+        exp = build_experiment(ExperimentSpec(fl=fl, train=tcfg,
+                                              scheme="coded", engine=engine),
+                               xs, ys)
         t0 = time.perf_counter()
-        sim.run(iters)
+        exp.run(iters)
         timings[engine] = time.perf_counter() - t0
     speed = timings["legacy"] / timings["batched"]
     return [(f"fed_engine_speedup_coded_n{n_clients}",
@@ -76,7 +78,9 @@ def run(m_train=3000, q=256, d=64, n_clients=30, iters=200,
     results, sims, rows = {}, {}, []
     for scheme in ("naive", "greedy", "coded"):
         t0 = time.perf_counter()
-        sim = fed_runtime.FederatedSimulation(xs, ys, fl, tcfg, scheme=scheme)
+        sim = build_experiment(ExperimentSpec(fl=fl, train=tcfg,
+                                              rff=rcfg, scheme=scheme),
+                               xs, ys)
         res = sim.run(iters, eval_fn=eval_fn, eval_every=5)
         us = (time.perf_counter() - t0) * 1e6
         results[scheme] = res

@@ -1,18 +1,23 @@
 """Quickstart: CodedFedL end-to-end in ~30 seconds on CPU.
 
 Builds a small federated deployment (10 clients over a simulated wireless
-MEC network), runs the paper's three schemes on the batched scan-compiled
-engine, and prints the headline comparison: per-iteration accuracy parity +
-wall-clock speedup.  Finishes with a multi-realization run (8 independent
-delay draws, one vmapped call) showing the wall-clock confidence band.
+MEC network) and runs every registered straggler-mitigation scheme through
+the declarative experiment API: one frozen `ExperimentSpec` per scheme,
+`repro.api.build_experiment(spec, xs, ys)` for the runnable deployment.
+Prints the headline comparison (per-iteration accuracy parity + wall-clock
+speedup), then finishes with a multi-realization run (8 independent delay
+draws, one vmapped call) showing the wall-clock confidence band.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ExperimentSpec, build_experiment
 from repro.config import FLConfig, RFFConfig, TrainConfig
-from repro.core import fed_runtime, rff
+from repro.core import rff
 from repro.core.delay_model import mec_network
 from repro.data import sharding, synthetic
 
@@ -40,25 +45,32 @@ def main():
         acc = ((xh_te @ np.asarray(theta)).argmax(1) == ds.y_test).mean()
         return 0.0, float(acc)
 
-    # 3. run all three schemes (paper §V "Schemes")
-    print(f"{'scheme':8s} {'accuracy':>9s} {'wall-clock':>11s} {'deadline':>9s}")
+    # 3. one frozen spec per scheme (the declarative experiment API); the
+    # base spec is JSON-serializable — log it next to the results
+    base_spec = ExperimentSpec(fl=fl, train=tcfg, rff=rcfg)
+    print(f"base spec: {base_spec.to_dict()}\n")
+    print(f"{'scheme':14s} {'accuracy':>9s} {'wall-clock':>11s}"
+          f" {'deadline':>9s} {'eps(bits)':>10s}")
     base_wall = None
-    for scheme in ("naive", "greedy", "coded"):
-        sim = fed_runtime.FederatedSimulation(xs, ys, fl, tcfg, scheme=scheme)
-        res = sim.run(100, eval_fn=eval_fn, eval_every=25)
+    for scheme in ("naive", "greedy", "ideal", "coded", "partial_coded"):
+        spec = dataclasses.replace(base_spec, scheme=scheme)
+        res = build_experiment(spec, xs, ys).run(100, eval_fn=eval_fn,
+                                                 eval_every=25)
         h = res.history[-1]
         if scheme == "naive":
             base_wall = h.wall_clock
         speed = f"({base_wall / h.wall_clock:.1f}x)" if scheme != "naive" else ""
         t_star = f"{res.t_star:.2f}s" if res.t_star else "-"
-        print(f"{scheme:8s} {h.accuracy:9.3f} {h.wall_clock:9.0f}s {speed:>6s}"
-              f" {t_star:>9s}")
+        eps = f"{res.privacy_eps:.2f}" if res.privacy_eps else "-"
+        print(f"{scheme:14s} {h.accuracy:9.3f} {h.wall_clock:9.0f}s "
+              f"{speed:>6s} {t_star:>9s} {eps:>10s}")
 
     # 4. confidence bands: 8 independent delay realizations, one vmapped call
     print("\nwall-clock over 8 delay realizations (mean ± std, final round):")
     for scheme in ("naive", "coded"):
-        sim = fed_runtime.FederatedSimulation(xs, ys, fl, tcfg, scheme=scheme)
-        mean, std = sim.run_multi(100, 8).wall_clock_bands()
+        exp = build_experiment(dataclasses.replace(base_spec, scheme=scheme),
+                               xs, ys)
+        mean, std = exp.run_multi(100, 8).wall_clock_bands()
         print(f"  {scheme:6s} {mean[-1]:8.0f}s ± {std[-1]:.1f}s")
 
 

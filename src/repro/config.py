@@ -168,3 +168,125 @@ class RFFConfig:
     q: int = 2000
     sigma: float = 5.0
     seed: int = 1234
+
+
+_ENGINES = ("batched", "legacy")
+_KERNEL_BACKENDS = ("xla", "pallas")
+_ALLOC_BACKENDS = ("auto", "scalar", "vectorized")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One federated experiment, declaratively.
+
+    The spec composes every knob the paper's experiments vary — scheme,
+    coding redundancy, delay profile, mesh, kernel/allocation backends —
+    into a single frozen, hashable, JSON-serializable value.  Build the
+    runnable deployment with ``repro.api.build_experiment(spec, xs, ys)``;
+    the spec itself never holds data arrays, so it round-trips through
+    ``to_dict``/``from_dict`` bit-exactly and can be logged next to the
+    artifacts it produced.
+
+    ``scheme`` names an entry of the scheme registry
+    (``repro.core.schemes``); ``None`` defers to ``fl.scheme``.  Scheme
+    names are validated at build time against the live registry (schemes
+    may be registered after the spec is created), everything else is
+    validated here.  ``scheme_params`` carries scheme-specific knobs (e.g.
+    the partial-coding ``u_fraction``) as a sorted tuple of pairs so the
+    spec stays hashable; pass a plain dict, it is normalized.
+    ``delay_profile`` names a heterogeneity profile
+    (``repro.core.delay_model.HETEROGENEITY_PROFILES``) whose k1/k2 knobs
+    override the matching ``fl`` fields at build time.  ``mesh`` is a
+    device count for a 1-D "clients" mesh (a concrete ``jax.sharding.Mesh``
+    is not serializable — pass one to ``build_experiment`` directly).
+    """
+    fl: FLConfig = FLConfig()
+    train: TrainConfig = TrainConfig()
+    rff: Optional[RFFConfig] = None
+    scheme: Optional[str] = None
+    scheme_params: Tuple[Tuple[str, object], ...] = ()
+    delay_profile: Optional[str] = None
+    engine: str = "batched"
+    kernel_backend: str = "xla"
+    alloc_backend: str = "auto"
+    mesh: Optional[int] = None
+    fused_coded: bool = True
+    secure_aggregation: bool = False
+    steps_per_epoch: int = 1
+
+    def __post_init__(self):
+        if self.engine not in _ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r} "
+                             f"(expected one of {_ENGINES})")
+        if self.kernel_backend not in _KERNEL_BACKENDS:
+            raise ValueError(f"unknown kernel_backend "
+                             f"{self.kernel_backend!r} "
+                             f"(expected one of {_KERNEL_BACKENDS})")
+        if self.alloc_backend not in _ALLOC_BACKENDS:
+            raise ValueError(f"unknown alloc_backend {self.alloc_backend!r} "
+                             f"(expected one of {_ALLOC_BACKENDS})")
+        if self.mesh is not None and (not isinstance(self.mesh, int)
+                                      or self.mesh < 1):
+            raise ValueError(f"mesh must be a positive device count or "
+                             f"None, got {self.mesh!r}")
+        if self.steps_per_epoch < 1:
+            raise ValueError(f"steps_per_epoch must be >= 1, "
+                             f"got {self.steps_per_epoch}")
+        # normalize scheme_params (dict / iterable of pairs) to a sorted
+        # tuple of pairs so equal specs hash equal regardless of input form
+        params = self.scheme_params
+        if isinstance(params, dict):
+            items = params.items()
+        else:
+            items = (tuple(p) for p in params)
+        norm = tuple(sorted((str(k), v) for k, v in items))
+        object.__setattr__(self, "scheme_params", norm)
+        if self.delay_profile is not None:
+            from repro.core.delay_model import HETEROGENEITY_PROFILES
+            if self.delay_profile not in HETEROGENEITY_PROFILES:
+                raise ValueError(
+                    f"unknown delay_profile {self.delay_profile!r} "
+                    f"(expected one of "
+                    f"{tuple(HETEROGENEITY_PROFILES)})")
+
+    @property
+    def resolved_scheme(self) -> str:
+        return self.scheme if self.scheme is not None else self.fl.scheme
+
+    @property
+    def scheme_params_dict(self) -> dict:
+        return dict(self.scheme_params)
+
+    def resolved_fl(self) -> FLConfig:
+        """`fl` with the named delay profile's knobs applied."""
+        if self.delay_profile is None:
+            return self.fl
+        from repro.core.delay_model import HETEROGENEITY_PROFILES
+        return dataclasses.replace(
+            self.fl, **HETEROGENEITY_PROFILES[self.delay_profile])
+
+    # ------------------------------------------------------------- round trip
+    def to_dict(self) -> dict:
+        """Plain-JSON dict; `from_dict(to_dict(spec)) == spec`."""
+        d = dataclasses.asdict(self)
+        d["scheme_params"] = dict(self.scheme_params)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        d = dict(d)
+        for key, typ in (("fl", FLConfig), ("train", TrainConfig),
+                         ("rff", RFFConfig)):
+            val = d.get(key)
+            if isinstance(val, dict):
+                val = dict(val)
+                # JSON has no tuples; restore the tuple-typed fields
+                for tup_field in ("lr_decay_epochs",):
+                    if tup_field in val and val[tup_field] is not None:
+                        val[tup_field] = tuple(val[tup_field])
+                d[key] = typ(**val)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(
+                f"unknown ExperimentSpec field(s) {sorted(unknown)}")
+        return cls(**d)

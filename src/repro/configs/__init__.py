@@ -8,7 +8,7 @@ import importlib
 import jax
 import jax.numpy as jnp
 
-from repro.config import SHAPES, ModelConfig, MoEConfig, SSMConfig, ShapeConfig
+from repro.config import SHAPES, ModelConfig, ShapeConfig
 
 ARCH_IDS = [
     "yi-6b", "command-r-plus-104b", "internvl2-1b", "mixtral-8x7b",

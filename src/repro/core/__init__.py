@@ -7,10 +7,11 @@ Modules:
   encoding        -- private generators, weight matrices, parity sets (SIII-B/D)
   aggregation     -- coded federated gradient aggregation (SIII-E)
   privacy         -- eps-MI-DP budget of parity sharing (Appendix F)
-  fed_runtime     -- the FL server loop: coded / naive / greedy schemes (SV)
+  schemes         -- pluggable straggler-mitigation scheme registry (SV)
+  fed_runtime     -- the FL server loop driving a registered scheme
 """
 from repro.core import (aggregation, delay_model, encoding, fed_runtime,
-                        load_allocation, privacy, rff)
+                        load_allocation, privacy, rff, schemes)
 
 __all__ = ["aggregation", "delay_model", "encoding", "fed_runtime",
-           "load_allocation", "privacy", "rff"]
+           "load_allocation", "privacy", "rff", "schemes"]

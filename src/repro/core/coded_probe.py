@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import FLConfig, RFFConfig, TrainConfig
-from repro.core import fed_runtime, rff
+from repro.config import ExperimentSpec, FLConfig, RFFConfig, TrainConfig
+from repro.core import rff
 from repro.models import transformer
 
 
@@ -56,6 +56,8 @@ def coded_probe_training(cfg, params, client_tokens, client_labels,
     tcfg = TrainConfig(learning_rate=lr,
                        lr_decay_epochs=(int(iterations * 0.6),
                                         int(iterations * 0.85)))
-    sim = fed_runtime.FederatedSimulation(xh, y, fl, tcfg, scheme=scheme)
-    res = sim.run(iterations)
+    from repro.api import build_experiment
+    exp = build_experiment(
+        ExperimentSpec(fl=fl, train=tcfg, rff=rcfg, scheme=scheme), xh, y)
+    res = exp.run(iterations)
     return res, (omega, delta)

@@ -238,3 +238,38 @@ def scale_tau(node: NodeDelayParams, payload_bits: float) -> NodeDelayParams:
 def packet_bits(fl_cfg, n_scalars: int) -> float:
     """Bits to ship `n_scalars` scalars incl. protocol overhead."""
     return n_scalars * fl_cfg.bits_per_scalar * (1.0 + fl_cfg.overhead)
+
+
+# Paper §V-A heterogeneity knobs: effective link rates decay as k1^i and MAC
+# rates as k2^i over clients (random permutation), so smaller factors mean a
+# heavier straggler tail.  The grid walks from a homogeneous network through
+# the §V-A operating point out to a heavy straggler tail, plus one-knob
+# skews isolating link-rate vs MAC-rate heterogeneity.  Named profiles are
+# addressable from `ExperimentSpec.delay_profile`; the benchmark launcher
+# sweeps the full grid.
+HETEROGENEITY_PROFILES = {
+    "uniform": dict(rate_decay=1.0, mac_decay=1.0),
+    "gentle": dict(rate_decay=0.99, mac_decay=0.95),
+    "mild": dict(rate_decay=0.98, mac_decay=0.9),
+    "moderate": dict(rate_decay=0.96, mac_decay=0.85),
+    "paper": dict(rate_decay=0.95, mac_decay=0.8),
+    "rate_skew": dict(rate_decay=0.9, mac_decay=1.0),
+    "rate_heavy": dict(rate_decay=0.85, mac_decay=1.0),
+    "mac_skew": dict(rate_decay=1.0, mac_decay=0.7),
+    "mac_heavy": dict(rate_decay=1.0, mac_decay=0.55),
+    "mixed": dict(rate_decay=0.94, mac_decay=0.75),
+    "heavy": dict(rate_decay=0.92, mac_decay=0.7),
+    "extreme": dict(rate_decay=0.9, mac_decay=0.6),
+    "harsh": dict(rate_decay=0.85, mac_decay=0.5),
+    "brutal": dict(rate_decay=0.8, mac_decay=0.45),
+}
+
+
+def ideal_round_time(nodes: "list[NodeDelayParams]", l: float) -> float:
+    """Deterministic no-straggler round time (seconds).
+
+    One transmission per direction, deterministic compute, full load l on
+    every client — the floor for the full-load (naive/greedy) schemes.
+    """
+    prm = stack_node_params(nodes)
+    return float(np.max(l / prm["mu"] + prm["tau_down"] + prm["tau_up"]))

@@ -1,19 +1,20 @@
-"""Federated-learning runtime: CodedFedL / naive-uncoded / greedy-uncoded.
+"""Federated-learning runtime: the engine behind `repro.api.Experiment`.
 
 This is the paper's system layer (§III, §V): a server loop over training
 rounds in a simulated wireless MEC network.  Compute/communication delays are
 *sampled from the paper's stochastic models* each round; the simulated
 wall-clock is the quantity all of Fig. 4/5 and Tables II/III are measured in.
 
-Schemes (paper §V "Schemes"):
-  naive  — server waits for ALL n clients; round time = max_j T_j.
-  greedy — server waits for the fastest (1-psi)*n clients.
-  coded  — CodedFedL: clients process l*_j points, server adds the coded
-           gradient over the global parity set, round time = t*.
+The straggler-mitigation scheme is a pluggable registry object
+(``repro.core.schemes``: naive / greedy / ideal / coded / partial_coded,
+plus anything registered since) that owns the deployment setup and its
+contributions to the compiled step; `Experiment` is built from a frozen
+`ExperimentSpec` (``repro.api.build_experiment``), and the kwargs-era
+`FederatedSimulation` survives as a deprecated shim over it.
 
 Engines
 -------
-``FederatedSimulation(..., engine="batched")`` (the default) runs the whole
+``ExperimentSpec(engine="batched")`` (the default) runs the whole
 training loop as one compiled program:
 
   * per-client processed subsets are padded to a dense ``(n, l_max, q)``
@@ -47,8 +48,10 @@ fixed-iteration JAX solver (``"auto"`` chooses by population size).
 
 Client-mesh mode
 ----------------
-``FederatedSimulation(..., mesh=k)`` (an int, or a 1-D ``jax.sharding.Mesh``
-with a single ``"clients"`` axis) partitions the dense client tensor, the
+``ExperimentSpec(mesh=k)`` (an int device count; a concrete 1-D
+``jax.sharding.Mesh`` with a single ``"clients"`` axis goes through
+``build_experiment(..., mesh=...)`` instead) partitions the dense client
+tensor, the
 per-round returned mask, and the per-shard gradient computation over the
 mesh with ``shard_map``; each device computes its local clients' gradients
 and the shards are reduced with a ``psum`` — structurally mirroring the MEC
@@ -73,6 +76,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -81,9 +85,9 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.config import FLConfig, RFFConfig, TrainConfig
-from repro.core import aggregation, encoding, load_allocation
-from repro.core.delay_model import (NodeDelayParams, mec_network, packet_bits,
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
+from repro.core import aggregation, schemes
+from repro.core.delay_model import (mec_network, packet_bits,
                                     sample_round_times, scale_tau)
 
 #: name of the client-partitioned mesh axis (see `repro.launch.mesh`)
@@ -112,6 +116,10 @@ class FedResult:
     t_star: float | None = None
     loads: np.ndarray | None = None
     setup_time: float = 0.0    # parity upload overhead (coded only)
+    # worst-client eps-MI-DP leakage (bits) of the shared parity rows
+    # (core/privacy.py, paper Appendix F); None for schemes that share
+    # nothing beyond gradients
+    privacy_eps: float | None = None
 
 
 @dataclasses.dataclass
@@ -128,6 +136,7 @@ class MultiFedResult:
     loads: np.ndarray | None = None
     setup_time: float = 0.0
     accuracy: np.ndarray | None = None   # (R,) if an eval_fn was supplied
+    privacy_eps: float | None = None     # see FedResult.privacy_eps
 
     def wall_clock_bands(self) -> tuple[np.ndarray, np.ndarray]:
         """(mean, std) over realizations, each (iterations,) — the Fig. 4/5
@@ -217,6 +226,13 @@ def build_step(static: dict):
             n_ret = jnp.sum(by_deadline).astype(jnp.int32)
             ret_real = by_deadline * consts["active"]
             denom = m
+        elif scheme == "ideal":
+            # deterministic no-straggler floor: all clients, full load,
+            # fixed round clock (the sampled t_row is ignored)
+            n_ret = jnp.int32(n)
+            t_round = consts["t_ideal"]
+            ret_real = jnp.ones_like(t_row)
+            denom = m
         else:
             raise ValueError(scheme)
         # ret_tail covers the pseudo-client rows: the always-active parity
@@ -246,55 +262,58 @@ def _pad_rows(arr: jnp.ndarray, rows: int) -> jnp.ndarray:
     return jnp.pad(arr, ((0, extra),) + ((0, 0),) * (arr.ndim - 1))
 
 
-class FederatedSimulation:
-    """Simulates one FL deployment: n clients + MEC server, one scheme.
+class Experiment:
+    """One runnable FL deployment, built from a frozen `ExperimentSpec`.
 
     Clients hold equally sized local minibatches of RFF-transformed data
     (x_stack: (n, l, q), y_stack: (n, l, c)); the delay network follows
-    paper §V-A.  ``engine`` selects the compiled batched scan loop
-    ("batched", default) or the per-client Python oracle ("legacy");
-    ``mesh`` (int or a 1-D "clients" Mesh) shards the batched engine's
-    client axis over devices.
+    paper §V-A.  The spec names a registered scheme
+    (``repro.core.schemes``) that owns the deployment setup — load
+    allocation, parity construction, privacy accounting — and its
+    contributions to the compiled step.  ``spec.engine`` selects the
+    compiled batched scan loop ("batched", default) or the per-client
+    Python oracle ("legacy"); ``spec.mesh`` (a device count) or the
+    ``mesh`` override (an int or a concrete 1-D "clients" Mesh) shards the
+    batched engine's client axis over devices.
+
+    Prefer the entrypoint ``repro.api.build_experiment(spec, xs, ys)``;
+    the kwargs-era ``FederatedSimulation`` front-end survives as a
+    deprecated shim over this class.
     """
 
-    def __init__(self, x_stack, y_stack, fl_cfg: FLConfig,
-                 train_cfg: TrainConfig, *, scheme: Optional[str] = None,
-                 steps_per_epoch: int = 1, nodes: Optional[list] = None,
+    def __init__(self, spec: ExperimentSpec, x_stack, y_stack, *,
+                 nodes: Optional[list] = None,
                  rng: Optional[np.random.Generator] = None,
-                 secure_aggregation: bool = False,
-                 engine: str = "batched",
-                 kernel_backend: str = "xla",
-                 alloc_backend: str = "auto",
-                 mesh: "Mesh | int | None" = None,
-                 fused_coded: bool = True):
-        if engine not in ("batched", "legacy"):
-            raise ValueError(f"unknown engine {engine!r}")
-        if kernel_backend not in ("xla", "pallas"):
-            raise ValueError(f"unknown kernel_backend {kernel_backend!r} "
-                             "(expected 'xla' or 'pallas')")
-        if alloc_backend not in ("auto", "scalar", "vectorized"):
-            raise ValueError(f"unknown alloc_backend {alloc_backend!r} "
-                             "(expected 'auto', 'scalar' or 'vectorized')")
-        self.engine = engine
+                 mesh: "Mesh | int | None" = None):
+        if not isinstance(spec, ExperimentSpec):
+            raise TypeError(
+                f"spec must be an ExperimentSpec, got {type(spec).__name__}"
+                " (legacy kwargs callers: use FederatedSimulation)")
+        self.spec = spec
+        fl_cfg = spec.resolved_fl()      # delay-profile knobs applied
+        self.engine = spec.engine
         # "pallas" routes the batched engine's gradient calls through the
         # fused Pallas kernels (interpret mode off-TPU so CI stays green on
         # CPU); "xla" keeps the plain-jnp vmapped path.  The legacy oracle
         # engine always uses the jnp path.
-        self.kernel_backend = kernel_backend
-        self.alloc_backend = alloc_backend
+        self.kernel_backend = spec.kernel_backend
+        self.alloc_backend = spec.alloc_backend
         self._interpret = jax.default_backend() != "tpu"
-        self.mesh = self._resolve_mesh(mesh)
-        self.fused_coded = fused_coded
-        self.secure_aggregation = secure_aggregation
-        self.scheme = scheme or fl_cfg.scheme
+        self.mesh = self._resolve_mesh(spec.mesh if mesh is None else mesh)
+        self.fused_coded = spec.fused_coded
+        self.secure_aggregation = spec.secure_aggregation
+        self.scheme = spec.resolved_scheme
+        self.scheme_obj = schemes.get_scheme(self.scheme)
+        self.step_kind = self.scheme_obj.step_kind
+        self.scheme_params = spec.scheme_params_dict
         self.fl = fl_cfg
-        self.train = train_cfg
+        self.train = spec.train
         self.x = jnp.asarray(x_stack)
         self.y = jnp.asarray(y_stack)
         self.n, self.l, self.q = self.x.shape
         self.c = self.y.shape[-1]
         self.m = self.n * self.l
-        self.steps_per_epoch = steps_per_epoch
+        self.steps_per_epoch = spec.steps_per_epoch
         self.rng = rng or np.random.default_rng(fl_cfg.seed + 17)
 
         # --- delay network (tau scaled to the actual gradient/model packet)
@@ -303,13 +322,14 @@ class FederatedSimulation:
         self.nodes = [scale_tau(nd, payload) for nd in base_nodes[:self.n]]
 
         self.t_star = None
+        self.t_ideal = None
         self.loads = np.full(self.n, self.l, dtype=np.float64)
         self.parity = None
         self.setup_time = 0.0
         self.processed_idx = [np.arange(self.l) for _ in range(self.n)]
         self._scan_cache: dict = {}
-        if self.scheme == "coded":
-            self._setup_coded()
+        self.scheme_obj.setup(self)
+        self.privacy_eps = self.scheme_obj.privacy_budget(self)
         self._consts = None     # built lazily on first run/run_multi
 
     @staticmethod
@@ -325,7 +345,7 @@ class FederatedSimulation:
                 f"got {mesh.axis_names}")
         return mesh
 
-    # ------------------------------------------------------------- coded setup
+    # -------------------------------------------------------- scheme plumbing
     def _pick_alloc_backend(self) -> str:
         """Resolve alloc_backend="auto": the vectorized jitted solver wins at
         scale, the scalar loop has no compile cost at small n."""
@@ -335,135 +355,24 @@ class FederatedSimulation:
                         for nd in self.nodes)
         return "vectorized" if (symmetric and self.n >= 64) else "scalar"
 
-    def _setup_coded(self):
-        fl = self.fl
-        u_max = int(round(fl.delta * self.m))
-        allocate = (load_allocation.two_step_allocate_vectorized
-                    if self._pick_alloc_backend() == "vectorized"
-                    else load_allocation.two_step_allocate)
-        alloc = allocate(
-            self.nodes, [float(self.l)] * self.n, server=None,
-            u_max=float(u_max), m=float(self.m))
-        self.t_star = alloc.t_star
-        self.u = u_max
-        # integer loads (floor, at least 0)
-        self.loads = np.minimum(np.floor(alloc.loads).astype(int), self.l)
-        # probability of return by t* per client at its optimal load
-        self.p_return = np.array([
-            nd.cdf(self.t_star, float(ld)) if ld > 0 else 0.0
-            for nd, ld in zip(self.nodes, self.loads)])
-        # Processed-subset sampling v2 (vectorized): one `rng.permuted` draw
-        # over an (n, l) index matrix replaces the per-client
-        # `rng.permutation` loop.  This consumes the numpy RNG stream
-        # differently from v1 (so subsets differ across versions — pinned by
-        # tests/test_batched_engine.py::test_vectorized_subset_sampling_spec)
-        # but stays fully deterministic per seed.
-        perm = self.rng.permuted(
-            np.tile(np.arange(self.l), (self.n, 1)), axis=1)
-        take = np.arange(self.l)[None, :] < self.loads[:, None]   # (n, l)
-        processed = np.zeros((self.n, self.l), dtype=bool)
-        row_ids = np.broadcast_to(np.arange(self.n)[:, None],
-                                  (self.n, self.l))
-        processed[row_ids[take], perm[take]] = True
-        self.processed_idx = [np.nonzero(processed[j])[0]
-                              for j in range(self.n)]
-        # weight matrices (paper §III-D) for the whole population at once:
-        # sqrt(1 - P(return)) on processed points, 1 elsewhere
-        w_stack = np.where(processed,
-                           np.sqrt(1.0 - self.p_return)[:, None],
-                           1.0).astype(np.float32)
-        # per-client PRNG keys: same sequential split chain the per-client
-        # encode would consume, rolled up into one lax.scan
-        def _chain(key, _):
-            key, sub = jax.random.split(key)
-            return key, sub
-        _, keys = jax.lax.scan(_chain, jax.random.PRNGKey(self.fl.seed + 99),
-                               None, length=self.n)
-        # all n local parity sets in one batched encode (paper eq. 19) —
-        # one vmapped jnp call or one tiled Pallas kernel launch
-        stacked = encoding.encode_local_batched(
-            keys, self.x, self.y, w_stack, self.u,
-            use_pallas=self.kernel_backend == "pallas",
-            interpret=self._interpret)
-        if self.secure_aggregation:
-            # paper §VI future work: the server only ever sees masked
-            # uploads; pairwise masks cancel in the sum (core/secure_agg.py)
-            from repro.core import secure_agg
-            skey = jax.random.PRNGKey(self.fl.seed + 1234)
-            masked = [secure_agg.mask_parity(
-                skey, j, self.n,
-                encoding.LocalParity(x=stacked.x[j], y=stacked.y[j]))
-                for j in range(self.n)]
-            self.parity = secure_agg.secure_aggregate(masked)
-        else:
-            self.parity = encoding.aggregate_parity_stacked(stacked)
-        # one-time parity upload overhead: clients upload u*(q+c) scalars in
-        # parallel; expected transmissions 1/(1-p) (paper Fig 4a inset).
-        # NodeDelayParams validates p < 1 at construction, so the expected
-        # transmission count is finite here by contract.
-        bits = packet_bits(fl, self.u * (self.q + self.c))
-        self.setup_time = max(
-            nd.tau / packet_bits(fl, self.q * self.c) * bits / (1.0 - nd.p)
-            for nd in self.nodes)
-        # ragged per-client subsets: only the legacy oracle reads them
-        if self.engine == "legacy":
-            self._sub_x = [self.x[j][self.processed_idx[j]]
-                           for j in range(self.n)]
-            self._sub_y = [self.y[j][self.processed_idx[j]]
-                           for j in range(self.n)]
-        # dense mask-padded (n, l_max, ·) view: the chosen indices of each
-        # row, sorted ascending, with unchosen slots pushed past the end by
-        # an `l` sentinel — vectorized replacement for the per-client
-        # pad/gather loop
-        l_max = max(1, int(self.loads.max()))
-        sorted_idx = np.sort(np.where(take, perm, self.l), axis=1)[:, :l_max]
-        pad_mask = (sorted_idx < self.l).astype(np.float32)
-        pad_idx = np.where(sorted_idx < self.l, sorted_idx, 0).astype(np.int32)
-        rows = jnp.asarray(pad_idx)
-        mask = jnp.asarray(pad_mask)[:, :, None]
-        gather = jax.vmap(lambda xj, ij: xj[ij])
-        self._sub_x_pad = gather(self.x, rows) * mask
-        self._sub_y_pad = gather(self.y, rows) * mask
-        self._grad_mask = jnp.asarray(pad_mask)       # (n, l_max) row validity
-
     # ------------------------------------------------------------- step consts
     def consts_point_len(self) -> int:
         """Point-axis length of `build_consts()["gx"]` — shape arithmetic
         only, so sweep callers can compute a grid-wide `l_target` without
         materializing (and discarding) the fused tensors per profile."""
-        if self.scheme != "coded":
-            return self.l
-        l_max = int(self._sub_x_pad.shape[1])
-        return max(l_max, self.u) if self.fused_coded else l_max
+        return self.scheme_obj.consts_point_len(self)
 
     def build_consts(self, l_target: Optional[int] = None) -> dict:
         """Per-deployment arrays consumed by `build_step`'s step function.
 
+        The registered scheme contributes the gradient tensors and its
+        scheme-specific consts (deadlines, parity, activity masks).
         `l_target` pads the point axis up to a common length so deployments
         with different per-client loads stack along a profile axis
         (repro.launch.sweep).  With a mesh, the client axis is additionally
         zero-row padded to a multiple of the mesh size.
         """
-        if self.scheme == "coded":
-            if self.fused_coded:
-                gx, gy, gmask = aggregation.fused_client_parity_tensors(
-                    self._sub_x_pad, self._sub_y_pad, self._grad_mask,
-                    self.parity.x, self.parity.y, pnr_c=0.0,
-                    l_target=l_target)
-                tail = [1.0]          # the always-active parity pseudo-row
-            else:
-                gx, gy, gmask = (self._sub_x_pad, self._sub_y_pad,
-                                 self._grad_mask)
-                if l_target is not None and l_target > gx.shape[1]:
-                    pad = ((0, 0), (0, l_target - gx.shape[1]))
-                    gx = jnp.pad(gx, pad + ((0, 0),))
-                    gy = jnp.pad(gy, pad + ((0, 0),))
-                    gmask = jnp.pad(gmask, pad)
-                tail = []
-        else:
-            gx, gy = self.x, self.y
-            gmask = jnp.ones((self.n, self.l), self.x.dtype)
-            tail = []
+        gx, gy, gmask, tail = self.scheme_obj.grad_tensors(self, l_target)
         if self.mesh is not None:
             rows = -(-gx.shape[0] // self.mesh.size) * self.mesh.size
             tail = tail + [0.0] * (rows - gx.shape[0])
@@ -473,18 +382,13 @@ class FederatedSimulation:
             "gx": gx, "gy": gy, "gmask": gmask,
             "ret_tail": jnp.asarray(tail, jnp.float32),
         }
-        if self.scheme == "coded":
-            consts["t_star"] = jnp.float32(self.t_star)
-            consts["active"] = jnp.asarray(self.loads > 0, jnp.float32)
-            if not self.fused_coded:
-                consts["par_x"] = self.parity.x
-                consts["par_y"] = self.parity.y
+        consts.update(self.scheme_obj.extra_consts(self))
         return consts
 
     def step_static(self, collect_theta: bool = False) -> dict:
         """Python-static step parameters matching `build_consts`."""
         return {
-            "scheme": self.scheme,
+            "scheme": self.step_kind,
             "n": self.n,
             "n_wait": max(1, int(math.ceil((1.0 - self.fl.psi) * self.n))),
             "l2": self.train.l2_reg,
@@ -554,7 +458,8 @@ class FederatedSimulation:
             history.append(RoundLog(it, float(wall[it]), int(n_ret[it]),
                                     loss, acc))
         return FedResult(theta=theta, history=history, t_star=self.t_star,
-                         loads=self.loads, setup_time=self.setup_time)
+                         loads=self.loads, setup_time=self.setup_time,
+                         privacy_eps=self.privacy_eps)
 
     # ---------------------------------------------------------- legacy engine
     def _run_legacy(self, iterations: int, times_all: np.ndarray,
@@ -568,25 +473,29 @@ class FederatedSimulation:
 
         for it in range(iterations):
             times = times_all[it]
-            if self.scheme == "naive":
+            if self.step_kind == "naive":
                 returned = np.ones(self.n, dtype=bool)
                 t_round = float(np.max(times))
                 denom = self.m
-            elif self.scheme == "greedy":
+            elif self.step_kind == "greedy":
                 order = np.argsort(times)
                 returned = np.zeros(self.n, dtype=bool)
                 returned[order[:n_wait]] = True
                 t_round = float(times[order[n_wait - 1]])
                 denom = int(returned.sum()) * self.l
-            elif self.scheme == "coded":
+            elif self.step_kind == "coded":
                 returned = times <= self.t_star
                 t_round = float(self.t_star)
                 denom = self.m
+            elif self.step_kind == "ideal":
+                returned = np.ones(self.n, dtype=bool)
+                t_round = float(self.t_ideal)
+                denom = self.m
             else:
-                raise ValueError(self.scheme)
+                raise ValueError(self.step_kind)
 
             # gradients
-            if self.scheme == "coded":
+            if self.step_kind == "coded":
                 grads = []
                 for j in range(self.n):
                     if returned[j] and self.loads[j] > 0:
@@ -613,7 +522,8 @@ class FederatedSimulation:
             history.append(RoundLog(it, wall, int(returned.sum()), loss, acc))
 
         return FedResult(theta=theta, history=history, t_star=self.t_star,
-                         loads=self.loads, setup_time=self.setup_time)
+                         loads=self.loads, setup_time=self.setup_time,
+                         privacy_eps=self.privacy_eps)
 
     # ------------------------------------------------------------------- runs
     def run(self, iterations: int,
@@ -683,4 +593,67 @@ class FederatedSimulation:
         return MultiFedResult(theta=theta, wall_clock=wall,
                               returned=np.asarray(n_ret),
                               t_star=self.t_star, loads=self.loads,
-                              setup_time=self.setup_time, accuracy=acc)
+                              setup_time=self.setup_time, accuracy=acc,
+                              privacy_eps=self.privacy_eps)
+
+    # ------------------------------------------------------------------ sweep
+    def sweep(self, *, profiles: dict, iterations: int, realizations: int,
+              schemes: Optional[tuple] = None):
+        """Sweep this experiment's data over heterogeneity profiles.
+
+        Convenience front-end over `repro.launch.sweep.run_sweep` — the
+        same spec (scheme, backends, training config) is replayed across
+        `profiles` ({name: FLConfig-override dict}) in ONE compiled
+        (profile x realization) call per scheme.  `schemes` defaults to
+        just this experiment's scheme.
+        """
+        from repro.launch import sweep as sweep_mod
+        return sweep_mod.run_sweep(
+            self.x, self.y, profiles=profiles, train_cfg=self.train,
+            iterations=iterations, realizations=realizations,
+            schemes=schemes or (self.scheme,), base_spec=self.spec)
+
+
+class FederatedSimulation(Experiment):
+    """Deprecated kwargs front-end over `Experiment`.
+
+    Kept as a thin shim for the pre-spec constructor signature: it folds
+    the kwargs into a frozen `ExperimentSpec` and defers everything to
+    `Experiment`, so both entrypoints share one code path (and therefore
+    identical trajectories — locked down by tests/test_experiment_api.py).
+    New code should build an `ExperimentSpec` and call
+    ``repro.api.build_experiment(spec, x_stack, y_stack)``.
+    """
+
+    def __init__(self, x_stack, y_stack, fl_cfg: FLConfig,
+                 train_cfg: TrainConfig, *, scheme: Optional[str] = None,
+                 steps_per_epoch: int = 1, nodes: Optional[list] = None,
+                 rng: Optional[np.random.Generator] = None,
+                 secure_aggregation: bool = False,
+                 engine: str = "batched",
+                 kernel_backend: str = "xla",
+                 alloc_backend: str = "auto",
+                 mesh: "Mesh | int | None" = None,
+                 fused_coded: bool = True):
+        warnings.warn(
+            "FederatedSimulation is deprecated; build a frozen "
+            "ExperimentSpec and call "
+            "repro.api.build_experiment(spec, x_stack, y_stack) instead",
+            DeprecationWarning, stacklevel=2)
+        # a concrete Mesh object is not spec-serializable — pass it through
+        # as the Experiment-level override instead
+        mesh_obj = None
+        spec_mesh = None
+        if mesh is None or isinstance(mesh, int):
+            spec_mesh = mesh
+        else:
+            mesh_obj = mesh
+        spec = ExperimentSpec(
+            fl=fl_cfg, train=train_cfg, scheme=scheme,
+            engine=engine, kernel_backend=kernel_backend,
+            alloc_backend=alloc_backend, mesh=spec_mesh,
+            fused_coded=fused_coded,
+            secure_aggregation=secure_aggregation,
+            steps_per_epoch=steps_per_epoch)
+        super().__init__(spec, x_stack, y_stack, nodes=nodes, rng=rng,
+                         mesh=mesh_obj)

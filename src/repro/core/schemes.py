@@ -1,0 +1,344 @@
+"""Straggler-mitigation scheme registry (the paper's §V "Schemes").
+
+Each scheme is a registered object that owns its deployment setup — load
+allocation, parity construction, privacy accounting — and its contributions
+to the compiled step (`fed_runtime.build_step` consts / gradient tensors)
+behind one common interface.  The runtime (`repro.core.fed_runtime`), the
+compiled sweep (`repro.launch.sweep`), and the benchmark grid
+(`repro.launch.bench`) all enumerate this registry, so registering a new
+scheme makes it runnable via ``repro.api.build_experiment`` and puts it in
+``BENCH_fed_training.json`` automatically.
+
+Built-in schemes:
+
+  naive          — server waits for ALL n clients (full load).
+  greedy         — server waits for the fastest (1-psi)*n clients.
+  ideal          — deterministic no-straggler floor: full load, exact
+                   compute, one transmission per direction.  Runnable
+                   (same gradients as naive, deterministic wall-clock).
+  coded          — CodedFedL: optimized loads l*_j + a global parity set
+                   with redundancy u = delta * m; round time = t*.
+  partial_coded  — coded with a *tunable fraction* of the redundancy
+                   budget, u = u_fraction * delta * m (Prakash et al. /
+                   Sun et al. style partial coding: less parity shared,
+                   smaller privacy budget, weaker straggler cover).  The
+                   fraction comes from ``ExperimentSpec.scheme_params``
+                   ("u_fraction", default 0.5).
+
+Registering your own::
+
+    from repro.core import schemes
+
+    class MyScheme(schemes.CodedScheme):
+        name = "my_scheme"
+        def u_budget(self, exp):
+            return 7   # any redundancy rule
+
+    schemes.register(MyScheme())
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoding, load_allocation, privacy
+from repro.core.delay_model import ideal_round_time, packet_bits
+
+
+class Scheme:
+    """Base scheme: full per-client loads, no parity, no deadline consts.
+
+    Subclasses set ``name`` (registry key) and ``step_kind`` (the static
+    branch `fed_runtime.build_step` compiles: one of "naive", "greedy",
+    "coded", "ideal").  ``coded`` marks schemes that allocate loads and
+    build a parity set (t_star / loads / parity / privacy budget).
+    """
+    name: str = ""
+    step_kind: str = ""
+    coded: bool = False
+
+    def setup(self, exp) -> None:
+        """Host-side deployment setup; mutates the Experiment in place."""
+
+    def consts_point_len(self, exp) -> int:
+        """Point-axis length of `grad_tensors`' gx — shape arithmetic only,
+        so sweep callers can compute a grid-wide l_target cheaply."""
+        return exp.l
+
+    def grad_tensors(self, exp, l_target=None):
+        """(gx, gy, gmask, ret_tail) — the dense client gradient tensors.
+
+        ret_tail lists the returned-mask entries of any pseudo-client rows
+        appended past the n real clients (mesh padding is applied by the
+        caller on top).
+        """
+        gx, gy = exp.x, exp.y
+        gmask = jnp.ones((exp.n, exp.l), exp.x.dtype)
+        return gx, gy, gmask, []
+
+    def extra_consts(self, exp) -> dict:
+        """Scheme-specific entries of the step `consts` pytree."""
+        return {}
+
+    def privacy_budget(self, exp):
+        """Worst-case eps-MI-DP leakage (bits) of what clients share, or
+        None when nothing beyond gradients leaves the device."""
+        return None
+
+    def __repr__(self):
+        return f"<Scheme {self.name!r} step_kind={self.step_kind!r}>"
+
+
+class NaiveScheme(Scheme):
+    name = "naive"
+    step_kind = "naive"
+
+
+class GreedyScheme(Scheme):
+    name = "greedy"
+    step_kind = "greedy"
+
+
+class IdealScheme(Scheme):
+    """Deterministic no-straggler baseline, now runnable end-to-end.
+
+    Gradient-wise identical to naive (every client, full load); the round
+    clock is the deterministic floor `delay_model.ideal_round_time` instead
+    of the sampled max — so trajectories match naive's all-returned rounds
+    while the wall-clock lower-bounds every full-load scheme.
+    """
+    name = "ideal"
+    step_kind = "ideal"
+
+    def setup(self, exp) -> None:
+        exp.t_ideal = ideal_round_time(exp.nodes, float(exp.l))
+
+    def extra_consts(self, exp) -> dict:
+        return {"t_ideal": jnp.float32(exp.t_ideal)}
+
+
+class CodedScheme(Scheme):
+    """CodedFedL (paper §III): optimized loads + global parity set."""
+    name = "coded"
+    step_kind = "coded"
+    coded = True
+
+    # ------------------------------------------------------------ redundancy
+    def u_budget(self, exp) -> int:
+        """Parity rows u to build — the full paper budget delta * m."""
+        return max(1, int(round(exp.fl.delta * exp.m)))
+
+    # ----------------------------------------------------------------- setup
+    def setup(self, exp) -> None:
+        fl = exp.fl
+        u_max = self.u_budget(exp)
+        allocate = (load_allocation.two_step_allocate_vectorized
+                    if exp._pick_alloc_backend() == "vectorized"
+                    else load_allocation.two_step_allocate)
+        alloc = allocate(
+            exp.nodes, [float(exp.l)] * exp.n, server=None,
+            u_max=float(u_max), m=float(exp.m))
+        exp.t_star = alloc.t_star
+        exp.u = u_max
+        # integer loads (floor, at least 0)
+        exp.loads = np.minimum(np.floor(alloc.loads).astype(int), exp.l)
+        # probability of return by t* per client at its optimal load
+        exp.p_return = np.array([
+            nd.cdf(exp.t_star, float(ld)) if ld > 0 else 0.0
+            for nd, ld in zip(exp.nodes, exp.loads)])
+        # Processed-subset sampling v2 (vectorized): one `rng.permuted` draw
+        # over an (n, l) index matrix replaces the per-client
+        # `rng.permutation` loop.  This consumes the numpy RNG stream
+        # differently from v1 (so subsets differ across versions — pinned by
+        # tests/test_batched_engine.py::test_vectorized_subset_sampling_spec)
+        # but stays fully deterministic per seed.
+        perm = exp.rng.permuted(
+            np.tile(np.arange(exp.l), (exp.n, 1)), axis=1)
+        take = np.arange(exp.l)[None, :] < exp.loads[:, None]   # (n, l)
+        processed = np.zeros((exp.n, exp.l), dtype=bool)
+        row_ids = np.broadcast_to(np.arange(exp.n)[:, None],
+                                  (exp.n, exp.l))
+        processed[row_ids[take], perm[take]] = True
+        exp.processed_idx = [np.nonzero(processed[j])[0]
+                             for j in range(exp.n)]
+        # weight matrices (paper §III-D) for the whole population at once:
+        # sqrt(1 - P(return)) on processed points, 1 elsewhere
+        w_stack = np.where(processed,
+                           np.sqrt(1.0 - exp.p_return)[:, None],
+                           1.0).astype(np.float32)
+        # per-client PRNG keys: same sequential split chain the per-client
+        # encode would consume, rolled up into one lax.scan
+        def _chain(key, _):
+            key, sub = jax.random.split(key)
+            return key, sub
+        _, keys = jax.lax.scan(_chain, jax.random.PRNGKey(fl.seed + 99),
+                               None, length=exp.n)
+        # all n local parity sets in one batched encode (paper eq. 19) —
+        # one vmapped jnp call or one tiled Pallas kernel launch
+        stacked = encoding.encode_local_batched(
+            keys, exp.x, exp.y, w_stack, exp.u,
+            use_pallas=exp.kernel_backend == "pallas",
+            interpret=exp._interpret)
+        if exp.secure_aggregation:
+            # paper §VI future work: the server only ever sees masked
+            # uploads; pairwise masks cancel in the sum (core/secure_agg.py)
+            from repro.core import secure_agg
+            skey = jax.random.PRNGKey(fl.seed + 1234)
+            masked = [secure_agg.mask_parity(
+                skey, j, exp.n,
+                encoding.LocalParity(x=stacked.x[j], y=stacked.y[j]))
+                for j in range(exp.n)]
+            exp.parity = secure_agg.secure_aggregate(masked)
+        else:
+            exp.parity = encoding.aggregate_parity_stacked(stacked)
+        # one-time parity upload overhead: clients upload u*(q+c) scalars in
+        # parallel; expected transmissions 1/(1-p) (paper Fig 4a inset).
+        # NodeDelayParams validates p < 1 at construction, so the expected
+        # transmission count is finite here by contract.
+        bits = packet_bits(fl, exp.u * (exp.q + exp.c))
+        exp.setup_time = max(
+            nd.tau / packet_bits(fl, exp.q * exp.c) * bits / (1.0 - nd.p)
+            for nd in exp.nodes)
+        # ragged per-client subsets: only the legacy oracle reads them
+        if exp.engine == "legacy":
+            exp._sub_x = [exp.x[j][exp.processed_idx[j]]
+                          for j in range(exp.n)]
+            exp._sub_y = [exp.y[j][exp.processed_idx[j]]
+                          for j in range(exp.n)]
+        # dense mask-padded (n, l_max, ·) view: the chosen indices of each
+        # row, sorted ascending, with unchosen slots pushed past the end by
+        # an `l` sentinel — vectorized replacement for the per-client
+        # pad/gather loop
+        l_max = max(1, int(exp.loads.max()))
+        sorted_idx = np.sort(np.where(take, perm, exp.l), axis=1)[:, :l_max]
+        pad_mask = (sorted_idx < exp.l).astype(np.float32)
+        pad_idx = np.where(sorted_idx < exp.l, sorted_idx, 0).astype(np.int32)
+        rows = jnp.asarray(pad_idx)
+        mask = jnp.asarray(pad_mask)[:, :, None]
+        gather = jax.vmap(lambda xj, ij: xj[ij])
+        exp._sub_x_pad = gather(exp.x, rows) * mask
+        exp._sub_y_pad = gather(exp.y, rows) * mask
+        exp._grad_mask = jnp.asarray(pad_mask)       # (n, l_max) row validity
+
+    # ------------------------------------------------------------ step consts
+    def consts_point_len(self, exp) -> int:
+        l_max = int(exp._sub_x_pad.shape[1])
+        return max(l_max, exp.u) if exp.fused_coded else l_max
+
+    def grad_tensors(self, exp, l_target=None):
+        from repro.core import aggregation
+        if exp.fused_coded:
+            gx, gy, gmask = aggregation.fused_client_parity_tensors(
+                exp._sub_x_pad, exp._sub_y_pad, exp._grad_mask,
+                exp.parity.x, exp.parity.y, pnr_c=0.0,
+                l_target=l_target)
+            tail = [1.0]          # the always-active parity pseudo-row
+        else:
+            gx, gy, gmask = (exp._sub_x_pad, exp._sub_y_pad,
+                             exp._grad_mask)
+            if l_target is not None and l_target > gx.shape[1]:
+                pad = ((0, 0), (0, l_target - gx.shape[1]))
+                gx = jnp.pad(gx, pad + ((0, 0),))
+                gy = jnp.pad(gy, pad + ((0, 0),))
+                gmask = jnp.pad(gmask, pad)
+            tail = []
+        return gx, gy, gmask, tail
+
+    def extra_consts(self, exp) -> dict:
+        consts = {
+            "t_star": jnp.float32(exp.t_star),
+            "active": jnp.asarray(exp.loads > 0, jnp.float32),
+        }
+        if not exp.fused_coded:
+            consts["par_x"] = exp.parity.x
+            consts["par_y"] = exp.parity.y
+        return consts
+
+    # --------------------------------------------------------------- privacy
+    def privacy_budget(self, exp) -> float:
+        """Worst-client eps-MI-DP budget (bits) of sharing u parity rows
+        (paper Appendix F, eq. 62)."""
+        return float(max(
+            privacy.mi_dp_budget(np.asarray(exp.x[j]), exp.u)
+            for j in range(exp.n)))
+
+
+class PartialCodedScheme(CodedScheme):
+    """Coded with a tunable fraction of the redundancy budget.
+
+    u = u_fraction * delta * m, u_fraction in (0, 1] — the partial/
+    stochastic-coding regime of Prakash et al. (*Coded Computing for
+    Federated Learning at the Edge*) and Sun et al. (*Stochastic Coded
+    Federated Learning*): smaller parity uploads (cheaper setup, smaller
+    eps-MI-DP leakage) against a later optimal deadline t*.
+    """
+    name = "partial_coded"
+    default_u_fraction = 0.5
+
+    def u_fraction(self, exp) -> float:
+        frac = float(exp.scheme_params.get("u_fraction",
+                                           self.default_u_fraction))
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(
+                f"u_fraction must lie in (0, 1], got {frac}")
+        return frac
+
+    def u_budget(self, exp) -> int:
+        return max(1, int(round(self.u_fraction(exp)
+                                * exp.fl.delta * exp.m)))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Scheme] = {}
+
+
+def register(scheme: Scheme, *, overwrite: bool = False) -> Scheme:
+    """Register a Scheme instance under its ``name``.
+
+    Everything downstream — ``repro.api.build_experiment``, the compiled
+    sweep, the benchmark grid/artifact — enumerates this registry.
+    """
+    if not scheme.name:
+        raise ValueError(f"{scheme!r} has no name")
+    if scheme.step_kind not in ("naive", "greedy", "coded", "ideal"):
+        raise ValueError(
+            f"scheme {scheme.name!r} has unknown step_kind "
+            f"{scheme.step_kind!r}")
+    if scheme.name in _REGISTRY and not overwrite:
+        raise ValueError(f"scheme {scheme.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[scheme.name] = scheme
+    return scheme
+
+
+def unregister(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_scheme(name: str) -> Scheme:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown scheme {name!r} (registered: "
+                         f"{registered_names()})") from None
+
+
+def registered_names() -> tuple[str, ...]:
+    """All registered scheme names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def coded_names() -> tuple[str, ...]:
+    """Names of the coded-family schemes (parity + load allocation)."""
+    return tuple(n for n, s in _REGISTRY.items() if s.coded)
+
+
+register(CodedScheme())
+register(NaiveScheme())
+register(GreedyScheme())
+register(IdealScheme())
+register(PartialCodedScheme())

@@ -1,9 +1,14 @@
 """Scheme-comparison benchmark launcher (Fig. 4/5 trajectory artifact).
 
-Runs coded / naive-uncoded / greedy-uncoded across a set of heterogeneity
-profiles, adds an analytic *ideal-no-straggler* baseline, and writes the
+Runs EVERY registered straggler-mitigation scheme (repro.core.schemes —
+coded / partial_coded / naive / greedy / ideal, plus anything registered
+since) across a set of heterogeneity profiles and writes the
 ``BENCH_fed_training.json`` artifact so the repo's perf trajectory is
 recorded run over run (CI asserts the artifact is written and well-formed).
+The grid is enumerated from the scheme registry at run time, so a newly
+registered scheme appears in the artifact automatically; coded-family
+schemes additionally report their parity privacy leakage
+(``privacy_eps_max_bits``, core/privacy.py eq. 62).
 
 Engine: by default the whole (profile x realization) grid runs through the
 compiled sweep engine (``repro.launch.sweep.run_sweep``) — ONE compiled
@@ -42,53 +47,28 @@ from typing import Optional
 import numpy as np
 
 from repro.config import TrainConfig
-from repro.core.delay_model import stack_node_params
+from repro.core import schemes as schemes_registry
+# re-exported names: the profile grid and the analytic round-time floor
+# moved to repro.core.delay_model so ExperimentSpec.delay_profile can name
+# profiles without importing the launch layer
+from repro.core.delay_model import HETEROGENEITY_PROFILES  # noqa: F401
+from repro.core.delay_model import ideal_round_time  # noqa: F401
 from repro.launch import sweep as sweep_mod
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 ARTIFACT_NAME = "BENCH_fed_training.json"
-SCHEMES = ("coded", "naive", "greedy")
-
-# Paper §V-A heterogeneity knobs: effective link rates decay as k1^i and MAC
-# rates as k2^i over clients (random permutation), so smaller factors mean a
-# heavier straggler tail.  The grid walks from a homogeneous network through
-# the §V-A operating point out to a heavy straggler tail, plus one-knob
-# skews isolating link-rate vs MAC-rate heterogeneity — the deployment
-# sweep regime the compiled sweep engine covers in one call per scheme.
-HETEROGENEITY_PROFILES = {
-    "uniform": dict(rate_decay=1.0, mac_decay=1.0),
-    "gentle": dict(rate_decay=0.99, mac_decay=0.95),
-    "mild": dict(rate_decay=0.98, mac_decay=0.9),
-    "moderate": dict(rate_decay=0.96, mac_decay=0.85),
-    "paper": dict(rate_decay=0.95, mac_decay=0.8),
-    "rate_skew": dict(rate_decay=0.9, mac_decay=1.0),
-    "rate_heavy": dict(rate_decay=0.85, mac_decay=1.0),
-    "mac_skew": dict(rate_decay=1.0, mac_decay=0.7),
-    "mac_heavy": dict(rate_decay=1.0, mac_decay=0.55),
-    "mixed": dict(rate_decay=0.94, mac_decay=0.75),
-    "heavy": dict(rate_decay=0.92, mac_decay=0.7),
-    "extreme": dict(rate_decay=0.9, mac_decay=0.6),
-    "harsh": dict(rate_decay=0.85, mac_decay=0.5),
-    "brutal": dict(rate_decay=0.8, mac_decay=0.45),
-}
+# core grid every artifact must cover; the live registry may add more
+CORE_SCHEMES = ("coded", "naive", "greedy", "ideal")
+#: registry snapshot at import — prefer `schemes_registry.registered_names()`
+SCHEMES = schemes_registry.registered_names()
 
 
-def ideal_round_time(nodes, l: float) -> float:
-    """Deterministic no-straggler round time (seconds).
-
-    One transmission per direction, deterministic compute, full load l on
-    every client — the floor for the full-load (naive/greedy) schemes.
-    """
-    prm = stack_node_params(nodes)
-    return float(np.max(l / prm["mu"] + prm["tau_down"] + prm["tau_up"]))
-
-
-def _build_sims(xs, ys, profiles, fl_base, tc, kernel_backend):
-    """{scheme: {profile: FederatedSimulation}} — the per-deployment setup
+def _build_sims(xs, ys, profiles, fl_base, tc, kernel_backend, scheme_names):
+    """{scheme: {profile: Experiment}} — the per-deployment setup
     (load allocation, parity encode, delay network) both engines share."""
     return {scheme: sweep_mod._build_sims(xs, ys, profiles, tc, scheme,
                                           fl_base, kernel_backend)
-            for scheme in SCHEMES}
+            for scheme in scheme_names}
 
 
 def _run_loop(sims, iters, realizations):
@@ -113,15 +93,23 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
                 measure_loop: bool = True) -> dict:
     """Run the scheme comparison over heterogeneity profiles.
 
-    Returns the artifact dict (see `write_artifact` / `validate_artifact`).
-    Simulated wall-clocks come from the multi-realization scan (mean ± std
-    over independent delay realizations); host timing depends on `engine`:
-    "sweep" (default) compiles one (profile x realization) call per scheme
-    and, with `measure_loop`, also times the looped per-profile path so the
-    artifact records the measured speedup.
+    The scheme grid is the LIVE registry (`repro.core.schemes`), so a
+    newly registered scheme lands in the artifact without touching this
+    module.  Returns the artifact dict (see `write_artifact` /
+    `validate_artifact`).  Simulated wall-clocks come from the
+    multi-realization scan (mean ± std over independent delay
+    realizations); host timing depends on `engine`: "sweep" (default)
+    compiles one (profile x realization) call per scheme and, with
+    `measure_loop`, also times the looped per-profile path so the artifact
+    records the measured speedup.
     """
     if engine not in ("sweep", "loop"):
         raise ValueError(f"unknown engine {engine!r}")
+    scheme_names = schemes_registry.registered_names()
+    missing = set(CORE_SCHEMES) - set(scheme_names)
+    if missing:
+        raise RuntimeError(f"core scheme(s) unregistered: {sorted(missing)}")
+    coded_names = schemes_registry.coded_names()
     profiles = profiles if profiles is not None else HETEROGENEITY_PROFILES
     rng = np.random.default_rng(seed)
     xs = rng.normal(size=(n_clients, l, q)).astype(np.float32) * 0.2
@@ -131,7 +119,8 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
                      lr_decay_epochs=(max(1, iters // 2),))
 
     t0 = time.perf_counter()
-    sims = _build_sims(xs, ys, profiles, fl_base, tc, kernel_backend)
+    sims = _build_sims(xs, ys, profiles, fl_base, tc, kernel_backend,
+                       scheme_names)
     setup_seconds = time.perf_counter() - t0
 
     sweep_info = None
@@ -140,8 +129,8 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
         t0 = time.perf_counter()
         sw = sweep_mod.run_sweep(
             xs, ys, profiles=profiles, train_cfg=tc, iterations=iters,
-            realizations=realizations, schemes=SCHEMES, fl_kwargs=fl_base,
-            kernel_backend=kernel_backend, sims=sims)
+            realizations=realizations, schemes=scheme_names,
+            fl_kwargs=fl_base, kernel_backend=kernel_backend, sims=sims)
         sweep_total = time.perf_counter() - t0
         loop_total = None
         if measure_loop:
@@ -168,7 +157,7 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
             pname: {scheme: (sw.sims[scheme][pname],
                              sw.results[scheme][pname],
                              sw.host_seconds[scheme] / len(profiles))
-                    for scheme in SCHEMES}
+                    for scheme in scheme_names}
             for pname in profiles}
     else:
         per_profile = _run_loop(sims, iters, realizations)
@@ -176,12 +165,8 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
     out_profiles = {}
     for pname, knobs in profiles.items():
         schemes = {}
-        nodes = None
-        for scheme in SCHEMES:
+        for scheme in scheme_names:
             sim, multi, host = per_profile[pname][scheme]
-            if nodes is None:
-                # the delay network depends only on fl, not on the scheme
-                nodes = sim.nodes
             mean, std = multi.wall_clock_bands()
             schemes[scheme] = {
                 "final_wall_clock_mean": float(mean[-1]),
@@ -193,18 +178,16 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
                 "returned_mean": float(np.asarray(multi.returned).mean()),
                 "host_seconds": float(host),
             }
-            if scheme == "coded":
+            if scheme in coded_names:
                 schemes[scheme]["total_load"] = float(np.sum(sim.loads))
-        ideal_final = ideal_round_time(nodes, float(l)) * iters
-        schemes["ideal"] = {
-            "final_wall_clock_mean": float(ideal_final),
-            "final_wall_clock_std": 0.0,
-            "per_round_mean": float(ideal_final / iters),
-            "setup_time": 0.0,
-            "t_star": None,
-            "returned_mean": float(n_clients),
-            "host_seconds": 0.0,
-        }
+                # parity privacy leakage (paper Appendix F): worst-client
+                # eps-MI-DP budget of the shared parity rows
+                schemes[scheme]["privacy_eps_max_bits"] = float(
+                    sim.privacy_eps)
+        # the ideal scheme is runnable now (registry entry "ideal"); its
+        # deterministic wall-clock is the full-load floor the overhead
+        # metric is measured against
+        ideal_final = schemes["ideal"]["final_wall_clock_mean"]
         naive_f = schemes["naive"]["final_wall_clock_mean"]
         coded_f = schemes["coded"]["final_wall_clock_mean"]
         out_profiles[pname] = {
@@ -224,6 +207,10 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
             "realizations": realizations, "delta": delta, "psi": psi,
             "seed": seed, "kernel_backend": kernel_backend,
             "engine": engine,
+            # schema v3: the registry-driven grid is recorded so the
+            # validator checks exactly the schemes this run covered
+            "schemes": list(scheme_names),
+            "coded_schemes": list(coded_names),
         },
         "profiles": out_profiles,
     }
@@ -245,10 +232,17 @@ _SCHEME_FIELDS = ("final_wall_clock_mean", "final_wall_clock_std",
 
 
 def validate_artifact(obj) -> list[str]:
-    """Structural check of the BENCH_fed_training.json artifact.
+    """Structural check of the BENCH_fed_training.json artifact (schema 3).
 
     `obj` is a dict or a path.  Returns a list of problems (empty == valid)
     rather than raising, so CI can print every issue at once.
+
+    Schema v3 (registry-driven grid): ``config.schemes`` records the scheme
+    list the run covered (must include the core coded/naive/greedy/ideal
+    grid) and ``config.coded_schemes`` the coded-family subset; every
+    profile must carry an entry per recorded scheme, and coded-family
+    entries must report ``t_star``, ``total_load``, and the parity privacy
+    leakage ``privacy_eps_max_bits``.
     """
     if isinstance(obj, str):
         try:
@@ -266,8 +260,20 @@ def validate_artifact(obj) -> list[str]:
     for key in ("generated", "config"):
         if key not in obj:
             errs.append(f"missing top-level key {key!r}")
-    if isinstance(obj.get("config"), dict) \
-            and obj["config"].get("engine") == "sweep":
+    config = obj.get("config") if isinstance(obj.get("config"), dict) else {}
+    scheme_list = config.get("schemes")
+    if not isinstance(scheme_list, list) or not scheme_list:
+        errs.append("config.schemes: missing/empty scheme list")
+        scheme_list = list(CORE_SCHEMES)
+    missing_core = set(CORE_SCHEMES) - set(scheme_list)
+    if missing_core:
+        errs.append(f"config.schemes: core scheme(s) absent "
+                    f"{sorted(missing_core)}")
+    coded_list = config.get("coded_schemes")
+    if not isinstance(coded_list, list) or "coded" not in (coded_list or []):
+        errs.append("config.coded_schemes: missing or lacks 'coded'")
+        coded_list = ["coded"]
+    if config.get("engine") == "sweep":
         sweep = obj.get("sweep")
         if not isinstance(sweep, dict):
             errs.append("sweep engine artifact missing 'sweep' section")
@@ -285,7 +291,7 @@ def validate_artifact(obj) -> list[str]:
         return errs + ["missing/empty 'profiles'"]
     for pname, prof in profiles.items():
         schemes = prof.get("schemes", {})
-        for scheme in SCHEMES + ("ideal",):
+        for scheme in scheme_list:
             entry = schemes.get(scheme)
             if not isinstance(entry, dict):
                 errs.append(f"{pname}: missing scheme {scheme!r}")
@@ -295,9 +301,13 @@ def validate_artifact(obj) -> list[str]:
                 if not isinstance(val, (int, float)) or not np.isfinite(val) \
                         or val < 0:
                     errs.append(f"{pname}/{scheme}/{field}: bad value {val!r}")
-        if isinstance(schemes.get("coded"), dict) and \
-                schemes["coded"].get("t_star") in (None, 0):
-            errs.append(f"{pname}/coded: t_star missing")
+            if scheme in coded_list:
+                if not _is_pos(entry.get("t_star")):
+                    errs.append(f"{pname}/{scheme}: t_star missing")
+                for field in ("total_load", "privacy_eps_max_bits"):
+                    if not _is_pos(entry.get(field)):
+                        errs.append(f"{pname}/{scheme}/{field}: bad value "
+                                    f"{entry.get(field)!r}")
         for field in ("coded_speedup_vs_naive", "coded_overhead_vs_ideal"):
             val = prof.get(field)
             if not isinstance(val, (int, float)) or not np.isfinite(val) \

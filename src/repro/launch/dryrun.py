@@ -17,7 +17,6 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--policy tp_only]
 """
 import argparse
-import functools
 import json
 import re
 import time

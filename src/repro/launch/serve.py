@@ -11,10 +11,8 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, smoke_variant
-from repro.data.synthetic import synthetic_tokens
 from repro.launch.train import make_batch
 from repro.models.model_zoo import build
 

@@ -33,11 +33,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import FLConfig, TrainConfig
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
 from repro.core import fed_runtime
-from repro.core.fed_runtime import FederatedSimulation, MultiFedResult
+from repro.core import schemes as schemes_registry
+from repro.core.fed_runtime import Experiment, MultiFedResult
 
-SCHEMES = ("coded", "naive", "greedy")
+#: import-time snapshot of the registry, in registration order; the
+#: run_sweep default re-reads the LIVE registry at call time, so schemes
+#: registered later are swept too
+SCHEMES = schemes_registry.registered_names()
 
 
 @dataclasses.dataclass
@@ -55,33 +59,46 @@ class SweepResult:
 
 
 def _build_sims(x_stack, y_stack, profiles: dict, train_cfg: TrainConfig,
-                scheme: str, fl_kwargs: dict, kernel_backend: str) -> dict:
+                scheme: str, fl_kwargs: dict, kernel_backend: str,
+                base_spec: Optional[ExperimentSpec] = None) -> dict:
+    """One spec-built Experiment per profile (the per-deployment setup)."""
     sims = {}
     for pname, knobs in profiles.items():
-        fl = FLConfig(**{**fl_kwargs, **knobs})
-        sims[pname] = FederatedSimulation(
-            x_stack, y_stack, fl, train_cfg, scheme=scheme,
-            kernel_backend=kernel_backend)
+        if base_spec is not None:
+            spec = dataclasses.replace(
+                base_spec, scheme=scheme, delay_profile=None,
+                fl=dataclasses.replace(base_spec.resolved_fl(), **knobs))
+        else:
+            spec = ExperimentSpec(fl=FLConfig(**{**fl_kwargs, **knobs}),
+                                  train=train_cfg, scheme=scheme,
+                                  kernel_backend=kernel_backend)
+        sims[pname] = Experiment(spec, x_stack, y_stack)
     return sims
 
 
 def run_sweep(x_stack, y_stack, *, profiles: dict,
               train_cfg: TrainConfig, iterations: int, realizations: int,
-              schemes: Sequence[str] = SCHEMES,
+              schemes: Optional[Sequence[str]] = None,
               fl_kwargs: Optional[dict] = None,
               kernel_backend: str = "xla",
-              sims: Optional[dict] = None) -> SweepResult:
+              sims: Optional[dict] = None,
+              base_spec: Optional[ExperimentSpec] = None) -> SweepResult:
     """Run every (scheme, profile) deployment in one compiled call per scheme.
 
     profiles: {name: FLConfig-override dict} (e.g. rate_decay/mac_decay
     heterogeneity knobs); fl_kwargs: shared FLConfig fields (n_clients,
-    delta, psi, seed, ...).  Setup (load allocation, parity encoding, delay
+    delta, psi, seed, ...).  `base_spec` replaces fl_kwargs/kernel_backend
+    with a full `ExperimentSpec` to replay across the grid (its `fl` is the
+    base each profile's knobs override).  `schemes` defaults to the LIVE
+    scheme registry at call time.  Setup (load allocation, parity encoding, delay
     pre-sampling) runs per deployment on the host exactly as the looped
     path would, so equal seeds reproduce looped `run_multi` results.
     Callers that already built the deployments (e.g. the benchmark
     launcher, which times setup separately from the grid execution) pass
-    them via `sims` ({scheme: {profile: FederatedSimulation}}).
+    them via `sims` ({scheme: {profile: Experiment}}).
     """
+    if schemes is None:
+        schemes = schemes_registry.registered_names()
     fl_kwargs = dict(fl_kwargs or {})
     fl_kwargs.setdefault("n_clients", int(x_stack.shape[0]))
     R = int(realizations)
@@ -97,7 +114,7 @@ def run_sweep(x_stack, y_stack, *, profiles: dict,
         if scheme_sims is None:
             scheme_sims = _build_sims(
                 x_stack, y_stack, profiles, train_cfg, scheme, fl_kwargs,
-                kernel_backend)
+                kernel_backend, base_spec)
         elif set(scheme_sims) != set(profiles):
             raise ValueError(
                 f"prebuilt sims for scheme {scheme!r} cover profiles "
@@ -161,7 +178,7 @@ def run_sweep(x_stack, y_stack, *, profiles: dict,
             per_profile[pname] = MultiFedResult(
                 theta=theta[i], wall_clock=wall, returned=n_ret[i],
                 t_star=sim.t_star, loads=sim.loads,
-                setup_time=sim.setup_time)
+                setup_time=sim.setup_time, privacy_eps=sim.privacy_eps)
         results[scheme] = per_profile
     return SweepResult(results=results, sims=all_sims,
                        host_seconds=host_seconds)

@@ -11,7 +11,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention
 from repro.models.common import (dense_init, dtype_of, embed_init,
                                  rms_norm, sinusoidal_positions,
                                  softmax_cross_entropy)

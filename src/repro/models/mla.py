@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.common import apply_rope, dense_init, rms_norm
 from repro.models.attention import _flash

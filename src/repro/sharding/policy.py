@@ -14,8 +14,6 @@ instead — DESIGN.md §5).
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 from jax.sharding import PartitionSpec as P
 

@@ -6,9 +6,9 @@ artifacts (the CI smoke step relies on both directions).
 """
 import json
 
-import numpy as np
 import pytest
 
+from repro.core import schemes as schemes_registry
 from repro.launch import bench as launch_bench
 
 TINY = dict(n_clients=4, l=8, q=12, c=2, iters=5, realizations=2,
@@ -37,17 +37,51 @@ def test_artifact_contents(artifact):
     assert loaded["benchmark"] == "fed_training_scheme_compare"
     assert loaded["schema_version"] == launch_bench.SCHEMA_VERSION
     assert set(loaded["profiles"]) == {"uniform", "paper"}
+    # schema v3: the grid is the LIVE scheme registry at run time
+    grid = loaded["config"]["schemes"]
+    assert tuple(grid) == schemes_registry.registered_names()
+    assert set(loaded["config"]["coded_schemes"]) == \
+        set(schemes_registry.coded_names())
     for prof in loaded["profiles"].values():
         schemes = prof["schemes"]
-        assert set(schemes) == {"coded", "naive", "greedy", "ideal"}
+        assert set(schemes) == set(grid)
         # ideal is the deterministic FULL-LOAD floor: naive/greedy cannot
         # beat it (coded can — its clients process reduced loads)
         ideal = schemes["ideal"]["final_wall_clock_mean"]
         for s in ("naive", "greedy"):
             assert schemes[s]["final_wall_clock_mean"] >= ideal - 1e-9
+        assert schemes["ideal"]["final_wall_clock_std"] == 0.0
         assert schemes["coded"]["t_star"] > 0
         assert prof["coded_speedup_vs_naive"] > 0
         assert prof["coded_overhead_vs_ideal"] > 0
+        # coded-family entries report the parity privacy leakage; the
+        # partial scheme shares fewer rows, so it must leak no more
+        for s in loaded["config"]["coded_schemes"]:
+            assert schemes[s]["privacy_eps_max_bits"] > 0
+            assert schemes[s]["total_load"] > 0
+        assert schemes["partial_coded"]["privacy_eps_max_bits"] <= \
+            schemes["coded"]["privacy_eps_max_bits"]
+
+
+def test_newly_registered_scheme_lands_in_artifact(tmp_path):
+    """Satellite: the bench grid is driven by the registry — registering a
+    scheme makes it appear in the artifact (and validate) automatically."""
+    class TinyParity(schemes_registry.PartialCodedScheme):
+        name = "tiny_parity"
+        default_u_fraction = 0.25
+
+    schemes_registry.register(TinyParity())
+    try:
+        result = launch_bench.run_schemes(**TINY)
+        assert launch_bench.validate_artifact(result) == []
+        assert "tiny_parity" in result["config"]["schemes"]
+        assert "tiny_parity" in result["config"]["coded_schemes"]
+        for prof in result["profiles"].values():
+            entry = prof["schemes"]["tiny_parity"]
+            assert entry["t_star"] > 0
+            assert entry["privacy_eps_max_bits"] > 0
+    finally:
+        schemes_registry.unregister("tiny_parity")
 
 
 def test_ideal_round_time_is_naive_lower_bound(artifact):
@@ -67,6 +101,12 @@ def test_ideal_round_time_is_naive_lower_bound(artifact):
         final_wall_clock_mean=float("nan")), "final_wall_clock_mean"),
     (lambda d: d["profiles"]["uniform"].update(
         coded_speedup_vs_naive=-1.0), "coded_speedup_vs_naive"),
+    (lambda d: d["config"].pop("schemes"), "config.schemes"),
+    (lambda d: d["config"].update(coded_schemes=[]), "coded_schemes"),
+    (lambda d: d["profiles"]["paper"]["schemes"]["coded"].pop(
+        "privacy_eps_max_bits"), "privacy_eps_max_bits"),
+    (lambda d: d["profiles"]["paper"]["schemes"]["partial_coded"].update(
+        t_star=None), "t_star"),
 ])
 def test_validator_rejects_malformed(artifact, mutate, frag):
     result, _ = artifact

@@ -51,7 +51,6 @@ def test_coded_probe_learns(backbone):
                       for j in range(4)])
     import jax.numpy as jnp
     from repro.core import rff as rffmod
-    from repro.config import RFFConfig
     # reuse the returned rff params via the second return value instead
     res2, (omega, delta) = coded_probe.coded_probe_training(
         cfg, params, tokens, labels, n_classes=3,

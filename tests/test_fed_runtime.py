@@ -1,6 +1,5 @@
 """FL runtime mechanics (scheme semantics, determinism, logging)."""
 import numpy as np
-import pytest
 
 from repro.config import FLConfig, TrainConfig
 from repro.core import fed_runtime
