@@ -18,12 +18,18 @@ import sys
 
 from repro.launch import bench as launch_bench
 
-# (n_clients, l, q, c, iters, realizations)
+# (n_clients, l, q, c, iters, realizations) for the profile grid, plus
+# the drift-scenario (static vs adaptive) comparison's own sizes
 _SCALES = {
-    "smoke": dict(n_clients=5, l=12, q=16, c=3, iters=8, realizations=3),
-    "default": dict(n_clients=12, l=32, q=64, c=5, iters=40, realizations=6),
+    "smoke": dict(n_clients=5, l=12, q=16, c=3, iters=8, realizations=3,
+                  scenario_kwargs=dict(n_clients=6, l=16, q=16, c=3,
+                                       iters=50, adapt_every=5)),
+    "default": dict(n_clients=12, l=32, q=64, c=5, iters=40,
+                    realizations=6, scenario_kwargs=None),
     "full": dict(n_clients=30, l=100, q=256, c=10, iters=150,
-                 realizations=8),
+                 realizations=8,
+                 scenario_kwargs=dict(n_clients=20, l=48, q=64, c=5,
+                                      iters=120, adapt_every=8)),
 }
 
 
@@ -56,6 +62,12 @@ def run(out_path: str = launch_bench.ARTIFACT_NAME, scale: str = "default",
                    f"speedup={sweep['speedup']:.2f}x"
                    if sweep.get("speedup") else "loop=unmeasured")
         rows.append(("fed_sweep_grid", sweep["host_seconds"] * 1e6, derived))
+    for name, case in result.get("scenarios", {}).get("cases", {}).items():
+        rows.append((
+            f"fed_scenario_{name}", case["host_seconds"] * 1e6,
+            f"adaptive_speedup={case['adaptive_speedup']:.2f}x;"
+            f"tt_static={case['static']['time_to_target']:.2f}s;"
+            f"tt_adaptive={case['adaptive']['time_to_target']:.2f}s"))
     return rows
 
 

@@ -1,0 +1,78 @@
+"""Adaptive allocation under network drift, end-to-end in ~30s on CPU.
+
+The paper's load allocation is solved ONCE from round-0 delay statistics.
+This example runs the same CodedFedL deployment over a *drifting* wireless
+channel (`repro.net`: the network steadily degrades — compute throttles,
+links fall down the LTE CQI ladder) twice:
+
+  * ``scheme="coded"``           — the static round-0 allocation;
+  * ``scheme="adaptive_coded"``  — online (mu, tau, p) estimation from
+    round telemetry + re-solving the allocation every ``adapt_every``
+    rounds, applied as pure mask re-weighting (one compiled scan, zero
+    recompiles).
+
+Both face the SAME realized channel trace (equal seeds), so the printed
+gap is pure allocation policy.  Time-to-target-loss is the metric the
+committed ``BENCH_fed_training.json`` tracks in its ``scenarios`` section.
+
+    PYTHONPATH=src python examples/adaptive_drift.py
+"""
+import numpy as np
+
+from repro.api import CHANNEL_PROFILES, ExperimentSpec, build_experiment
+from repro.config import FLConfig, TrainConfig
+
+PROFILE = "degrade_drift"
+ITERS = 60
+ADAPT_EVERY = 5
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, l, q, c = 10, 24, 32, 3
+    theta_true = rng.normal(size=(q, c)).astype(np.float32)
+    xs = rng.normal(size=(n, l, q)).astype(np.float32) * 0.3
+    ys = (np.einsum("nlq,qc->nlc", xs, theta_true)
+          + 0.005 * rng.normal(size=(n, l, c)).astype(np.float32))
+    fl = FLConfig(n_clients=n, delta=0.25, psi=0.2, seed=0)
+    tc = TrainConfig(learning_rate=1.0, l2_reg=0.0)
+
+    def eval_fn(theta):
+        pred = np.einsum("nlq,qc->nlc", xs, np.asarray(theta))
+        return float(np.mean((pred - ys) ** 2)), 0.0
+
+    print(f"channel profile {PROFILE!r}: {CHANNEL_PROFILES[PROFILE]}\n")
+    base = dict(fl=fl, train=tc, channel_profile=PROFILE)
+    static = build_experiment(
+        ExperimentSpec(**base, scheme="coded"), xs, ys)
+    res_s = static.run(ITERS, eval_fn=eval_fn, eval_every=1)
+
+    adaptive = build_experiment(
+        ExperimentSpec(**base, scheme="adaptive_coded",
+                       adapt_every=ADAPT_EVERY), xs, ys)
+    res_a = adaptive.run(ITERS, eval_fn=eval_fn, eval_every=1)
+    sched = adaptive.last_schedule
+
+    target = max(res_s.history[-1].loss, res_a.history[-1].loss)
+
+    def tt(res):
+        return next(h.wall_clock for h in res.history if h.loss <= target)
+
+    print(f"{'':12s} {'final loss':>11s} {'wall-clock':>11s} "
+          f"{'t(loss<={:.3g})':>16s}".format(target))
+    print(f"{'static':12s} {res_s.history[-1].loss:11.4f} "
+          f"{res_s.history[-1].wall_clock:10.2f}s {tt(res_s):15.2f}s")
+    print(f"{'adaptive':12s} {res_a.history[-1].loss:11.4f} "
+          f"{res_a.history[-1].wall_clock:10.2f}s {tt(res_a):15.2f}s")
+    print(f"\nadaptive reaches the target "
+          f"{tt(res_s) / tt(res_a):.2f}x sooner")
+    print(f"deadline trajectory: t* {static.t_star:.3f}s (static, fixed) "
+          f"vs {sched.t_star[0]:.3f}s -> {sched.t_star[-1]:.3f}s over "
+          f"{sched.n_blocks} re-allocations (adaptive)")
+    print(f"allocated load: {sched.loads_blocks[0].sum():.0f} -> "
+          f"{sched.loads_blocks[-1].sum():.0f} points/round as the "
+          f"network degrades")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ Fake a multi-device host before running (must be set before jax starts):
 import numpy as np
 import jax
 
-from repro.api import ExperimentSpec, build_experiment, registered_names
+from repro.api import ExperimentSpec, build_experiment, grid_names
 from repro.config import FLConfig, TrainConfig
 from repro.core.delay_model import HETEROGENEITY_PROFILES
 
@@ -46,12 +46,12 @@ print(f"[mesh] coded: t*={res.t_star:.3f}s  "
 
 # --- 2. compiled (profile x realization) sweep over the registry ----------
 print(f"[sweep] {len(HETEROGENEITY_PROFILES)} profiles x "
-      f"{REALIZATIONS} realizations x schemes {registered_names()}, "
+      f"{REALIZATIONS} realizations x schemes {grid_names()}, "
       f"one compiled call per scheme")
 unsharded = build_experiment(ExperimentSpec(
     fl=spec.fl, train=spec.train, scheme="coded"), xs, ys)
 sw = unsharded.sweep(profiles=HETEROGENEITY_PROFILES, iterations=ITERS,
-                     realizations=REALIZATIONS, schemes=registered_names())
+                     realizations=REALIZATIONS, schemes=grid_names())
 for scheme, per_profile in sw.results.items():
     print(f"[sweep] {scheme}: compiled grid call took "
           f"{sw.host_seconds[scheme]:.2f}s host-side")

@@ -37,13 +37,15 @@ from repro.config import ExperimentSpec
 from repro.core import schemes
 from repro.core.fed_runtime import (Experiment, FedResult,  # noqa: F401
                                     MultiFedResult)
-from repro.core.schemes import (Scheme, get_scheme, register,  # noqa: F401
-                                registered_names)
+from repro.core.schemes import (Scheme, get_scheme, grid_names,  # noqa: F401
+                                register, registered_names)
+from repro.net.channel import (CHANNEL_PROFILES,  # noqa: F401
+                               ChannelProfile)
 
 __all__ = [
     "ExperimentSpec", "Experiment", "FedResult", "MultiFedResult",
-    "Scheme", "build_experiment", "get_scheme", "register",
-    "registered_names",
+    "Scheme", "build_experiment", "get_scheme", "grid_names", "register",
+    "registered_names", "CHANNEL_PROFILES", "ChannelProfile",
 ]
 
 

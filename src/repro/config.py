@@ -199,6 +199,16 @@ class ExperimentSpec:
     override the matching ``fl`` fields at build time.  ``mesh`` is a
     device count for a 1-D "clients" mesh (a concrete ``jax.sharding.Mesh``
     is not serializable — pass one to ``build_experiment`` directly).
+
+    ``channel_profile`` names a network-dynamics profile
+    (``repro.net.channel.CHANNEL_PROFILES``: Gilbert–Elliott erasure
+    bursts, shadowing/MCS rate hopping, compute drift, churn) that the
+    engine rolls into a deterministic per-seed trace; ``channel_params``
+    overrides individual profile knobs (normalized like
+    ``scheme_params``).  The ``"static"`` profile reproduces the
+    stationary engine bit-exactly.  ``adapt_every`` is the adaptive
+    schemes' re-allocation period in rounds (0 = required only by
+    adaptive schemes, which reject it).
     """
     fl: FLConfig = FLConfig()
     train: TrainConfig = TrainConfig()
@@ -206,6 +216,9 @@ class ExperimentSpec:
     scheme: Optional[str] = None
     scheme_params: Tuple[Tuple[str, object], ...] = ()
     delay_profile: Optional[str] = None
+    channel_profile: Optional[str] = None
+    channel_params: Tuple[Tuple[str, object], ...] = ()
+    adapt_every: int = 0
     engine: str = "batched"
     kernel_backend: str = "xla"
     alloc_backend: str = "auto"
@@ -232,15 +245,17 @@ class ExperimentSpec:
         if self.steps_per_epoch < 1:
             raise ValueError(f"steps_per_epoch must be >= 1, "
                              f"got {self.steps_per_epoch}")
-        # normalize scheme_params (dict / iterable of pairs) to a sorted
-        # tuple of pairs so equal specs hash equal regardless of input form
-        params = self.scheme_params
-        if isinstance(params, dict):
-            items = params.items()
-        else:
-            items = (tuple(p) for p in params)
-        norm = tuple(sorted((str(k), v) for k, v in items))
-        object.__setattr__(self, "scheme_params", norm)
+        # normalize scheme_params / channel_params (dict / iterable of
+        # pairs) to a sorted tuple of pairs so equal specs hash equal
+        # regardless of input form
+        for field in ("scheme_params", "channel_params"):
+            params = getattr(self, field)
+            if isinstance(params, dict):
+                items = params.items()
+            else:
+                items = (tuple(p) for p in params)
+            norm = tuple(sorted((str(k), v) for k, v in items))
+            object.__setattr__(self, field, norm)
         if self.delay_profile is not None:
             from repro.core.delay_model import HETEROGENEITY_PROFILES
             if self.delay_profile not in HETEROGENEITY_PROFILES:
@@ -248,6 +263,23 @@ class ExperimentSpec:
                     f"unknown delay_profile {self.delay_profile!r} "
                     f"(expected one of "
                     f"{tuple(HETEROGENEITY_PROFILES)})")
+        if self.adapt_every < 0:
+            raise ValueError(
+                f"adapt_every must be >= 0, got {self.adapt_every}")
+        if self.channel_profile is not None or self.channel_params:
+            from repro.net.channel import CHANNEL_PROFILES
+            name = self.channel_profile
+            if name is not None and name not in CHANNEL_PROFILES:
+                raise ValueError(
+                    f"unknown channel_profile {name!r} "
+                    f"(expected one of {tuple(CHANNEL_PROFILES)})")
+            if self.engine == "legacy":
+                raise ValueError(
+                    "channel dynamics require the batched engine; the "
+                    "legacy per-client oracle has no traced-delay path")
+            # knob names (and values, via construction) validated eagerly
+            # so the error points at the spec
+            self.resolved_channel()
 
     @property
     def resolved_scheme(self) -> str:
@@ -256,6 +288,25 @@ class ExperimentSpec:
     @property
     def scheme_params_dict(self) -> dict:
         return dict(self.scheme_params)
+
+    @property
+    def channel_params_dict(self) -> dict:
+        return dict(self.channel_params)
+
+    def resolved_channel(self):
+        """The effective `ChannelProfile`, or None when no dynamics are
+        requested.  ``channel_params`` override the named profile's knobs
+        (base profile "static" when only overrides are given)."""
+        if self.channel_profile is None and not self.channel_params:
+            return None
+        from repro.net.channel import CHANNEL_PROFILES
+        base = CHANNEL_PROFILES[self.channel_profile or "static"]
+        if not self.channel_params:
+            return base
+        try:
+            return dataclasses.replace(base, **self.channel_params_dict)
+        except TypeError as exc:
+            raise ValueError(f"bad channel_params: {exc}") from None
 
     def resolved_fl(self) -> FLConfig:
         """`fl` with the named delay profile's knobs applied."""
@@ -270,6 +321,7 @@ class ExperimentSpec:
         """Plain-JSON dict; `from_dict(to_dict(spec)) == spec`."""
         d = dataclasses.asdict(self)
         d["scheme_params"] = dict(self.scheme_params)
+        d["channel_params"] = dict(self.channel_params)
         return d
 
     @classmethod

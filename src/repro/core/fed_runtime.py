@@ -37,6 +37,19 @@ the numerical-equivalence oracle: both engines consume the same pre-sampled
 delay matrix, so with equal seeds they produce the same ``theta`` trajectory
 to fp32 tolerance (see tests/test_batched_engine.py).
 
+Network dynamics (``ExperimentSpec.channel_profile``, ``repro.net``): the
+run's delays are pre-sampled *through* a deterministic per-seed channel
+trace (Gilbert–Elliott erasure bursts, shadowing/MCS rate hopping, compute
+drift, churn) instead of the stationary model — still one compiled scan,
+with a per-round availability row joining the scan inputs.  The static
+profile reproduces the stationary engine bit-exactly.  Adaptive schemes
+(``adaptive_coded``/``adaptive_greedy``) additionally run the
+``repro.net.estimator.AdaptiveController`` control loop on the host ahead
+of the scan: online (mu, tau, p) estimation from round telemetry,
+re-solving the load allocation every ``adapt_every`` rounds, applied as
+block-indexed mask re-weighting so shapes (and the compiled step) never
+change.
+
 ``kernel_backend`` selects how the batched engine computes gradients:
 ``"xla"`` (default) is the plain-jnp vmapped path; ``"pallas"`` routes every
 per-round gradient through the fused Pallas kernels
@@ -184,13 +197,26 @@ def _make_grad_sum(static: dict):
 
 
 def build_step(static: dict):
-    """One scan step ``step(consts, theta, (t_row, lr))``.
+    """One scan step ``step(consts, theta, inp)``.
 
     `static` (Python-level, fixed at trace time): scheme, n, n_wait, l2, m,
-    l, fused, mesh, use_pallas, interpret, collect_theta.
+    l, fused, mesh, use_pallas, interpret, collect_theta, channel.
     `consts` (arrays, vmappable): gx (rows, L, q), gy (rows, L, c), gmask
     (rows, L), ret_tail (rows - n,); coded adds t_star (), active (n,) and —
-    when unfused — par_x (u, q) / par_y (u, c).
+    when unfused — par_x (u, q) / par_y (u, c); adaptive_coded adds
+    gmask_blocks (B, rows, L).
+
+    ``inp`` is ``(t_row, lr)`` on the stationary path.  With
+    ``channel=True`` (a network trace drives the run) it grows a per-round
+    availability row: ``(t_row, lr, active)`` — churned-out clients never
+    count as returned, and the naive/greedy deadlines range over the
+    clients actually present.  The adaptive step kinds extend it further
+    with their per-round control values: ``(..., t_star_r, block)`` for
+    adaptive_coded (the block index selects that block's re-allocated
+    fused load mask — pure mask re-weighting, shapes never change) and
+    ``(..., n_wait_r)`` for adaptive_greedy.  Under the static channel
+    profile `active` is identically 1.0 and every extra operation is an
+    IEEE no-op, so trajectories stay bit-identical to the stationary path.
 
     Scheme dispatch is static, so each scheme compiles to a straight-line
     fused update.
@@ -202,45 +228,83 @@ def build_step(static: dict):
     m = static["m"]
     l = static["l"]
     fused = static["fused"]
+    channel = static.get("channel", False)
     collect_theta = static["collect_theta"]
     use_pallas = static["use_pallas"]
     interpret = static["interpret"]
     grad_sum = _make_grad_sum(static)
 
     def step(consts, theta, inp):
-        t_row, lr = inp
+        gmask = consts["gmask"]
+        if scheme == "adaptive_coded":
+            t_row, lr, active, t_star_r, block = inp
+        elif scheme == "adaptive_greedy":
+            t_row, lr, active, n_wait_r = inp
+        elif channel:
+            t_row, lr, active = inp
+        else:
+            t_row, lr = inp
         if scheme == "naive":
-            n_ret = jnp.int32(n)
-            t_round = jnp.max(t_row)
-            ret_real = jnp.ones_like(t_row)
+            if channel:
+                ret_real = active
+                n_ret = jnp.sum(active).astype(jnp.int32)
+                t_round = jnp.max(jnp.where(active > 0, t_row, 0.0))
+            else:
+                n_ret = jnp.int32(n)
+                t_round = jnp.max(t_row)
+                ret_real = jnp.ones_like(t_row)
             denom = m
         elif scheme == "greedy":
-            t_round = jnp.sort(t_row)[n_wait - 1]
-            ret_real = (t_row <= t_round).astype(t_row.dtype)
+            if channel:
+                # deadline = n_wait-th fastest among the clients present
+                srt = jnp.sort(jnp.where(active > 0, t_row, jnp.inf))
+                n_act = jnp.sum(active).astype(jnp.int32)
+                k_eff = jnp.clip(jnp.minimum(jnp.int32(n_wait), n_act), 1, n)
+                t_round = jnp.where(n_act > 0, jnp.take(srt, k_eff - 1), 0.0)
+                ret_real = (t_row <= t_round).astype(t_row.dtype) * active
+            else:
+                t_round = jnp.sort(t_row)[n_wait - 1]
+                ret_real = (t_row <= t_round).astype(t_row.dtype)
             n_ret = jnp.sum(ret_real).astype(jnp.int32)
-            denom = n_ret.astype(jnp.float32) * l
+            denom = jnp.maximum(n_ret, 1).astype(jnp.float32) * l
         elif scheme == "coded":
             t_star = consts["t_star"]
             t_round = t_star
             by_deadline = (t_row <= t_star).astype(t_row.dtype)
-            n_ret = jnp.sum(by_deadline).astype(jnp.int32)
             ret_real = by_deadline * consts["active"]
+            if channel:
+                by_deadline = by_deadline * active
+                ret_real = ret_real * active
+            n_ret = jnp.sum(by_deadline).astype(jnp.int32)
             denom = m
         elif scheme == "ideal":
             # deterministic no-straggler floor: all clients, full load,
             # fixed round clock (the sampled t_row is ignored)
-            n_ret = jnp.int32(n)
             t_round = consts["t_ideal"]
-            ret_real = jnp.ones_like(t_row)
+            ret_real = active if channel else jnp.ones_like(t_row)
+            n_ret = jnp.sum(ret_real).astype(jnp.int32)
             denom = m
+        elif scheme == "adaptive_coded":
+            t_round = t_star_r
+            ret_real = (t_row <= t_star_r).astype(t_row.dtype) * active
+            n_ret = jnp.sum(ret_real).astype(jnp.int32)
+            gmask = consts["gmask_blocks"][block]
+            denom = m
+        elif scheme == "adaptive_greedy":
+            srt = jnp.sort(jnp.where(active > 0, t_row, jnp.inf))
+            n_act = jnp.sum(active).astype(jnp.int32)
+            k_eff = jnp.clip(jnp.minimum(n_wait_r, n_act), 1, n)
+            t_round = jnp.where(n_act > 0, jnp.take(srt, k_eff - 1), 0.0)
+            ret_real = (t_row <= t_round).astype(t_row.dtype) * active
+            n_ret = jnp.sum(ret_real).astype(jnp.int32)
+            denom = jnp.maximum(n_ret, 1).astype(jnp.float32) * l
         else:
             raise ValueError(scheme)
         # ret_tail covers the pseudo-client rows: the always-active parity
         # row (fused coded) and any zero-mask mesh padding rows.
         ret = jnp.concatenate([ret_real.astype(jnp.float32),
                                consts["ret_tail"]])
-        g_sum = grad_sum(consts["gx"], consts["gy"], consts["gmask"], ret,
-                         theta)
+        g_sum = grad_sum(consts["gx"], consts["gy"], gmask, ret, theta)
         if scheme == "coded" and not fused:
             g_sum = g_sum + aggregation.coded_gradient(
                 consts["par_x"], consts["par_y"], theta, pnr_c=0.0,
@@ -306,6 +370,33 @@ class Experiment:
         self.scheme_obj = schemes.get_scheme(self.scheme)
         self.step_kind = self.scheme_obj.step_kind
         self.scheme_params = spec.scheme_params_dict
+        # --- network dynamics (repro.net): channel trace + adaptation
+        self.channel = spec.resolved_channel()
+        self.adapt_every = spec.adapt_every
+        self.adaptive = self.step_kind.startswith("adaptive")
+        if self.adaptive:
+            if self.engine == "legacy":
+                raise ValueError(
+                    f"scheme {self.scheme!r} needs the batched engine "
+                    "(the legacy oracle has no adaptive schedule path)")
+            if self.mesh is not None:
+                raise NotImplementedError(
+                    "adaptive schemes do not support client-mesh "
+                    "sharding yet")
+            if self.adapt_every < 1:
+                raise ValueError(
+                    f"scheme {self.scheme!r} requires "
+                    "ExperimentSpec.adapt_every >= 1 (the re-allocation "
+                    "period in rounds)")
+            if self.channel is None:
+                # adaptation without declared dynamics: run on the exact
+                # static profile (estimation converges to the nominal
+                # network, allocation stays ~put)
+                from repro.net.channel import CHANNEL_PROFILES
+                self.channel = CHANNEL_PROFILES["static"]
+        self._trace_seed = fl_cfg.seed + 9973
+        self._trace_calls = 0
+        self.last_schedule = None     # AdaptiveSchedule of the latest run
         self.fl = fl_cfg
         self.train = spec.train
         self.x = jnp.asarray(x_stack)
@@ -345,15 +436,29 @@ class Experiment:
                 f"got {mesh.axis_names}")
         return mesh
 
+    @property
+    def n_wait(self) -> int:
+        """Greedy-family wait count: the fastest (1 - psi) * n clients.
+        Single source of truth for the compiled step's static clamp, the
+        legacy oracle, and the adaptive controller's block-0 plan."""
+        return max(1, int(math.ceil((1.0 - self.fl.psi) * self.n)))
+
     # -------------------------------------------------------- scheme plumbing
     def _pick_alloc_backend(self) -> str:
         """Resolve alloc_backend="auto": the vectorized jitted solver wins at
-        scale, the scalar loop has no compile cost at small n."""
+        scale, the scalar loop has no compile cost at small n.  Asymmetric
+        links ride the vectorized solver's per-direction transmission grid
+        since PR 5, so symmetry no longer forces the scalar path — but the
+        pair grid is O(Vd*Vu) columns, so auto keeps high-erasure
+        asymmetric populations (grid wider than ~4k columns) on the scalar
+        loop rather than materializing multi-GB solver intermediates.
+        Explicit alloc_backend="vectorized" overrides."""
         if self.alloc_backend != "auto":
             return self.alloc_backend
-        symmetric = all(nd.tau_up is None and nd.p_up is None
-                        for nd in self.nodes)
-        return "vectorized" if (symmetric and self.n >= 64) else "scalar"
+        from repro.core.load_allocation import vectorized_grid_width
+        return "vectorized" if (self.n >= 64 and
+                                vectorized_grid_width(self.nodes) <= 4096) \
+            else "scalar"
 
     # ------------------------------------------------------------- step consts
     def consts_point_len(self) -> int:
@@ -390,7 +495,7 @@ class Experiment:
         return {
             "scheme": self.step_kind,
             "n": self.n,
-            "n_wait": max(1, int(math.ceil((1.0 - self.fl.psi) * self.n))),
+            "n_wait": self.n_wait,
             "l2": self.train.l2_reg,
             "m": float(self.m),
             "l": float(self.l),
@@ -399,13 +504,31 @@ class Experiment:
             "use_pallas": self.kernel_backend == "pallas",
             "interpret": self._interpret,
             "collect_theta": collect_theta,
+            "channel": self.channel is not None,
         }
+
+    def scheme_params_estimator_kwargs(self) -> dict:
+        """Estimator knobs riding in `scheme_params` (adaptive family)."""
+        kw = {}
+        if "est_beta" in self.scheme_params:
+            kw["beta"] = float(self.scheme_params["est_beta"])
+        if "est_window" in self.scheme_params:
+            kw["window"] = int(self.scheme_params["est_window"])
+        return kw
 
     # ------------------------------------------------------------------ round
     def _sample_round_times(self, rounds: int = 1) -> np.ndarray:
         """(rounds, n) delay samples — one vectorized draw for the whole run."""
         return sample_round_times(self.nodes, np.asarray(self.loads, float),
                                   self.rng, rounds)
+
+    def _next_trace_rng(self) -> np.random.Generator:
+        """Dedicated per-run trace generator: deterministic per (seed, run
+        index) and independent of `self.rng`, so turning the channel on
+        never shifts the delay-draw stream the static engine consumes."""
+        rng = np.random.default_rng((self._trace_seed, self._trace_calls))
+        self._trace_calls += 1
+        return rng
 
     def _lr(self, epoch: int) -> float:
         lr = self.train.learning_rate
@@ -420,14 +543,16 @@ class Experiment:
 
     # --------------------------------------------------------- batched engine
     def _get_scan(self, collect_theta: bool):
-        """jit'd `lax.scan` over rounds, cached per (scheme, collect)."""
+        """jit'd `lax.scan` over a per-round input pytree, cached per
+        (scheme, collect).  The xs tuple's structure follows the step's
+        static configuration (see `build_step`)."""
         cache_key = (self.scheme, collect_theta)
         fn = self._scan_cache.get(cache_key)
         if fn is None:
             step = build_step(self.step_static(collect_theta))
-            fn = jax.jit(lambda consts, theta0, times, lrs:
+            fn = jax.jit(lambda consts, theta0, xs:
                          jax.lax.scan(lambda th, inp: step(consts, th, inp),
-                                      theta0, (times, lrs)))
+                                      theta0, xs))
             self._scan_cache[cache_key] = fn
         return fn
 
@@ -436,14 +561,15 @@ class Experiment:
             self._consts = self.build_consts()
         return self._consts
 
-    def _run_batched(self, iterations: int, times: np.ndarray,
-                     lrs: np.ndarray, eval_fn, eval_every: int) -> FedResult:
+    def _scan_xs(self, times: np.ndarray, lrs: np.ndarray) -> tuple:
+        """Per-round scan inputs for one realization's pre-sampled delays."""
+        return (jnp.asarray(times, jnp.float32),
+                jnp.asarray(lrs, jnp.float32))
+
+    def _finish_run(self, iterations: int, outs, eval_fn,
+                    eval_every: int) -> FedResult:
+        """Shared post-processing: scan outputs -> wall-clock + history."""
         collect = eval_fn is not None
-        scan_fn = self._get_scan(collect)
-        theta0 = jnp.zeros((self.q, self.c), jnp.float32)
-        outs = scan_fn(self._get_consts(), theta0,
-                       jnp.asarray(times, jnp.float32),
-                       jnp.asarray(lrs, jnp.float32))
         theta, per_round = outs
         t_rounds = np.asarray(per_round[0], np.float64)
         n_ret = np.asarray(per_round[1])
@@ -461,6 +587,74 @@ class Experiment:
                          loads=self.loads, setup_time=self.setup_time,
                          privacy_eps=self.privacy_eps)
 
+    def _run_batched(self, iterations: int, times: np.ndarray,
+                     lrs: np.ndarray, eval_fn, eval_every: int) -> FedResult:
+        scan_fn = self._get_scan(eval_fn is not None)
+        theta0 = jnp.zeros((self.q, self.c), jnp.float32)
+        outs = scan_fn(self._get_consts(), theta0, self._scan_xs(times, lrs))
+        return self._finish_run(iterations, outs, eval_fn, eval_every)
+
+    # --------------------------------------------------------- channel engine
+    def _channel_outs(self, iterations: int, collect: bool):
+        """One realization through the traced-channel (and, for adaptive
+        schemes, controller-scheduled) path.  Consumes `self.rng`
+        sequentially exactly like the stationary pre-sampling, plus one
+        dedicated trace generator per call."""
+        from repro.net.estimator import AdaptiveController
+        from repro.net.trace import generate_trace, sample_round_times_traced
+        trace = generate_trace(self.nodes, self.channel, iterations,
+                               self._next_trace_rng())
+        lrs = jnp.asarray(self._lr_schedule(iterations))
+        consts = dict(self._get_consts())
+        if self.adaptive:
+            sched = AdaptiveController(self, trace).plan(iterations)
+            self.last_schedule = sched
+            xs = (jnp.asarray(sched.times, jnp.float32), lrs,
+                  jnp.asarray(sched.active))
+            if self.step_kind == "adaptive_coded":
+                consts["gmask_blocks"] = sched.gmask_blocks
+                xs = xs + (jnp.asarray(sched.t_star, jnp.float32),
+                           jnp.asarray(sched.block_idx))
+            else:
+                xs = xs + (jnp.asarray(sched.n_wait),)
+        else:
+            times = sample_round_times_traced(
+                self.nodes, np.asarray(self.loads, float), self.rng, trace)
+            xs = (jnp.asarray(times, jnp.float32), lrs,
+                  jnp.asarray(trace.active, jnp.float32))
+        scan_fn = self._get_scan(collect)
+        theta0 = jnp.zeros((self.q, self.c), jnp.float32)
+        return scan_fn(consts, theta0, xs)
+
+    def _run_channel(self, iterations: int, eval_fn,
+                     eval_every: int) -> FedResult:
+        outs = self._channel_outs(iterations, collect=eval_fn is not None)
+        return self._finish_run(iterations, outs, eval_fn, eval_every)
+
+    def _run_multi_channel(self, iterations: int, n_realizations: int,
+                           eval_fn) -> MultiFedResult:
+        """R independent channel realizations (fresh trace + delay draws
+        each).  The compiled scan is shared across realizations (equal
+        shapes), but the host-side trace/controller loop runs per
+        realization — the stationary `run_multi` keeps its one-call vmap."""
+        thetas, t_rounds, n_rets = [], [], []
+        for _ in range(int(n_realizations)):
+            theta, per_round = self._channel_outs(iterations, collect=False)
+            thetas.append(theta)
+            t_rounds.append(np.asarray(per_round[0], np.float64))
+            n_rets.append(np.asarray(per_round[1]))
+        theta = jnp.stack(thetas)
+        wall = self.setup_time + np.cumsum(np.stack(t_rounds), axis=1)
+        acc = None
+        if eval_fn is not None:
+            acc = np.array([eval_fn(theta[r])[1]
+                            for r in range(theta.shape[0])])
+        return MultiFedResult(theta=theta, wall_clock=wall,
+                              returned=np.stack(n_rets),
+                              t_star=self.t_star, loads=self.loads,
+                              setup_time=self.setup_time, accuracy=acc,
+                              privacy_eps=self.privacy_eps)
+
     # ---------------------------------------------------------- legacy engine
     def _run_legacy(self, iterations: int, times_all: np.ndarray,
                     lrs: np.ndarray, eval_fn, eval_every: int) -> FedResult:
@@ -469,7 +663,7 @@ class Experiment:
         theta = jnp.zeros((self.q, self.c), jnp.float32)
         wall = self.setup_time
         history: list[RoundLog] = []
-        n_wait = max(1, int(math.ceil((1.0 - self.fl.psi) * self.n)))
+        n_wait = self.n_wait
 
         for it in range(iterations):
             times = times_all[it]
@@ -530,7 +724,11 @@ class Experiment:
             eval_fn: Optional[Callable[[jnp.ndarray], tuple[float, float]]] = None,
             eval_every: int = 10) -> FedResult:
         """Run `iterations` rounds; delays for the whole run are pre-sampled
-        once, so both engines consume the identical delay matrix."""
+        once, so both engines consume the identical delay matrix.  With a
+        channel profile the delays flow through the network trace (and the
+        adaptive controller's schedule) instead — still one compiled scan."""
+        if self.channel is not None:
+            return self._run_channel(iterations, eval_fn, eval_every)
         times = self._sample_round_times(iterations)
         lrs = self._lr_schedule(iterations)
         if self.engine == "legacy":
@@ -551,8 +749,13 @@ class Experiment:
         vmappable form); the `engine` constructor argument only selects the
         `run()` path.  The final-iterate eval is vmapped over the
         realization axis when `eval_fn` is jax-traceable, falling back to a
-        per-realization Python loop otherwise.
+        per-realization Python loop otherwise.  Channel-profile runs loop
+        realizations on the host (fresh trace each) over one shared
+        compiled scan instead.
         """
+        if self.channel is not None:
+            return self._run_multi_channel(iterations, n_realizations,
+                                           eval_fn)
         R = int(n_realizations)
         times = self._sample_round_times(R * iterations)
         times = times.reshape(R, iterations, self.n)

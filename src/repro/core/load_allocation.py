@@ -20,8 +20,10 @@ Two solver backends share this structure:
     (node, concavity-piece) pair simultaneously, bracketing + bisection as
     ``lax.fori_loop``s.  All n clients (plus the optional MEC server node,
     i.e. the paper's n+1 nodes) are solved in a single call; n >= 1000 is a
-    single device program.  The scalar path stays as the numerical oracle
-    (tests assert node-for-node agreement).
+    single device program.  Asymmetric tau_up/p_up links (footnote 1) ride
+    the same program through a flattened per-direction transmission grid.
+    The scalar path stays as the numerical oracle (tests assert
+    node-for-node agreement).
 
 Special case p_j = 0 (AWGN links): closed form via the Lambert-W minor
 branch (paper eq. 34/35, Appendix D), used both as a fast path and as an
@@ -250,28 +252,72 @@ def _tail_v_cap(p_max: float) -> int:
     return int(-(-exact // 8) * 8)
 
 
-def _nb_tail_weights(p, v):
-    """h_v = (v-1)(1-p)^2 p^(v-2): the NB(2, 1-p) transmission-count pmf.
+def _geo_tail_cap(p_max: float) -> int:
+    """Static per-direction geometric tail cap: NodeDelayParams._geo_cap
+    (the scalar oracle's truncation rule — one source of truth) at the
+    population's largest erasure prob, rounded up to a multiple of 8 so
+    nearby populations share one compiled program."""
+    return int(-(-NodeDelayParams._geo_cap(p_max) // 8) * 8)
 
-    Load- and deadline-independent, so it is computed ONCE per solve and
-    reused by every objective evaluation (jnp.power is two transcendentals
-    per element — hoisting it out of the golden/bisection loops is a ~2x
-    end-to-end win at n >= 1000).
+
+def vectorized_grid_width(nodes: Sequence[NodeDelayParams]) -> int:
+    """Transmission-grid columns K the vectorized solver would build.
+
+    Symmetric populations collapse to the NB(2) grid (K = V - 1);
+    asymmetric ones pay the per-direction pair grid (K = Vd * Vu), which
+    grows as O(log^2 p) toward p -> 1.  The runtime's auto backend pick
+    consults this to keep high-erasure asymmetric populations on the
+    scalar solver instead of materializing (n, pieces, K) intermediates.
     """
-    return (v - 1.0) * (1.0 - p[:, None]) ** 2 * jnp.power(p[:, None],
-                                                           v - 2.0)
+    prm = stack_node_params(nodes)
+    if np.array_equal(prm["p_down"], prm["p_up"]) \
+            and np.array_equal(prm["tau_down"], prm["tau_up"]):
+        return _tail_v_cap(float(prm["p_down"].max())) - 1
+    return (_geo_tail_cap(float(prm["p_down"].max()))
+            * _geo_tail_cap(float(prm["p_up"].max())))
 
 
-def _vec_expected_return(mu, alpha, tau, h, t, loads, v):
+def _transmission_grids(prm: dict) -> tuple[np.ndarray, np.ndarray]:
+    """Per-node transmission-count weights/offsets (h, comm), each (n, K).
+
+    The cdf inside the vectorized objective is a weighted sum over
+    transmission counts: P(T <= t) = sum_k h_k (1 - exp(-rate (t - l/mu -
+    comm_k))) over terms with positive slack.  Symmetric (reciprocal)
+    links collapse the two geometric directions into the NB(2, 1-p) pmf
+    over the round-trip count (K = V-1 terms, exactly the pre-asym
+    layout); asymmetric links keep the full (n_down, n_up) pair grid with
+    per-direction tail caps — mirroring `NodeDelayParams._cdf_asym`'s
+    nested sum, flattened so the same jitted program serves both.
+    """
+    p_d, p_u = prm["p_down"], prm["p_up"]
+    tau_d, tau_u = prm["tau_down"], prm["tau_up"]
+    if np.array_equal(p_d, p_u) and np.array_equal(tau_d, tau_u):
+        v_cap = _tail_v_cap(float(p_d.max()))
+        v = np.arange(2, v_cap + 1, dtype=np.float64)
+        h = ((v - 1.0) * (1.0 - p_d[:, None]) ** 2
+             * p_d[:, None] ** (v - 2.0))
+        return h, tau_d[:, None] * v
+    vd = np.arange(1, _geo_tail_cap(float(p_d.max())) + 1, dtype=np.float64)
+    vu = np.arange(1, _geo_tail_cap(float(p_u.max())) + 1, dtype=np.float64)
+    n = p_d.shape[0]
+    h_d = (1.0 - p_d[:, None]) * p_d[:, None] ** (vd - 1.0)    # (n, Vd)
+    h_u = (1.0 - p_u[:, None]) * p_u[:, None] ** (vu - 1.0)    # (n, Vu)
+    h = (h_d[:, :, None] * h_u[:, None, :]).reshape(n, -1)
+    comm = ((tau_d[:, None] * vd)[:, :, None]
+            + (tau_u[:, None] * vu)[:, None, :]).reshape(n, -1)
+    return h, comm
+
+
+def _vec_expected_return(mu, alpha, h, comm, t, loads):
     """E[R(t; l)] = l * P(T <= t), element-wise (paper eq. 42 / Theorem 1).
 
-    mu/alpha/tau and the precomputed tail weights `h` must broadcast against
-    `loads[..., None]`; `v` is the (V,) static transmission-count grid.
-    Terms with non-positive slack are masked, so the result is exact for any
-    t without a data-dependent v cap.
+    mu/alpha and the precomputed transmission grids `h`/`comm` must
+    broadcast against `loads[..., None]`.  Terms with non-positive slack
+    are masked, so the result is exact for any t without a data-dependent
+    transmission-count cap.
     """
     lo = loads[..., None]
-    slack = t - lo / mu[..., None] - tau[..., None] * v
+    slack = t - lo / mu[..., None] - comm
     safe = jnp.where(loads > 0, loads, 1.0)
     rate = (alpha * mu / safe)[..., None]
     term = jnp.where(slack > 0, h * (1.0 - jnp.exp(-rate * slack)), 0.0)
@@ -279,21 +325,23 @@ def _vec_expected_return(mu, alpha, tau, h, t, loads, v):
     return jnp.where(loads > 0, loads * cdf, 0.0)
 
 
-def _vec_optimal_loads(mu, alpha, tau, h, caps, t, *, v_cap: int,
+def _vec_optimal_loads(mu, alpha, tau, h, comm, caps, t, *, v_cap: int,
                        n_golden: int):
     """Step 1 for every node at once: argmax_l E[R(t; l)], 0 <= l <= cap.
 
     Runs a fixed-iteration golden-section search on every (node, concavity
     piece) pair simultaneously — piece boundaries at l = mu (t - v tau)
-    (Theorem 1) — then keeps the best of the piece interior and piece upper
-    endpoint, mirroring the scalar solver's candidate order.
+    (Theorem 1; asymmetric links keep the downlink-tau boundary grid, the
+    same heuristic piece placement the scalar solver uses) — then keeps
+    the best of the piece interior and piece upper endpoint, mirroring the
+    scalar solver's candidate order.
     Returns (loads, returns), each shaped like caps.
     """
     v = jnp.arange(2, v_cap + 1, dtype=caps.dtype)
 
     def f(l):                                   # l: (n, P) piece-grid loads
         return _vec_expected_return(mu[:, None], alpha[:, None],
-                                    tau[:, None], h[:, None, :], t, l, v)
+                                    h[:, None, :], comm[:, None, :], t, l)
 
     # sorted piece boundaries: clip(mu (t - v tau), [0, cap]) ∪ {0, cap}
     b = jnp.clip(mu[:, None] * (t - v * tau[:, None]), 0.0, caps[:, None])
@@ -340,9 +388,9 @@ def _vec_optimal_loads(mu, alpha, tau, h, caps, t, *, v_cap: int,
 @functools.partial(jax.jit, static_argnames=("v_cap", "n_golden",
                                              "n_golden_search",
                                              "n_bracket", "n_bisect"))
-def _vec_two_step(mu, alpha, tau, p, caps, target, t_hi0, *, v_cap: int,
-                  n_golden: int, n_golden_search: int, n_bracket: int,
-                  n_bisect: int):
+def _vec_two_step(mu, alpha, tau, h, comm, caps, target, t_hi0, *,
+                  v_cap: int, n_golden: int, n_golden_search: int,
+                  n_bracket: int, n_bisect: int):
     """Step 2: bracket + bisection over t, entirely on device.
 
     The bracket doubles t until the maximized total return reaches the
@@ -352,13 +400,11 @@ def _vec_two_step(mu, alpha, tau, p, caps, target, t_hi0, *, v_cap: int,
     objective VALUE matters, and golden-section value error is quadratic in
     the interval width, so a coarser n_golden_search is used inside the
     bracket/bisection and the full n_golden only for the final load
-    extraction at t*.
+    extraction at t*.  `h`/`comm` are the `_transmission_grids` weights —
+    symmetric NB(2) or the asymmetric pair grid, transparently.
     """
-    v = jnp.arange(2, v_cap + 1, dtype=caps.dtype)
-    h = _nb_tail_weights(p, v)
-
     def total(t):
-        _, rets = _vec_optimal_loads(mu, alpha, tau, h, caps, t,
+        _, rets = _vec_optimal_loads(mu, alpha, tau, h, comm, caps, t,
                                      v_cap=v_cap, n_golden=n_golden_search)
         return jnp.sum(rets)
 
@@ -376,16 +422,9 @@ def _vec_two_step(mu, alpha, tau, p, caps, target, t_hi0, *, v_cap: int,
     _, t_star = jax.lax.fori_loop(0, n_bisect, bisect,
                                   (jnp.zeros_like(hi), hi))
 
-    loads, rets = _vec_optimal_loads(mu, alpha, tau, h, caps, t_star,
+    loads, rets = _vec_optimal_loads(mu, alpha, tau, h, comm, caps, t_star,
                                      v_cap=v_cap, n_golden=n_golden)
     return t_star, loads, rets
-
-
-def _require_symmetric(nodes: Sequence[NodeDelayParams]) -> None:
-    if any(nd.tau_up is not None or nd.p_up is not None for nd in nodes):
-        raise ValueError(
-            "vectorized solver supports symmetric (reciprocal) links only; "
-            "use the scalar two_step_allocate for asymmetric tau_up/p_up")
 
 
 def vectorized_optimal_loads(nodes: Sequence[NodeDelayParams], t: float,
@@ -393,20 +432,20 @@ def vectorized_optimal_loads(nodes: Sequence[NodeDelayParams], t: float,
                              ) -> tuple[np.ndarray, np.ndarray]:
     """Step-1 optimal loads for all nodes in one jitted call (float64).
 
-    Node-for-node equivalent of looping `optimal_load`; the scalar path is
-    the oracle the property tests compare against.
+    Node-for-node equivalent of looping `optimal_load` — including
+    asymmetric tau_up/p_up links (footnote 1 generalization), which flow
+    through the flattened per-direction transmission grid; the scalar
+    path is the oracle the property tests compare against.
     """
     from jax.experimental import enable_x64
-    _require_symmetric(nodes)
     prm = stack_node_params(nodes)
     v_cap = _tail_v_cap(float(prm["p_down"].max()))
+    h, comm = _transmission_grids(prm)
     with enable_x64():
-        p = jnp.asarray(prm["p_down"])
-        v = jnp.arange(2, v_cap + 1, dtype=jnp.float64)
         loads, rets = jax.jit(_vec_optimal_loads,
                               static_argnames=("v_cap", "n_golden"))(
             jnp.asarray(prm["mu"]), jnp.asarray(prm["alpha"]),
-            jnp.asarray(prm["tau_down"]), _nb_tail_weights(p, v),
+            jnp.asarray(prm["tau_down"]), jnp.asarray(h), jnp.asarray(comm),
             jnp.asarray(np.asarray(caps, np.float64)), float(t),
             v_cap=v_cap, n_golden=n_golden)
         return np.asarray(loads), np.asarray(rets)
@@ -428,9 +467,11 @@ def two_step_allocate_vectorized(clients: Sequence[NodeDelayParams],
     One fixed-iteration jitted JAX program solves step 1 for all n clients
     (plus the MEC server compute node when given — the paper's n+1 nodes)
     and runs the step-2 bracket/bisection on device; n >= 1000 nodes is a
-    single call.  Matches the scalar solver within its bisection tolerance
-    (`tol` only documents that contract — iteration counts are fixed and
-    exceed it).  Float64 throughout via a local x64 scope.
+    single call.  Asymmetric tau_up/p_up links are supported through the
+    flattened per-direction transmission grid (`_transmission_grids`).
+    Matches the scalar solver within its bisection tolerance (`tol` only
+    documents that contract — iteration counts are fixed and exceed it).
+    Float64 throughout via a local x64 scope.
     """
     from jax.experimental import enable_x64
     nodes = list(clients)
@@ -441,15 +482,15 @@ def two_step_allocate_vectorized(clients: Sequence[NodeDelayParams],
         caps.append(float(u_max))
     else:
         target -= float(u_max)          # P(T_C <= t) = 1: u_max always returns
-    _require_symmetric(nodes)
     if sum(client_caps) + u_max < m - 1e-9:
         raise ValueError("infeasible: sum of caps + u_max < m")
     prm = stack_node_params(nodes)
     v_cap = _tail_v_cap(float(prm["p_down"].max()))
+    h, comm = _transmission_grids(prm)
     with enable_x64():
         t_star, loads, rets = _vec_two_step(
             jnp.asarray(prm["mu"]), jnp.asarray(prm["alpha"]),
-            jnp.asarray(prm["tau_down"]), jnp.asarray(prm["p_down"]),
+            jnp.asarray(prm["tau_down"]), jnp.asarray(h), jnp.asarray(comm),
             jnp.asarray(np.asarray(caps, np.float64)), target,
             float(t_hi if t_hi is not None else 1.0),
             v_cap=v_cap, n_golden=n_golden,

@@ -51,12 +51,19 @@ class Scheme:
 
     Subclasses set ``name`` (registry key) and ``step_kind`` (the static
     branch `fed_runtime.build_step` compiles: one of "naive", "greedy",
-    "coded", "ideal").  ``coded`` marks schemes that allocate loads and
-    build a parity set (t_star / loads / parity / privacy budget).
+    "coded", "ideal", "adaptive_coded", "adaptive_greedy").  ``coded``
+    marks schemes that allocate loads and build a parity set (t_star /
+    loads / parity / privacy budget).  ``grid`` marks schemes that belong
+    to the default profile-grid sweep/benchmark
+    (`repro.launch.sweep.run_sweep` / `repro.launch.bench`); adaptive
+    schemes opt out — they need a channel trace and a per-run control
+    schedule, and are benched by the drift-scenario runner
+    (`repro.launch.scenarios`) instead.
     """
     name: str = ""
     step_kind: str = ""
     coded: bool = False
+    grid: bool = True
 
     def setup(self, exp) -> None:
         """Host-side deployment setup; mutates the Experiment in place."""
@@ -85,6 +92,14 @@ class Scheme:
         """Worst-case eps-MI-DP leakage (bits) of what clients share, or
         None when nothing beyond gradients leaves the device."""
         return None
+
+    def replan(self, exp, estimator) -> dict:
+        """Adaptive-family hook: new control values from the estimated
+        network (called by `repro.net.estimator.AdaptiveController`
+        between blocks).  Returns a dict of updated control values
+        ({"loads", "t_star"} for the coded family, {"n_wait"} for the
+        greedy family); non-adaptive schemes never re-plan."""
+        raise NotImplementedError(f"{self.name!r} is not adaptive")
 
     def __repr__(self):
         return f"<Scheme {self.name!r} step_kind={self.step_kind!r}>"
@@ -155,6 +170,10 @@ class CodedScheme(Scheme):
         # but stays fully deterministic per seed.
         perm = exp.rng.permuted(
             np.tile(np.arange(exp.l), (exp.n, 1)), axis=1)
+        # selection-priority order: point perm[j, k] is the k-th point
+        # client j would process — the adaptive family re-masks prefixes
+        # of this order when it re-allocates loads
+        exp._select_perm = perm
         take = np.arange(exp.l)[None, :] < exp.loads[:, None]   # (n, l)
         processed = np.zeros((exp.n, exp.l), dtype=bool)
         row_ids = np.broadcast_to(np.arange(exp.n)[:, None],
@@ -289,6 +308,129 @@ class PartialCodedScheme(CodedScheme):
                                 * exp.fl.delta * exp.m)))
 
 
+class AdaptiveCodedScheme(CodedScheme):
+    """CodedFedL with blockwise load re-allocation under network drift.
+
+    Static CodedFedL solves the two-step allocation ONCE from the nominal
+    (round-0) delay statistics; when the network drifts (Dhakal et al.
+    2020, Sun et al. 2022 both flag this), the fixed deadline t* either
+    wastes wall-clock on a network that got faster or bleeds return mass
+    on one that got slower.  This scheme re-solves the allocation every
+    ``ExperimentSpec.adapt_every`` rounds on the *estimated* network
+    (`repro.net.estimator`), applying the new loads as prefix-mask
+    re-weightings over a full-length fused client tensor — shapes (and
+    the compiled step) never change.
+
+    The parity set stays the one built at setup from the initial
+    allocation: re-uploading parity every block would re-pay the setup
+    cost the coding exists to amortize, so the §III-D expected-miss
+    weights are an approximation away from the re-allocated loads (the
+    same approximation a deployed system would make).
+
+    ``scheme_params`` knobs: ``est_beta`` (EWMA factor, default 0.25),
+    ``est_window`` (switch to windowed-MLE estimation), ``avail_min``
+    (availability score below which a client gets no load, default 0.5).
+    """
+    name = "adaptive_coded"
+    step_kind = "adaptive_coded"
+    grid = False
+
+    def setup(self, exp) -> None:
+        if not exp.fused_coded:
+            raise ValueError(
+                "adaptive_coded requires fused_coded=True (re-allocation "
+                "re-weights the fused client+parity mask)")
+        super().setup(exp)
+        # full-length priority view: every client's points in selection-
+        # priority order, so ANY re-allocated load l_j <= l is a prefix
+        # mask of the same (n, l) tensor
+        perm = jnp.asarray(exp._select_perm)
+        gather = jax.vmap(lambda xj, ij: xj[ij])
+        exp._adapt_x = gather(exp.x, perm)
+        exp._adapt_y = gather(exp.y, perm)
+
+    # ------------------------------------------------------------ step consts
+    def consts_point_len(self, exp) -> int:
+        return max(exp.l, exp.u)
+
+    def grad_tensors(self, exp, l_target=None):
+        from repro.core import aggregation
+        # full-length tensors; the per-block prefix mask (not baked into
+        # the data) selects the processed points — linreg_grad_masked
+        # tolerates un-zeroed padding by contract
+        gx, gy, gmask = aggregation.fused_client_parity_tensors(
+            exp._adapt_x, exp._adapt_y,
+            jnp.asarray(self._prefix_mask(exp, exp.loads)),
+            exp.parity.x, exp.parity.y, pnr_c=0.0, l_target=l_target)
+        return gx, gy, gmask, [1.0]
+
+    @staticmethod
+    def _prefix_mask(exp, loads) -> np.ndarray:
+        """(n, l) float32 prefix mask over the priority order."""
+        loads = np.asarray(loads)
+        return (np.arange(exp.l)[None, :]
+                < loads[:, None]).astype(np.float32)
+
+    def gmask_for_loads(self, exp, loads) -> jnp.ndarray:
+        """(n+1, L) fused mask for a load vector: client prefix rows plus
+        the 1/u-scaled parity pseudo-row — the mask-re-weighting unit the
+        adaptive step indexes per block."""
+        L = max(exp.l, exp.u)
+        mask = np.zeros((exp.n + 1, L), np.float32)
+        mask[:exp.n, :exp.l] = self._prefix_mask(exp, loads)
+        mask[exp.n, :exp.u] = 1.0 / exp.u
+        return jnp.asarray(mask)
+
+    # ----------------------------------------------------------------- replan
+    def replan(self, exp, estimator) -> dict:
+        from repro.core import load_allocation
+        est_nodes = estimator.estimated_nodes()
+        avail_min = float(exp.scheme_params.get("avail_min", 0.5))
+        caps = np.where(estimator.avail_hat >= avail_min, float(exp.l), 0.0)
+        allocate = (load_allocation.two_step_allocate_vectorized
+                    if exp._pick_alloc_backend() == "vectorized"
+                    else load_allocation.two_step_allocate)
+        try:
+            alloc = allocate(est_nodes, list(caps), server=None,
+                             u_max=float(exp.u), m=float(exp.m))
+        except ValueError:
+            # too many clients estimated unavailable for feasibility:
+            # fall back to full caps rather than keep a stale plan
+            alloc = allocate(est_nodes, [float(exp.l)] * exp.n, server=None,
+                             u_max=float(exp.u), m=float(exp.m))
+        loads = np.minimum(np.floor(alloc.loads).astype(int), exp.l)
+        return {"loads": loads, "t_star": float(alloc.t_star)}
+
+
+class AdaptiveGreedyScheme(GreedyScheme):
+    """Greedy waiting with an adaptively re-tuned wait count.
+
+    Static greedy always waits for the fastest ``(1 - psi) n`` clients.
+    Under drift/churn the right count changes: this scheme re-picks, every
+    ``adapt_every`` rounds, the k maximizing expected returned data per
+    second — ``argmin_k E[T]_(k) / k`` over the *estimated* per-client
+    expected delays, restricted to clients whose availability score
+    clears ``avail_min`` (default 0.5).
+    """
+    name = "adaptive_greedy"
+    step_kind = "adaptive_greedy"
+    grid = False
+
+    def replan(self, exp, estimator) -> dict:
+        est_nodes = estimator.estimated_nodes()
+        avail_min = float(exp.scheme_params.get("avail_min", 0.5))
+        avail = estimator.avail_hat >= avail_min
+        if not np.any(avail):
+            return {"n_wait": 1}
+        exp_delay = np.array([nd.expected_delay(float(exp.l))
+                              for nd in est_nodes])
+        srt = np.sort(np.where(avail, exp_delay, np.inf))
+        k = np.arange(1, exp.n + 1, dtype=np.float64)
+        with np.errstate(invalid="ignore"):
+            cost = np.where(np.isfinite(srt), srt / k, np.inf)
+        return {"n_wait": int(np.argmin(cost)) + 1}
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
@@ -304,7 +446,8 @@ def register(scheme: Scheme, *, overwrite: bool = False) -> Scheme:
     """
     if not scheme.name:
         raise ValueError(f"{scheme!r} has no name")
-    if scheme.step_kind not in ("naive", "greedy", "coded", "ideal"):
+    if scheme.step_kind not in ("naive", "greedy", "coded", "ideal",
+                                "adaptive_coded", "adaptive_greedy"):
         raise ValueError(
             f"scheme {scheme.name!r} has unknown step_kind "
             f"{scheme.step_kind!r}")
@@ -337,8 +480,16 @@ def coded_names() -> tuple[str, ...]:
     return tuple(n for n, s in _REGISTRY.items() if s.coded)
 
 
+def grid_names() -> tuple[str, ...]:
+    """Schemes belonging to the default profile-grid sweep/benchmark
+    (adaptive schemes opt out — see `Scheme.grid`)."""
+    return tuple(n for n, s in _REGISTRY.items() if s.grid)
+
+
 register(CodedScheme())
 register(NaiveScheme())
 register(GreedyScheme())
 register(IdealScheme())
 register(PartialCodedScheme())
+register(AdaptiveCodedScheme())
+register(AdaptiveGreedyScheme())

@@ -53,14 +53,17 @@ from repro.core import schemes as schemes_registry
 # profiles without importing the launch layer
 from repro.core.delay_model import HETEROGENEITY_PROFILES  # noqa: F401
 from repro.core.delay_model import ideal_round_time  # noqa: F401
+from repro.launch import scenarios as scenarios_mod
 from repro.launch import sweep as sweep_mod
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 ARTIFACT_NAME = "BENCH_fed_training.json"
 # core grid every artifact must cover; the live registry may add more
 CORE_SCHEMES = ("coded", "naive", "greedy", "ideal")
-#: registry snapshot at import — prefer `schemes_registry.registered_names()`
-SCHEMES = schemes_registry.registered_names()
+#: grid-eligible registry snapshot at import — prefer
+#: `schemes_registry.grid_names()` (adaptive schemes are benched by the
+#: drift-scenario section, not the profile grid)
+SCHEMES = schemes_registry.grid_names()
 
 
 def _build_sims(xs, ys, profiles, fl_base, tc, kernel_backend, scheme_names):
@@ -90,26 +93,36 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
                 profiles: Optional[dict] = None,
                 kernel_backend: str = "xla",
                 engine: str = "sweep",
-                measure_loop: bool = True) -> dict:
+                measure_loop: bool = True,
+                scenario_kwargs: Optional[dict] = None) -> dict:
     """Run the scheme comparison over heterogeneity profiles.
 
-    The scheme grid is the LIVE registry (`repro.core.schemes`), so a
-    newly registered scheme lands in the artifact without touching this
-    module.  Returns the artifact dict (see `write_artifact` /
-    `validate_artifact`).  Simulated wall-clocks come from the
-    multi-realization scan (mean ± std over independent delay
-    realizations); host timing depends on `engine`: "sweep" (default)
-    compiles one (profile x realization) call per scheme and, with
-    `measure_loop`, also times the looped per-profile path so the artifact
-    records the measured speedup.
+    The scheme grid is the LIVE grid-eligible registry
+    (`repro.core.schemes.grid_names`), so a newly registered scheme lands
+    in the artifact without touching this module.  Returns the artifact
+    dict (see `write_artifact` / `validate_artifact`).  Simulated
+    wall-clocks come from the multi-realization scan (mean ± std over
+    independent delay realizations); host timing depends on `engine`:
+    "sweep" (default) compiles one (profile x realization) call per
+    scheme and, with `measure_loop`, also times the looped per-profile
+    path so the artifact records the measured speedup.
+
+    Schema v4 additionally records a ``scenarios`` section — the
+    static-vs-adaptive drift comparison (`repro.launch.scenarios`), keyed
+    off `scenario_kwargs` (None -> that runner's defaults; pass
+    ``{"skip": True}`` to omit the section, which fails validation and is
+    only for partial reruns).
     """
     if engine not in ("sweep", "loop"):
         raise ValueError(f"unknown engine {engine!r}")
-    scheme_names = schemes_registry.registered_names()
+    scheme_names = schemes_registry.grid_names()
     missing = set(CORE_SCHEMES) - set(scheme_names)
     if missing:
         raise RuntimeError(f"core scheme(s) unregistered: {sorted(missing)}")
-    coded_names = schemes_registry.coded_names()
+    # coded-family columns of the grid (adaptive_coded is coded-family but
+    # not grid-eligible — it reports under `scenarios` instead)
+    coded_names = tuple(n for n in schemes_registry.coded_names()
+                        if n in scheme_names)
     profiles = profiles if profiles is not None else HETEROGENEITY_PROFILES
     rng = np.random.default_rng(seed)
     xs = rng.normal(size=(n_clients, l, q)).astype(np.float32) * 0.2
@@ -216,6 +229,11 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
     }
     if sweep_info is not None:
         artifact["sweep"] = sweep_info
+    scenario_kwargs = dict(scenario_kwargs or {})
+    if not scenario_kwargs.pop("skip", False):
+        # schema v4: static-vs-adaptive time-to-target under drift
+        artifact["scenarios"] = scenarios_mod.run_scenarios(
+            kernel_backend=kernel_backend, **scenario_kwargs)
     return artifact
 
 
@@ -232,7 +250,7 @@ _SCHEME_FIELDS = ("final_wall_clock_mean", "final_wall_clock_std",
 
 
 def validate_artifact(obj) -> list[str]:
-    """Structural check of the BENCH_fed_training.json artifact (schema 3).
+    """Structural check of the BENCH_fed_training.json artifact (schema 4).
 
     `obj` is a dict or a path.  Returns a list of problems (empty == valid)
     rather than raising, so CI can print every issue at once.
@@ -242,7 +260,9 @@ def validate_artifact(obj) -> list[str]:
     grid) and ``config.coded_schemes`` the coded-family subset; every
     profile must carry an entry per recorded scheme, and coded-family
     entries must report ``t_star``, ``total_load``, and the parity privacy
-    leakage ``privacy_eps_max_bits``.
+    leakage ``privacy_eps_max_bits``.  Schema v4 adds the required
+    ``scenarios`` section (static-vs-adaptive drift comparison, validated
+    by `repro.launch.scenarios.validate_scenarios`).
     """
     if isinstance(obj, str):
         try:
@@ -286,6 +306,10 @@ def validate_artifact(obj) -> list[str]:
                 val = sweep.get(field)
                 if val is not None and not _is_pos(val):
                     errs.append(f"sweep/{field}: bad value {val!r}")
+    if "scenarios" not in obj:
+        errs.append("schema v4 artifact missing 'scenarios' section")
+    else:
+        errs.extend(scenarios_mod.validate_scenarios(obj["scenarios"]))
     profiles = obj.get("profiles")
     if not isinstance(profiles, dict) or not profiles:
         return errs + ["missing/empty 'profiles'"]

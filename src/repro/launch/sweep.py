@@ -38,10 +38,12 @@ from repro.core import fed_runtime
 from repro.core import schemes as schemes_registry
 from repro.core.fed_runtime import Experiment, MultiFedResult
 
-#: import-time snapshot of the registry, in registration order; the
-#: run_sweep default re-reads the LIVE registry at call time, so schemes
-#: registered later are swept too
-SCHEMES = schemes_registry.registered_names()
+#: import-time snapshot of the grid-eligible registry, in registration
+#: order; the run_sweep default re-reads the LIVE registry at call time,
+#: so schemes registered later are swept too.  Adaptive schemes
+#: (Scheme.grid = False) are excluded — they need a channel trace and a
+#: per-run control schedule (see repro.launch.scenarios).
+SCHEMES = schemes_registry.grid_names()
 
 
 @dataclasses.dataclass
@@ -98,7 +100,19 @@ def run_sweep(x_stack, y_stack, *, profiles: dict,
     them via `sims` ({scheme: {profile: Experiment}}).
     """
     if schemes is None:
-        schemes = schemes_registry.registered_names()
+        schemes = schemes_registry.grid_names()
+    for scheme in schemes:
+        if not schemes_registry.get_scheme(scheme).grid:
+            raise ValueError(
+                f"scheme {scheme!r} is not grid-sweepable (adaptive "
+                "schemes need a channel trace; bench them with "
+                "repro.launch.scenarios)")
+    if base_spec is not None and (base_spec.channel_profile is not None
+                                  or base_spec.channel_params):
+        raise ValueError(
+            "run_sweep replays one compiled step across the grid and has "
+            "no traced-channel path; drop channel_profile/channel_params "
+            "from base_spec (drift scenarios: repro.launch.scenarios)")
     fl_kwargs = dict(fl_kwargs or {})
     fl_kwargs.setdefault("n_clients", int(x_stack.shape[0]))
     R = int(realizations)

@@ -1,0 +1,34 @@
+"""Wireless network dynamics: time-varying channels, churn, adaptation.
+
+The paper's delay model (`repro.core.delay_model`) is *stationary*: one
+`NodeDelayParams` per node, frozen for the whole run, with the load
+allocation solved exactly once at setup.  This package models what the
+stationary view misses — links and compute that drift over a training run:
+
+  channel.py    declarative `ChannelProfile` (Gilbert–Elliott erasure
+                states, log-normal shadowing with an LTE MCS-style rate
+                mapping, bounded compute-speed drift, dropout/rejoin
+                churn) plus the named `CHANNEL_PROFILES` registry that
+                `ExperimentSpec.channel_profile` addresses.
+  trace.py      vectorized, deterministic-per-seed generation of
+                `(rounds, n)` network-state trace tensors, and the traced
+                delay sampler that extends
+                `delay_model.sample_round_times` — bit-exactly equal to
+                it under the static profile.
+  estimator.py  online estimation of `(mu, tau, p)` from observed round
+                telemetry (EWMA or windowed means) and the
+                `AdaptiveController` that re-solves the load allocation
+                every `adapt_every` rounds, emitting a per-round schedule
+                the compiled scan engine consumes in ONE call.
+
+Everything here is host-side NumPy: the network simulation never depends
+on model state, so the whole control loop runs *before* the training scan
+and the engine stays a single compiled program.
+"""
+from repro.net.channel import CHANNEL_PROFILES, ChannelProfile  # noqa: F401
+from repro.net.trace import (NetworkTrace, generate_trace,  # noqa: F401
+                             sample_round_observations,
+                             sample_round_times_traced)
+from repro.net.estimator import (AdaptiveController,  # noqa: F401
+                                 AdaptiveSchedule,
+                                 OnlineChannelEstimator)

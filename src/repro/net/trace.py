@@ -1,0 +1,215 @@
+"""Deterministic per-seed network-state traces and traced delay sampling.
+
+`generate_trace` rolls a `ChannelProfile` forward for a whole training
+run, producing dense ``(rounds, n)`` state tensors (erasure probabilities,
+tau/mu multipliers, availability).  `sample_round_observations` then draws
+the per-round delays *through* that trace with the same three-draw layout
+as `delay_model.sample_round_times` — one geometric draw per link
+direction plus one exponential compute tail — so the batched engine keeps
+pre-sampling an entire run in a handful of vectorized RNG calls.
+
+Two contracts the tests pin down:
+
+  * **Determinism** — equal (nodes, profile, rounds, seed) reproduce the
+    trace array-for-array; the trace generator always consumes the same
+    RNG layout (one uniform/normal block per dynamic, drawn whether or
+    not that dynamic is enabled), so switching one knob on never changes
+    another's realization at equal seed.
+  * **Static exactness** — under a static profile the sampler's delays
+    are BIT-IDENTICAL to `sample_round_times` given the same generator
+    state: multipliers are exactly 1.0 (multiplying by them is an IEEE
+    no-op), erasure probabilities are the unmodified per-node values, and
+    the arithmetic evaluates in the same order.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.delay_model import NodeDelayParams, stack_node_params
+from repro.net.channel import ChannelProfile, mcs_efficiency
+
+
+@dataclasses.dataclass
+class NetworkTrace:
+    """Realized network state, one row per round: all arrays (rounds, n)."""
+    mu_mult: np.ndarray     # compute-speed multiplier (exactly 1.0 if off)
+    tau_mult: np.ndarray    # per-transmission-time multiplier (both dirs)
+    p_down: np.ndarray      # absolute downlink erasure prob per round
+    p_up: np.ndarray
+    active: np.ndarray      # bool availability (churn) mask
+    profile: ChannelProfile
+
+    @property
+    def rounds(self) -> int:
+        return self.mu_mult.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.mu_mult.shape[1]
+
+    def slice(self, r0: int, r1: int) -> "NetworkTrace":
+        """Rounds [r0, r1) as a view-trace (the controller's block window)."""
+        return NetworkTrace(
+            mu_mult=self.mu_mult[r0:r1], tau_mult=self.tau_mult[r0:r1],
+            p_down=self.p_down[r0:r1], p_up=self.p_up[r0:r1],
+            active=self.active[r0:r1], profile=self.profile)
+
+
+def generate_trace(nodes: "list[NodeDelayParams]", profile: ChannelProfile,
+                   rounds: int, rng: np.random.Generator) -> NetworkTrace:
+    """Roll the channel profile forward `rounds` rounds for all nodes.
+
+    Vectorized over nodes; the only Python-level loop is the O(rounds)
+    recurrence each dynamic needs (Markov states, AR(1), random walk).
+    The RNG layout is fixed — four (rounds, n) blocks drawn uniformly in
+    one order — so the realization of one dynamic is invariant to the
+    others being toggled (controlled comparisons at equal seed).
+    """
+    prm = stack_node_params(nodes)
+    n = len(nodes)
+    R = int(rounds)
+    # fixed draw layout (see docstring): GE uniforms, shadowing normals,
+    # drift normals, churn uniforms
+    ge_u = rng.random((R, n))
+    shadow_eps = rng.standard_normal((R, n))
+    drift_eps = rng.standard_normal((R, n))
+    churn_u = rng.random((R, n))
+
+    # --- Gilbert–Elliott erasure states -> absolute per-round erasure probs
+    if profile.has_erasure_dynamics:
+        bad = np.zeros((R, n), bool)          # round 0 starts in good state
+        prev = np.zeros(n, bool)
+        for t in range(R):
+            prev = np.where(prev, ge_u[t] >= profile.ge_p_bg,
+                            ge_u[t] < profile.ge_p_gb)
+            bad[t] = prev
+        scale = np.where(bad, profile.ge_bad_scale, 1.0)
+        p_down = np.clip(prm["p_down"] * scale, 0.0, profile.p_cap)
+        p_up = np.clip(prm["p_up"] * scale, 0.0, profile.p_cap)
+    else:
+        p_down = np.broadcast_to(prm["p_down"], (R, n)).copy()
+        p_up = np.broadcast_to(prm["p_up"], (R, n)).copy()
+
+    # --- log-normal shadowing (AR(1) in dB) + deterministic trend,
+    # optionally MCS-quantized.  The dB process is *attenuation*: positive
+    # values slow the link in both the continuous and the MCS mapping.
+    if profile.has_shadowing:
+        sigma, rho = profile.shadow_sigma_db, profile.shadow_rho
+        x = np.zeros((R, n))
+        x[0] = sigma * shadow_eps[0]          # start at the stationary law
+        innov = np.sqrt(max(0.0, 1.0 - rho * rho)) * sigma
+        for t in range(1, R):
+            x[t] = rho * x[t - 1] + innov * shadow_eps[t]
+        x = x + profile.tau_trend_db * np.arange(R)[:, None]
+        if profile.mcs:
+            # attenuation lowers SNR; rate hops along the CQI ladder
+            eff0 = mcs_efficiency(profile.mcs_snr0_db)
+            tau_mult = eff0 / mcs_efficiency(profile.mcs_snr0_db - x)
+        else:
+            tau_mult = 10.0 ** (x / 10.0)
+    else:
+        tau_mult = np.ones((R, n))
+
+    # --- bounded compute-speed random walk (log domain)
+    if profile.has_compute_drift:
+        lo, hi = np.log(profile.mu_min), np.log(profile.mu_max)
+        step = np.log1p(profile.mu_drift_rate)
+        g = np.zeros((R, n))                  # round 0 at nominal speed
+        for t in range(1, R):
+            g[t] = np.clip(
+                g[t - 1] + step + profile.mu_drift_sigma * drift_eps[t],
+                lo, hi)
+        mu_mult = np.exp(g)
+    else:
+        mu_mult = np.ones((R, n))
+
+    # --- dropout/rejoin churn
+    if profile.has_churn:
+        active = np.ones((R, n), bool)        # round 0 everyone present
+        prev = np.ones(n, bool)
+        for t in range(1, R):
+            prev = np.where(prev, churn_u[t] >= profile.dropout_prob,
+                            churn_u[t] < profile.rejoin_prob)
+            active[t] = prev
+    else:
+        active = np.ones((R, n), bool)
+
+    return NetworkTrace(mu_mult=mu_mult, tau_mult=tau_mult, p_down=p_down,
+                        p_up=p_up, active=active, profile=profile)
+
+
+@dataclasses.dataclass
+class RoundObservations:
+    """Per-round, per-node timing telemetry the MEC orchestrator collects.
+
+    The simulator grants full per-phase observability — download time,
+    compute time, upload time, and per-direction transmission counts (the
+    link layer counts its own retransmissions) — which is what the online
+    estimator (`repro.net.estimator`) consumes.  ``total`` is the scalar
+    round-trip delay the engine's deadline logic sees.
+    """
+    total: np.ndarray       # (R, n) seconds
+    t_down: np.ndarray      # (R, n) downlink communication seconds
+    t_up: np.ndarray        # (R, n) uplink communication seconds
+    t_comp: np.ndarray      # (R, n) compute seconds (deterministic + tail)
+    n_down: np.ndarray      # (R, n) downlink transmission counts
+    n_up: np.ndarray        # (R, n) uplink transmission counts
+    active: np.ndarray      # (R, n) availability (copied from the trace)
+    loads: np.ndarray       # (R, n) loads in effect when sampled
+
+
+def sample_round_observations(nodes: "list[NodeDelayParams]", loads,
+                              rng: np.random.Generator,
+                              trace: NetworkTrace) -> RoundObservations:
+    """Sample every round's delays through the trace, with telemetry.
+
+    Mirrors `delay_model.sample_round_times`'s three-draw layout exactly
+    (geometric per direction, then one unit exponential), with the trace's
+    per-round parameters substituted elementwise.  `loads` is (n,) for a
+    fixed allocation or (rounds, n) for a per-round (adaptive) schedule.
+    """
+    prm = stack_node_params(nodes)
+    n = len(nodes)
+    R = trace.rounds
+    loads = np.asarray(loads, np.float64)
+    if loads.shape == (n,):
+        loads_rn = np.broadcast_to(loads, (R, n))
+    elif loads.shape == (R, n):
+        loads_rn = loads
+    else:
+        raise ValueError(f"loads shape {loads.shape} must be ({n},) "
+                         f"or ({R}, {n})")
+    if trace.n != n:
+        raise ValueError(f"trace covers {trace.n} nodes, got {n}")
+
+    n_down = rng.geometric(1.0 - trace.p_down)
+    n_up = rng.geometric(1.0 - trace.p_up)
+    t_down = (prm["tau_down"] * trace.tau_mult) * n_down
+    t_up = (prm["tau_up"] * trace.tau_mult) * n_up
+    active_load = loads_rn > 0.0
+    mu_eff = prm["mu"] * trace.mu_mult
+    scale = np.where(active_load, loads_rn / (prm["alpha"] * mu_eff), 0.0)
+    t_stoch = rng.exponential(1.0, size=(R, n)) * scale
+    t_det = np.where(active_load, loads_rn / mu_eff, 0.0)
+    # same association order as sample_round_times: (comm + det) + tail
+    total = (t_down + t_up) + t_det + t_stoch
+    return RoundObservations(total=total, t_down=t_down, t_up=t_up,
+                             t_comp=t_det + t_stoch, n_down=n_down,
+                             n_up=n_up, active=trace.active.copy(),
+                             loads=np.asarray(loads_rn, np.float64).copy())
+
+
+def sample_round_times_traced(nodes: "list[NodeDelayParams]", loads,
+                              rng: np.random.Generator,
+                              trace: NetworkTrace) -> np.ndarray:
+    """(rounds, n) round-trip delays through the trace.
+
+    Drop-in extension of `delay_model.sample_round_times`: under a static
+    profile (all multipliers exactly 1.0, erasure probs untouched) the
+    output is bit-identical to it for the same generator state, because
+    the RNG draws see elementwise-equal parameters and the arithmetic
+    keeps the same evaluation order.
+    """
+    return sample_round_observations(nodes, loads, rng, trace).total

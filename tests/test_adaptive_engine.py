@@ -1,0 +1,267 @@
+"""Channel-traced engine + adaptive re-allocation (acceptance criteria).
+
+Three pillars:
+  (a) traces are deterministic per seed (engine-level: identical reruns);
+  (b) a static (no-drift, no-churn) channel profile reproduces the
+      stationary engine's trajectories BIT-exactly, on both kernel
+      backends;
+  (c) under a drifting profile the adaptive controller reaches the target
+      loss in less simulated wall-clock than the static allocation.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
+from repro.launch import scenarios as scenarios_mod
+
+
+def _data(n=6, l=16, q=24, c=3, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n, l, q)).astype(np.float32) * 0.2
+    ys = rng.normal(size=(n, l, c)).astype(np.float32)
+    return xs, ys
+
+
+def _spec(scheme="coded", **over):
+    base = dict(
+        fl=FLConfig(n_clients=6, delta=0.25, psi=0.3, seed=3),
+        train=TrainConfig(learning_rate=0.5, l2_reg=1e-5,
+                          lr_decay_epochs=(5,)),
+        scheme=scheme)
+    base.update(over)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# (b) static-profile bit-exactness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel_backend", ["xla", "pallas"])
+@pytest.mark.parametrize("scheme", ["coded", "naive", "greedy", "ideal"])
+def test_static_channel_bit_identical_to_stationary(scheme, kernel_backend):
+    xs, ys = _data()
+    plain = api.build_experiment(
+        _spec(scheme, kernel_backend=kernel_backend), xs, ys)
+    traced = api.build_experiment(
+        _spec(scheme, kernel_backend=kernel_backend,
+              channel_profile="static"), xs, ys)
+    trace = lambda th: (float(np.abs(np.asarray(th)).sum()), 0.0)
+    res_p = plain.run(10, eval_fn=trace, eval_every=1)
+    res_t = traced.run(10, eval_fn=trace, eval_every=1)
+    np.testing.assert_array_equal(np.asarray(res_p.theta),
+                                  np.asarray(res_t.theta))
+    for hp, ht in zip(res_p.history, res_t.history):
+        assert hp.returned == ht.returned
+        assert hp.wall_clock == ht.wall_clock
+        assert hp.loss == ht.loss
+
+
+def test_channel_runs_deterministic_per_seed():
+    xs, ys = _data()
+    outs = []
+    for _ in range(2):
+        exp = api.build_experiment(
+            _spec("coded", channel_profile="drift_churn"), xs, ys)
+        outs.append(exp.run(8))
+    np.testing.assert_array_equal(np.asarray(outs[0].theta),
+                                  np.asarray(outs[1].theta))
+    assert [h.wall_clock for h in outs[0].history] == \
+        [h.wall_clock for h in outs[1].history]
+
+
+def test_drifting_channel_changes_trajectory():
+    xs, ys = _data()
+    plain = api.build_experiment(_spec("coded"), xs, ys).run(8)
+    drift = api.build_experiment(
+        _spec("coded", channel_profile="degrade_drift"), xs, ys).run(8)
+    assert not np.array_equal(np.asarray(plain.theta),
+                              np.asarray(drift.theta))
+
+
+def test_channel_params_override_profile():
+    xs, ys = _data()
+    exp = api.build_experiment(
+        _spec("naive", channel_profile="churn",
+              channel_params={"dropout_prob": 0.0}), xs, ys)
+    assert exp.channel.dropout_prob == 0.0
+    assert exp.channel.rejoin_prob == 0.25      # rest of profile kept
+
+
+def test_churned_client_contributes_nothing():
+    """A client that is churned out for a round neither counts as
+    returned nor contributes gradient (naive under full churn == the
+    same round with those clients' gradients masked)."""
+    xs, ys = _data()
+    exp = api.build_experiment(
+        _spec("naive", channel_profile="churn",
+              channel_params={"dropout_prob": 0.6, "rejoin_prob": 0.2}),
+        xs, ys)
+    res = exp.run(12)
+    returned = [h.returned for h in res.history]
+    assert returned[0] == exp.n                 # round 0: everyone present
+    assert min(returned) < exp.n                # churn bites later
+    assert np.isfinite(np.asarray(res.theta)).all()
+
+
+def test_channel_run_multi_shapes_and_determinism():
+    xs, ys = _data()
+    outs = []
+    for _ in range(2):
+        # naive: the round clock is the sampled max delay, so realization
+        # variance is visible (coded rounds cost exactly t* by design)
+        exp = api.build_experiment(
+            _spec("naive", channel_profile="slow_fade"), xs, ys)
+        outs.append(exp.run_multi(6, 3, eval_fn=lambda th: (0.0, 1.0)))
+    assert outs[0].theta.shape == (3, 24, 3)
+    assert outs[0].wall_clock.shape == (3, 6)
+    assert outs[0].accuracy.shape == (3,)
+    np.testing.assert_array_equal(outs[0].wall_clock, outs[1].wall_clock)
+    # realizations face independent traces/delays
+    assert np.std(outs[0].wall_clock[:, -1]) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Adaptive schemes
+# ---------------------------------------------------------------------------
+
+def test_adaptive_requires_adapt_every_and_batched_engine():
+    xs, ys = _data()
+    with pytest.raises(ValueError, match="adapt_every"):
+        api.build_experiment(_spec("adaptive_coded"), xs, ys)
+    with pytest.raises(ValueError, match="batched"):
+        api.build_experiment(
+            _spec("adaptive_coded", adapt_every=4, engine="legacy"),
+            xs, ys)
+    with pytest.raises(NotImplementedError, match="mesh"):
+        api.build_experiment(
+            _spec("adaptive_coded", adapt_every=4, mesh=1), xs, ys)
+    with pytest.raises(ValueError, match="fused_coded"):
+        api.build_experiment(
+            _spec("adaptive_coded", adapt_every=4, fused_coded=False),
+            xs, ys)
+
+
+def test_adaptive_coded_near_static_on_static_channel():
+    """With no drift, the estimator converges to the nominal network, so
+    re-allocation stays near the round-0 plan: same deadline to a few
+    percent, similar trajectory."""
+    xs, ys = _data()
+    static = api.build_experiment(_spec("coded"), xs, ys)
+    adaptive = api.build_experiment(
+        _spec("adaptive_coded", adapt_every=5,
+              channel_profile="static"), xs, ys)
+    res_a = adaptive.run(20)
+    sched = adaptive.last_schedule
+    t_stars = np.asarray(sched.t_star, np.float64)
+    np.testing.assert_allclose(t_stars, static.t_star, rtol=0.25)
+    assert np.isfinite(np.asarray(res_a.theta)).all()
+    assert sched.n_blocks == 4
+    # block 0 is exactly the static allocation
+    np.testing.assert_array_equal(sched.loads_blocks[0], static.loads)
+    assert t_stars[0] == pytest.approx(static.t_star, rel=1e-6)
+
+
+def test_adaptive_deadlines_track_drift_direction():
+    xs, ys = _data()
+    out = {}
+    for prof in ("speedup_drift", "degrade_drift"):
+        exp = api.build_experiment(
+            _spec("adaptive_coded", adapt_every=4, channel_profile=prof),
+            xs, ys)
+        exp.run(24)
+        out[prof] = np.asarray(exp.last_schedule.t_star, np.float64)
+    assert out["speedup_drift"][-1] < 0.8 * out["speedup_drift"][0]
+    assert out["degrade_drift"][-1] > 1.2 * out["degrade_drift"][0]
+
+
+def test_adaptive_greedy_adapts_wait_count_under_churn():
+    xs, ys = _data()
+    exp = api.build_experiment(
+        _spec("adaptive_greedy", adapt_every=4, channel_profile="churn",
+              channel_params={"dropout_prob": 0.4, "rejoin_prob": 0.05}),
+        xs, ys)
+    res = exp.run(24)
+    sched = exp.last_schedule
+    assert sched.n_wait is not None
+    # heavy churn: the controller must stop waiting for the full (1-psi)n
+    assert sched.n_wait[-1] < sched.n_wait[0]
+    assert np.isfinite(np.asarray(res.theta)).all()
+
+
+def test_adaptive_estimator_knobs_via_scheme_params():
+    xs, ys = _data()
+    exp = api.build_experiment(
+        _spec("adaptive_coded", adapt_every=4, channel_profile="static",
+              scheme_params={"est_beta": 0.5, "est_window": 8}), xs, ys)
+    assert exp.scheme_params_estimator_kwargs() == {"beta": 0.5,
+                                                    "window": 8}
+    exp.run(8)
+
+
+# ---------------------------------------------------------------------------
+# (c) adaptive beats static under drift
+# ---------------------------------------------------------------------------
+
+def test_adaptive_beats_static_time_to_target_under_drift():
+    """The headline claim: under a drifting profile, adaptive
+    re-allocation reaches the target loss in less simulated wall-clock
+    than the static round-0 allocation."""
+    section = scenarios_mod.run_scenarios(
+        n_clients=6, l=16, q=16, c=3, iters=50, adapt_every=5)
+    assert not scenarios_mod.validate_scenarios(section)
+    for name, case in section["cases"].items():
+        assert case["adaptive_speedup"] > 1.05, (name, case)
+    # and under degradation the static scheme also converges WORSE
+    deg = section["cases"]["degrade_drift"]
+    assert deg["adaptive"]["final_loss"] < deg["static"]["final_loss"]
+
+
+# ---------------------------------------------------------------------------
+# Spec surface / guards
+# ---------------------------------------------------------------------------
+
+def test_spec_channel_round_trip_and_validation():
+    spec = _spec("adaptive_coded", adapt_every=7,
+                 channel_profile="drift_churn",
+                 channel_params={"dropout_prob": 0.01})
+    revived = ExperimentSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert revived == spec and hash(revived) == hash(spec)
+    assert revived.resolved_channel().dropout_prob == 0.01
+    with pytest.raises(ValueError, match="channel_profile"):
+        _spec(channel_profile="hurricane")
+    with pytest.raises(ValueError, match="channel_params"):
+        _spec(channel_profile="static",
+              channel_params={"not_a_knob": 1}).resolved_channel()
+    with pytest.raises(ValueError, match="adapt_every"):
+        _spec(adapt_every=-1)
+    with pytest.raises(ValueError, match="legacy"):
+        _spec(channel_profile="static", engine="legacy")
+    assert _spec().resolved_channel() is None
+
+
+def test_sweep_rejects_adaptive_and_channel_specs():
+    from repro.launch import sweep as sweep_mod
+    xs, ys = _data()
+    profiles = {"uniform": dict(rate_decay=1.0, mac_decay=1.0)}
+    tc = TrainConfig(learning_rate=0.5)
+    with pytest.raises(ValueError, match="grid-sweepable"):
+        sweep_mod.run_sweep(xs, ys, profiles=profiles, train_cfg=tc,
+                            iterations=2, realizations=1,
+                            schemes=("adaptive_coded",))
+    with pytest.raises(ValueError, match="channel"):
+        sweep_mod.run_sweep(xs, ys, profiles=profiles, train_cfg=tc,
+                            iterations=2, realizations=1,
+                            schemes=("coded",),
+                            base_spec=_spec(channel_profile="slow_fade"))
+
+
+def test_registry_grid_names_exclude_adaptive():
+    from repro.core import schemes
+    names = schemes.registered_names()
+    assert {"adaptive_coded", "adaptive_greedy"} <= set(names)
+    grid = schemes.grid_names()
+    assert "adaptive_coded" not in grid and "adaptive_greedy" not in grid
+    assert {"coded", "naive", "greedy", "ideal"} <= set(grid)

@@ -1,7 +1,10 @@
 """Asymmetric up/downlink generalization (paper §II-B footnote 1)."""
 import numpy as np
 
-from repro.core.delay_model import NodeDelayParams, scale_tau
+from repro import api
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
+from repro.core.delay_model import (NodeDelayParams, sample_round_times,
+                                    scale_tau)
 from repro.core import load_allocation as la
 
 
@@ -57,3 +60,53 @@ def test_asym_two_step_allocation():
     alloc_fast = la.two_step_allocate(fast, [30.0] * 6, None,
                                       u_max=0.2 * m, m=m)
     assert alloc.t_star > alloc_fast.t_star
+
+
+def _asym_nodes(n, seed=11):
+    rng = np.random.default_rng(seed)
+    return [NodeDelayParams(
+        mu=float(rng.uniform(50, 300)), alpha=2.0,
+        tau=float(rng.uniform(0.002, 0.02)), p=float(rng.uniform(0, 0.25)),
+        tau_up=float(rng.uniform(0.01, 0.06)),
+        p_up=float(rng.uniform(0.1, 0.45))) for _ in range(n)]
+
+
+def test_asym_vectorized_sampler_matches_expected_delay():
+    """sample_round_times: each direction sampled with its own (tau, p) —
+    the per-node mean must match the asymmetric eq. 15 expectation."""
+    nodes = _asym_nodes(4, seed=2)
+    loads = np.array([10.0, 0.0, 25.0, 3.0])
+    t = sample_round_times(nodes, loads, np.random.default_rng(0),
+                           rounds=200_000)
+    want = [nd.expected_delay(ld) for nd, ld in zip(nodes, loads)]
+    np.testing.assert_allclose(t.mean(axis=0), want, rtol=0.02)
+
+
+def test_asym_vectorized_alloc_backend_end_to_end():
+    """An asymmetric MEC network runs through build_experiment with the
+    VECTORIZED allocation solver: same deployment (deadline, loads,
+    trajectory) as the scalar backend, asymmetric delays sampled per
+    direction throughout the run."""
+    rng = np.random.default_rng(4)
+    n, l, q, c = 5, 14, 16, 2
+    xs = rng.normal(size=(n, l, q)).astype(np.float32) * 0.2
+    ys = rng.normal(size=(n, l, c)).astype(np.float32)
+    nodes = _asym_nodes(n)
+    fl = FLConfig(n_clients=n, delta=0.3, seed=7)
+    tc = TrainConfig(learning_rate=0.5, l2_reg=0.0)
+    runs = {}
+    for backend in ("scalar", "vectorized"):
+        exp = api.build_experiment(
+            ExperimentSpec(fl=fl, train=tc, scheme="coded",
+                           alloc_backend=backend), xs, ys, nodes=nodes)
+        assert all(nd.tau_up is not None for nd in exp.nodes)
+        runs[backend] = (exp, exp.run(6))
+    e_s, r_s = runs["scalar"]
+    e_v, r_v = runs["vectorized"]
+    assert abs(e_v.t_star - e_s.t_star) < 2e-5 * (1.0 + e_s.t_star)
+    np.testing.assert_array_equal(e_v.loads, e_s.loads)
+    # the deadline roots differ within solver tolerance, so the parity
+    # weights (sqrt(1 - P(return by t*))) differ in the 4th decimal —
+    # trajectories agree to that level, not to fp32 epsilon
+    np.testing.assert_allclose(np.asarray(r_v.theta),
+                               np.asarray(r_s.theta), atol=1e-4)

@@ -10,8 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import FLConfig, TrainConfig
-from repro.core import aggregation, delay_model, fed_runtime
+from repro import api
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
+from repro.core import aggregation, delay_model
 from repro.core.delay_model import NodeDelayParams
 
 
@@ -22,13 +23,19 @@ def _data(n=8, l=24, q=32, c=3, seed=0):
     return xs, ys
 
 
-def _run(xs, ys, scheme, engine, iters=25, kernel_backend="xla", **fl_kw):
-    fl = FLConfig(n_clients=xs.shape[0], delta=0.25, psi=0.3, seed=3, **fl_kw)
+def _exp(xs, ys, scheme, engine="batched", kernel_backend="xla",
+         fl_kw=None, **spec_kw):
+    fl = FLConfig(n_clients=xs.shape[0], delta=0.25, psi=0.3, seed=3,
+                  **(fl_kw or {}))
     tc = TrainConfig(learning_rate=0.5, l2_reg=1e-4,
                      lr_decay_epochs=(10, 18))
-    sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme=scheme,
-                                          engine=engine,
-                                          kernel_backend=kernel_backend)
+    spec = ExperimentSpec(fl=fl, train=tc, scheme=scheme, engine=engine,
+                          kernel_backend=kernel_backend, **spec_kw)
+    return api.build_experiment(spec, xs, ys)
+
+
+def _run(xs, ys, scheme, engine, iters=25, kernel_backend="xla", **fl_kw):
+    sim = _exp(xs, ys, scheme, engine, kernel_backend, fl_kw=fl_kw)
     trace = lambda th: (float(np.abs(np.asarray(th)).sum()), 0.0)
     return sim.run(iters, eval_fn=trace, eval_every=1)
 
@@ -69,15 +76,10 @@ def test_pallas_backend_matches_xla_and_legacy(scheme):
 
 
 def test_bad_kernel_backend_raises():
-    xs, ys = _data(n=2)
     with pytest.raises(ValueError, match="kernel_backend"):
-        fed_runtime.FederatedSimulation(
-            xs, ys, FLConfig(n_clients=2), TrainConfig(),
-            kernel_backend="cuda")
+        ExperimentSpec(fl=FLConfig(n_clients=2), kernel_backend="cuda")
     with pytest.raises(ValueError, match="alloc_backend"):
-        fed_runtime.FederatedSimulation(
-            xs, ys, FLConfig(n_clients=2), TrainConfig(),
-            alloc_backend="scipy")
+        ExperimentSpec(fl=FLConfig(n_clients=2), alloc_backend="scipy")
 
 
 @pytest.mark.parametrize("kernel_backend", ["xla", "pallas"])
@@ -89,8 +91,9 @@ def test_run_multi_deterministic_across_fresh_sims(kernel_backend):
     for _ in range(2):
         fl = FLConfig(n_clients=5, delta=0.25, psi=0.3, seed=3)
         tc = TrainConfig(learning_rate=0.5, l2_reg=0.0)
-        sim = fed_runtime.FederatedSimulation(
-            xs, ys, fl, tc, scheme="coded", kernel_backend=kernel_backend)
+        sim = api.build_experiment(
+            ExperimentSpec(fl=fl, train=tc, scheme="coded",
+                           kernel_backend=kernel_backend), xs, ys)
         outs.append(sim.run_multi(8, 3))
     np.testing.assert_array_equal(outs[0].wall_clock, outs[1].wall_clock)
     np.testing.assert_array_equal(outs[0].returned, outs[1].returned)
@@ -104,8 +107,9 @@ def test_run_multi_pallas_matches_xla():
     for kb in ("xla", "pallas"):
         fl = FLConfig(n_clients=5, delta=0.25, psi=0.3, seed=3)
         tc = TrainConfig(learning_rate=0.5, l2_reg=0.0)
-        sim = fed_runtime.FederatedSimulation(
-            xs, ys, fl, tc, scheme="coded", kernel_backend=kb)
+        sim = api.build_experiment(
+            ExperimentSpec(fl=fl, train=tc, scheme="coded",
+                           kernel_backend=kb), xs, ys)
         res[kb] = sim.run_multi(8, 3)
     np.testing.assert_allclose(res["pallas"].wall_clock,
                                res["xla"].wall_clock, rtol=1e-6)
@@ -175,7 +179,8 @@ def test_run_multi_shapes_and_bands():
     xs, ys = _data(n=6)
     fl = FLConfig(n_clients=6, delta=0.25, psi=0.3, seed=3)
     tc = TrainConfig(learning_rate=0.5, l2_reg=0.0)
-    sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme="coded")
+    sim = api.build_experiment(
+        ExperimentSpec(fl=fl, train=tc, scheme="coded"), xs, ys)
     res = sim.run_multi(12, 5, eval_fn=lambda th: (0.0, 1.0))
     assert res.theta.shape == (5, sim.q, sim.c)
     assert res.wall_clock.shape == (5, 12)
@@ -193,7 +198,8 @@ def test_run_multi_realizations_differ_uncoded():
     xs, ys = _data(n=6)
     fl = FLConfig(n_clients=6, seed=3)
     tc = TrainConfig(learning_rate=0.5, l2_reg=0.0)
-    sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme="naive")
+    sim = api.build_experiment(
+        ExperimentSpec(fl=fl, train=tc, scheme="naive"), xs, ys)
     res = sim.run_multi(10, 4)
     assert np.std(res.wall_clock[:, -1]) > 0.0
 
@@ -205,11 +211,8 @@ def test_fused_coded_round_matches_two_call_oracle(kernel_backend):
     xs, ys = _data()
     res_f = _run(xs, ys, "coded", "batched", iters=15,
                  kernel_backend=kernel_backend)
-    fl = FLConfig(n_clients=xs.shape[0], delta=0.25, psi=0.3, seed=3)
-    tc = TrainConfig(learning_rate=0.5, l2_reg=1e-4, lr_decay_epochs=(10, 18))
-    sim_u = fed_runtime.FederatedSimulation(
-        xs, ys, fl, tc, scheme="coded", kernel_backend=kernel_backend,
-        fused_coded=False)
+    sim_u = _exp(xs, ys, "coded", kernel_backend=kernel_backend,
+                 fused_coded=False)
     trace = lambda th: (float(np.abs(np.asarray(th)).sum()), 0.0)
     res_u = sim_u.run(15, eval_fn=trace, eval_every=1)
     np.testing.assert_allclose(np.asarray(res_f.theta),
@@ -256,7 +259,8 @@ def test_vectorized_subset_sampling_spec():
     xs, ys = _data(n=5, l=16, q=12, c=2)
     fl = FLConfig(n_clients=5, delta=0.3, seed=11)
     tc = TrainConfig(learning_rate=0.5)
-    sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme="coded")
+    sim = api.build_experiment(
+        ExperimentSpec(fl=fl, train=tc, scheme="coded"), xs, ys)
     # replay: the setup rng chain consumes the permuted draw first
     rng = np.random.default_rng(fl.seed + 17)
     perm = rng.permuted(np.tile(np.arange(sim.l), (sim.n, 1)), axis=1)
@@ -292,7 +296,8 @@ def test_batched_parity_matches_sequential_encode():
     xs, ys = _data(n=5, l=16, q=12, c=2)
     fl = FLConfig(n_clients=5, delta=0.3, seed=11)
     tc = TrainConfig(learning_rate=0.5)
-    sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme="coded")
+    sim = api.build_experiment(
+        ExperimentSpec(fl=fl, train=tc, scheme="coded"), xs, ys)
     # replay the legacy sequential key chain + per-client encode
     key = jax.random.PRNGKey(fl.seed + 99)
     parities = []

@@ -13,7 +13,9 @@ from repro.launch import bench as launch_bench
 
 TINY = dict(n_clients=4, l=8, q=12, c=2, iters=5, realizations=2,
             profiles={"uniform": dict(rate_decay=1.0, mac_decay=1.0),
-                      "paper": dict(rate_decay=0.95, mac_decay=0.8)})
+                      "paper": dict(rate_decay=0.95, mac_decay=0.8)},
+            scenario_kwargs=dict(n_clients=4, l=8, q=8, c=2, iters=12,
+                                 adapt_every=4))
 
 
 @pytest.fixture(scope="module")
@@ -37,11 +39,12 @@ def test_artifact_contents(artifact):
     assert loaded["benchmark"] == "fed_training_scheme_compare"
     assert loaded["schema_version"] == launch_bench.SCHEMA_VERSION
     assert set(loaded["profiles"]) == {"uniform", "paper"}
-    # schema v3: the grid is the LIVE scheme registry at run time
+    # schema v3/v4: the grid is the LIVE grid-eligible registry at run
+    # time (adaptive schemes live in the scenarios section instead)
     grid = loaded["config"]["schemes"]
-    assert tuple(grid) == schemes_registry.registered_names()
+    assert tuple(grid) == schemes_registry.grid_names()
     assert set(loaded["config"]["coded_schemes"]) == \
-        set(schemes_registry.coded_names())
+        set(schemes_registry.coded_names()) & set(grid)
     for prof in loaded["profiles"].values():
         schemes = prof["schemes"]
         assert set(schemes) == set(grid)
@@ -61,6 +64,13 @@ def test_artifact_contents(artifact):
             assert schemes[s]["total_load"] > 0
         assert schemes["partial_coded"]["privacy_eps_max_bits"] <= \
             schemes["coded"]["privacy_eps_max_bits"]
+    # schema v4: the static-vs-adaptive drift comparison rides along
+    scen = loaded["scenarios"]
+    assert set(scen["cases"]) == {"speedup_drift", "degrade_drift"}
+    for case in scen["cases"].values():
+        assert case["adaptive_speedup"] > 0
+        assert case["static"]["time_to_target"] > 0
+        assert case["adaptive"]["time_to_target"] > 0
 
 
 def test_newly_registered_scheme_lands_in_artifact(tmp_path):
@@ -107,6 +117,12 @@ def test_ideal_round_time_is_naive_lower_bound(artifact):
         "privacy_eps_max_bits"), "privacy_eps_max_bits"),
     (lambda d: d["profiles"]["paper"]["schemes"]["partial_coded"].update(
         t_star=None), "t_star"),
+    (lambda d: d.pop("scenarios"), "scenarios"),
+    (lambda d: d["scenarios"].pop("cases"), "cases"),
+    (lambda d: d["scenarios"]["cases"]["degrade_drift"].update(
+        adaptive_speedup=-2.0), "adaptive_speedup"),
+    (lambda d: d["scenarios"]["cases"]["speedup_drift"]["static"].update(
+        time_to_target=float("nan")), "time_to_target"),
 ])
 def test_validator_rejects_malformed(artifact, mutate, frag):
     result, _ = artifact

@@ -1,8 +1,8 @@
 """FL runtime mechanics (scheme semantics, determinism, logging)."""
 import numpy as np
 
-from repro.config import FLConfig, TrainConfig
-from repro.core import fed_runtime
+from repro import api
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
 
 
 def _sim(scheme, n=6, l=20, q=32, c=3, **fl_kw):
@@ -11,7 +11,8 @@ def _sim(scheme, n=6, l=20, q=32, c=3, **fl_kw):
     ys = rng.normal(size=(n, l, c)).astype(np.float32)
     fl = FLConfig(n_clients=n, **fl_kw)
     tc = TrainConfig(learning_rate=0.5, l2_reg=0.0)
-    return fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme=scheme)
+    return api.build_experiment(
+        ExperimentSpec(fl=fl, train=tc, scheme=scheme), xs, ys)
 
 
 def test_naive_waits_for_all():
@@ -55,17 +56,29 @@ def test_theta_updates():
 
 
 def test_secure_aggregation_identical_parity():
-    """Secure-aggregated runtime builds the same global parity set."""
+    """The spec's secure_aggregation flag routes parity uploads through
+    mask_parity/secure_aggregate, and the masked aggregate equals the
+    plain parity sum (pairwise masks cancel exactly in the sum)."""
     rng = np.random.default_rng(0)
     xs = rng.normal(size=(6, 20, 32)).astype(np.float32) * 0.2
     ys = rng.normal(size=(6, 20, 3)).astype(np.float32)
     fl = FLConfig(n_clients=6, delta=0.2)
     tc = TrainConfig(learning_rate=0.5, l2_reg=0.0)
-    plain = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme="coded")
-    secure = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme="coded",
-                                             secure_aggregation=True)
+    plain = api.build_experiment(
+        ExperimentSpec(fl=fl, train=tc, scheme="coded"), xs, ys)
+    secure = api.build_experiment(
+        ExperimentSpec(fl=fl, train=tc, scheme="coded",
+                       secure_aggregation=True), xs, ys)
+    assert secure.secure_aggregation and not plain.secure_aggregation
     np.testing.assert_allclose(np.asarray(plain.parity.x),
                                np.asarray(secure.parity.x), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(plain.parity.y),
+                               np.asarray(secure.parity.y), atol=1e-3)
+    # identical parity + identical delay stream => identical trajectories
+    res_p = plain.run(5)
+    res_s = secure.run(5)
+    np.testing.assert_allclose(np.asarray(res_p.theta),
+                               np.asarray(res_s.theta), atol=1e-4)
 
 
 def test_loss_decreases_naive():
@@ -76,7 +89,8 @@ def test_loss_decreases_naive():
     ys = np.einsum("nlq,qc->nlc", xs, theta_true)
     fl = FLConfig(n_clients=n)
     tc = TrainConfig(learning_rate=2.0, l2_reg=0.0)
-    sim = fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme="naive")
+    sim = api.build_experiment(
+        ExperimentSpec(fl=fl, train=tc, scheme="naive"), xs, ys)
 
     def eval_fn(theta):
         pred = np.einsum("nlq,qc->nlc", xs, np.asarray(theta))

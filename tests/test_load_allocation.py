@@ -209,11 +209,36 @@ class TestVectorizedSolver:
             la.two_step_allocate_vectorized(clients, [10.0], None,
                                             u_max=1.0, m=100.0)
 
-    def test_asymmetric_links_rejected(self):
-        nd = NodeDelayParams(mu=5.0, alpha=2.0, tau=0.05, p=0.1,
-                             tau_up=0.1)
-        with pytest.raises(ValueError, match="symmetric"):
-            la.two_step_allocate_vectorized([nd], [10.0], None,
-                                            u_max=5.0, m=8.0)
-        with pytest.raises(ValueError, match="symmetric"):
-            la.vectorized_optimal_loads([nd], 1.0, [10.0])
+    def test_asymmetric_step1_matches_scalar(self):
+        """tau_up/p_up links flow through the flattened per-direction
+        transmission grid: node-for-node agreement with the scalar
+        golden-section oracle (footnote 1 generalization)."""
+        rng = np.random.default_rng(17)
+        clients = [NodeDelayParams(
+            mu=float(rng.uniform(1, 10)), alpha=float(rng.uniform(0.5, 4)),
+            tau=float(rng.uniform(0.01, 0.2)), p=float(rng.uniform(0, 0.3)),
+            tau_up=float(rng.uniform(0.05, 0.5)),
+            p_up=float(rng.uniform(0, 0.4))) for _ in range(8)]
+        caps = [30.0] * 8
+        for t in (0.8, 3.0, 9.0):
+            lv, rv = la.vectorized_optimal_loads(clients, t, caps)
+            for j, nd in enumerate(clients):
+                l_s, r_s = la.optimal_load(nd, t, caps[j])
+                assert abs(lv[j] - l_s) < 1e-5 * (1.0 + caps[j]), (t, j)
+                assert abs(rv[j] - r_s) < 1e-5 * (1.0 + r_s), (t, j)
+
+    def test_asymmetric_two_step_matches_scalar(self):
+        rng = np.random.default_rng(23)
+        clients = [NodeDelayParams(
+            mu=float(rng.uniform(1, 10)), alpha=2.0,
+            tau=float(rng.uniform(0.01, 0.2)), p=0.1,
+            tau_up=float(rng.uniform(0.1, 0.5)), p_up=0.3)
+            for _ in range(6)]
+        m = 6 * 30.0
+        a_s = la.two_step_allocate(clients, [30.0] * 6, None, 0.2 * m, m)
+        a_v = la.two_step_allocate_vectorized(clients, [30.0] * 6, None,
+                                              0.2 * m, m)
+        assert abs(a_v.t_star - a_s.t_star) <= 2e-6 * (1.0 + a_s.t_star)
+        np.testing.assert_allclose(a_v.loads, a_s.loads,
+                                   atol=1e-3, rtol=1e-3)
+        assert abs(a_v.total_return - m) < 1e-2 * m

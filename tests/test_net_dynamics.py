@@ -1,0 +1,272 @@
+"""Network-dynamics subsystem: channel profiles, traces, estimation.
+
+Pins the two contracts the engine integration rests on — per-seed trace
+determinism and static-profile bit-exactness with the stationary sampler
+— plus the channel models' own semantics (Gilbert–Elliott occupancy, MCS
+monotonicity, churn transitions) and the online estimator's convergence
+to the true network parameters.
+"""
+import numpy as np
+import pytest
+
+from repro.core.delay_model import NodeDelayParams, sample_round_times
+from repro.net import channel as channel_mod
+from repro.net.channel import CHANNEL_PROFILES, ChannelProfile
+from repro.net.estimator import OnlineChannelEstimator
+from repro.net.trace import (generate_trace, sample_round_observations,
+                             sample_round_times_traced)
+
+
+def _nodes(n=5, seed=0, asym=False):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        kw = {}
+        if asym:
+            kw = dict(tau_up=float(rng.uniform(0.05, 0.4)),
+                      p_up=float(rng.uniform(0.0, 0.4)))
+        out.append(NodeDelayParams(
+            mu=float(rng.uniform(2, 10)), alpha=float(rng.uniform(1, 3)),
+            tau=float(rng.uniform(0.02, 0.2)),
+            p=float(rng.uniform(0.0, 0.4)), **kw))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ChannelProfile / registry
+# ---------------------------------------------------------------------------
+
+def test_profile_registry_contains_static_and_drifts():
+    assert "static" in CHANNEL_PROFILES
+    assert CHANNEL_PROFILES["static"].is_static
+    for name in ("markov_loss", "slow_fade", "speedup_drift",
+                 "degrade_drift", "churn", "drift_churn"):
+        assert name in CHANNEL_PROFILES
+        assert not CHANNEL_PROFILES[name].is_static, name
+
+
+def test_profile_validation_errors():
+    with pytest.raises(ValueError, match="ge_p_gb"):
+        ChannelProfile(ge_p_gb=1.5)
+    with pytest.raises(ValueError, match="shadow_sigma_db"):
+        ChannelProfile(shadow_sigma_db=-1.0)
+    with pytest.raises(ValueError, match="mu_min"):
+        ChannelProfile(mu_min=2.0)
+    with pytest.raises(ValueError, match="mu_drift_rate"):
+        ChannelProfile(mu_drift_rate=-1.0)
+    with pytest.raises(ValueError, match="p_cap"):
+        ChannelProfile(p_cap=1.0)
+    with pytest.raises(ValueError, match="dropout_prob"):
+        ChannelProfile(dropout_prob=-0.1)
+
+
+def test_mcs_mapping_monotone_and_clamped():
+    effs = channel_mod.mcs_efficiency(np.linspace(-20.0, 30.0, 200))
+    assert np.all(np.diff(effs) >= 0.0)
+    assert effs[0] == channel_mod.MCS_EFFICIENCY[0]     # below lowest CQI
+    assert effs[-1] == channel_mod.MCS_EFFICIENCY[-1]   # above highest
+
+
+# ---------------------------------------------------------------------------
+# Trace generation
+# ---------------------------------------------------------------------------
+
+FIELDS = ("mu_mult", "tau_mult", "p_down", "p_up", "active")
+
+
+@pytest.mark.parametrize("profile", ["static", "markov_loss", "slow_fade",
+                                     "speedup_drift", "drift_churn"])
+def test_trace_deterministic_per_seed(profile):
+    nodes = _nodes()
+    a = generate_trace(nodes, CHANNEL_PROFILES[profile], 100,
+                       np.random.default_rng(42))
+    b = generate_trace(nodes, CHANNEL_PROFILES[profile], 100,
+                       np.random.default_rng(42))
+    c = generate_trace(nodes, CHANNEL_PROFILES[profile], 100,
+                       np.random.default_rng(43))
+    for f in FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f)
+    assert any(not np.array_equal(getattr(a, f), getattr(c, f))
+               for f in FIELDS) or profile == "static"
+
+
+def test_static_trace_exactly_neutral():
+    nodes = _nodes(asym=True)
+    tr = generate_trace(nodes, CHANNEL_PROFILES["static"], 50,
+                        np.random.default_rng(0))
+    assert np.all(tr.mu_mult == 1.0)
+    assert np.all(tr.tau_mult == 1.0)
+    assert np.all(tr.active)
+    np.testing.assert_array_equal(
+        tr.p_down, np.tile([nd.p for nd in nodes], (50, 1)))
+    np.testing.assert_array_equal(
+        tr.p_up, np.tile([nd._p_up for nd in nodes], (50, 1)))
+
+
+def test_fixed_rng_layout_isolates_dynamics():
+    """Toggling one dynamic must not change another's realization at
+    equal seed (the fixed four-block draw layout)."""
+    nodes = _nodes()
+    just_churn = generate_trace(
+        nodes, ChannelProfile(dropout_prob=0.1, rejoin_prob=0.3), 80,
+        np.random.default_rng(7))
+    churn_and_fade = generate_trace(
+        nodes, ChannelProfile(dropout_prob=0.1, rejoin_prob=0.3,
+                              shadow_sigma_db=3.0), 80,
+        np.random.default_rng(7))
+    np.testing.assert_array_equal(just_churn.active, churn_and_fade.active)
+
+
+def test_gilbert_elliott_occupancy_and_clip():
+    nodes = _nodes()
+    prof = ChannelProfile(ge_p_gb=0.2, ge_p_bg=0.4, ge_bad_scale=50.0,
+                          p_cap=0.9)
+    tr = generate_trace(nodes, prof, 4000, np.random.default_rng(3))
+    base = np.array([nd.p for nd in nodes])
+    bad = tr.p_down > base[None, :] + 1e-12
+    # stationary bad-state occupancy = p_gb / (p_gb + p_bg) = 1/3
+    assert abs(bad.mean() - 0.2 / 0.6) < 0.05
+    assert tr.p_down.max() <= 0.9 + 1e-12
+
+
+def test_churn_transitions_and_round0_all_active():
+    nodes = _nodes()
+    prof = ChannelProfile(dropout_prob=0.1, rejoin_prob=0.2)
+    tr = generate_trace(nodes, prof, 5000, np.random.default_rng(5))
+    assert np.all(tr.active[0])
+    # stationary availability = rejoin / (rejoin + dropout) = 2/3
+    assert abs(tr.active.mean() - 2.0 / 3.0) < 0.05
+
+
+def test_compute_drift_bounded():
+    prof = ChannelProfile(mu_drift_sigma=0.5, mu_min=0.5, mu_max=2.0)
+    tr = generate_trace(_nodes(), prof, 500, np.random.default_rng(1))
+    assert np.all(tr.mu_mult >= 0.5 - 1e-12)
+    assert np.all(tr.mu_mult <= 2.0 + 1e-12)
+    assert np.all(tr.mu_mult[0] == 1.0)      # round 0 at nominal
+
+
+def test_tau_trend_directionality():
+    up = generate_trace(_nodes(), ChannelProfile(tau_trend_db=0.5), 40,
+                        np.random.default_rng(0))
+    down = generate_trace(_nodes(), ChannelProfile(tau_trend_db=-0.5), 40,
+                         np.random.default_rng(0))
+    assert np.all(up.tau_mult[-1] > 1.0)     # degrading: slower links
+    assert np.all(down.tau_mult[-1] < 1.0)   # improving: faster links
+
+
+# ---------------------------------------------------------------------------
+# Traced sampling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("asym", [False, True])
+def test_static_traced_sampling_bit_exact(asym):
+    """The acceptance contract: under the static profile, the traced
+    sampler is BIT-IDENTICAL to delay_model.sample_round_times for the
+    same generator state — symmetric and asymmetric links alike."""
+    nodes = _nodes(asym=asym)
+    loads = np.array([10.0, 0.0, 25.0, 7.0, 13.0])
+    tr = generate_trace(nodes, CHANNEL_PROFILES["static"], 300,
+                        np.random.default_rng(9))
+    a = sample_round_times(nodes, loads, np.random.default_rng(5),
+                           rounds=300)
+    b = sample_round_times_traced(nodes, loads, np.random.default_rng(5),
+                                  tr)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_observations_components_sum_to_total():
+    nodes = _nodes()
+    tr = generate_trace(nodes, CHANNEL_PROFILES["drift_churn"], 100,
+                        np.random.default_rng(2))
+    obs = sample_round_observations(nodes, np.full(5, 12.0),
+                                    np.random.default_rng(3), tr)
+    np.testing.assert_allclose(obs.total,
+                               obs.t_down + obs.t_up + obs.t_comp,
+                               rtol=1e-12)
+    assert np.all(obs.n_down >= 1) and np.all(obs.n_up >= 1)
+
+
+def test_traced_sampling_per_round_loads():
+    nodes = _nodes()
+    tr = generate_trace(nodes, CHANNEL_PROFILES["static"], 4,
+                        np.random.default_rng(0))
+    loads_rn = np.tile(np.array([5.0, 0.0, 8.0, 2.0, 1.0]), (4, 1))
+    loads_rn[2] = 0.0                       # a zero-load round
+    obs = sample_round_observations(nodes, loads_rn,
+                                    np.random.default_rng(1), tr)
+    assert np.all(obs.t_comp[2] == 0.0)
+    assert np.all(obs.t_comp[0, [0, 2, 3, 4]] > 0.0)
+    with pytest.raises(ValueError, match="loads shape"):
+        sample_round_observations(nodes, np.ones((3, 5)),
+                                  np.random.default_rng(1), tr)
+
+
+def test_drift_trace_shifts_delay_distribution():
+    """Degrading compute must lengthen sampled delays round over round."""
+    nodes = _nodes()
+    prof = ChannelProfile(mu_drift_rate=-0.05, mu_min=0.05)
+    tr = generate_trace(nodes, prof, 200, np.random.default_rng(4))
+    t = sample_round_times_traced(nodes, np.full(5, 20.0),
+                                  np.random.default_rng(5), tr)
+    assert t[150:].mean() > 2.0 * t[:50].mean()
+
+
+# ---------------------------------------------------------------------------
+# Online estimation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["ewma", "window"])
+def test_estimator_converges_from_wrong_priors(mode):
+    true = [NodeDelayParams(mu=4.0, alpha=2.0, tau=0.08, p=0.15)
+            for _ in range(4)]
+    tr = generate_trace(true, CHANNEL_PROFILES["static"], 2500,
+                        np.random.default_rng(1))
+    obs = sample_round_observations(true, np.full(4, 20.0),
+                                    np.random.default_rng(2), tr)
+    prior = [NodeDelayParams(mu=1.0, alpha=2.0, tau=0.4, p=0.5)
+             for _ in range(4)]
+    kw = {"beta": 0.02} if mode == "ewma" else {"window": 2500}
+    est = OnlineChannelEstimator(prior, **kw)
+    est.update(obs)
+    np.testing.assert_allclose(est.mu_hat, 4.0, rtol=0.15)
+    np.testing.assert_allclose(est.tau_hat, 0.08, rtol=0.05)
+    np.testing.assert_allclose(est.p_hat, 0.15, atol=0.04)
+    np.testing.assert_allclose(est.avail_hat, 1.0, atol=1e-9)
+    nodes = est.estimated_nodes()
+    assert all(isinstance(nd, NodeDelayParams) for nd in nodes)
+
+
+def test_estimator_warm_starts_at_nominal():
+    nodes = _nodes(asym=True)
+    est = OnlineChannelEstimator(nodes)
+    for j, nd in enumerate(nodes):
+        assert est.mu_hat[j] == pytest.approx(nd.mu)
+        assert est.tau_hat[j] == pytest.approx((nd.tau + nd._tau_up) / 2)
+        assert est.p_hat[j] == pytest.approx((nd.p + nd._p_up) / 2)
+
+
+def test_estimator_churned_rounds_only_move_availability():
+    true = [NodeDelayParams(mu=4.0, alpha=2.0, tau=0.08, p=0.1)
+            for _ in range(3)]
+    tr = generate_trace(true, CHANNEL_PROFILES["static"], 50,
+                        np.random.default_rng(1))
+    obs = sample_round_observations(true, np.full(3, 10.0),
+                                    np.random.default_rng(2), tr)
+    obs.active[:, 0] = False                 # node 0 never reports
+    est = OnlineChannelEstimator(true, beta=0.2)
+    mu0, tau0, p0 = est.mu_hat[0], est.tau_hat[0], est.p_hat[0]
+    est.update(obs)
+    assert est.mu_hat[0] == mu0 and est.tau_hat[0] == tau0
+    assert est.p_hat[0] == p0
+    assert est.avail_hat[0] < 0.01
+    assert est.avail_hat[1] == pytest.approx(1.0)
+
+
+def test_estimator_validation():
+    nodes = _nodes()
+    with pytest.raises(ValueError, match="beta"):
+        OnlineChannelEstimator(nodes, beta=0.0)
+    with pytest.raises(ValueError, match="window"):
+        OnlineChannelEstimator(nodes, window=0)

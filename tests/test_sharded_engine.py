@@ -15,8 +15,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.config import FLConfig, TrainConfig
-from repro.core import fed_runtime
+from repro import api
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
 from repro.launch.mesh import make_client_mesh
 
 pytestmark = pytest.mark.multidevice
@@ -31,11 +31,13 @@ def _data(n=8, l=24, q=32, c=3, seed=0):
     return xs, ys
 
 
-def _sim(xs, ys, scheme, **kw):
+def _sim(xs, ys, scheme, mesh=None, **spec_kw):
     fl = FLConfig(n_clients=xs.shape[0], delta=0.25, psi=0.3, seed=3)
     tc = TrainConfig(learning_rate=0.5, l2_reg=1e-4, lr_decay_epochs=(10, 18))
-    return fed_runtime.FederatedSimulation(xs, ys, fl, tc, scheme=scheme,
-                                           **kw)
+    spec = ExperimentSpec(fl=fl, train=tc, scheme=scheme, **spec_kw)
+    # mesh goes through the build_experiment override so tests can pass a
+    # concrete Mesh object (not spec-serializable) as well as a count
+    return api.build_experiment(spec, xs, ys, mesh=mesh)
 
 
 def _skip_unless(ndev):

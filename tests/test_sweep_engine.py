@@ -10,8 +10,8 @@ validity mask).
 import numpy as np
 import pytest
 
-from repro.config import FLConfig, TrainConfig
-from repro.core import fed_runtime
+from repro import api
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
 from repro.launch import sweep as sweep_mod
 
 # grouped with the sharded-engine suite in the `multidevice` CI job (the
@@ -38,6 +38,13 @@ def _tc():
     return TrainConfig(learning_rate=0.5, l2_reg=1e-5, lr_decay_epochs=(5,))
 
 
+def _exp(xs, ys, scheme, knobs):
+    """Spec-built deployment matching one sweep grid cell."""
+    spec = ExperimentSpec(fl=FLConfig(**{**BASE, **knobs}), train=_tc(),
+                          scheme=scheme)
+    return api.build_experiment(spec, xs, ys)
+
+
 @pytest.fixture(scope="module")
 def sweep_result():
     xs, ys = _data()
@@ -52,10 +59,7 @@ def test_sweep_matches_looped_run_multi(sweep_result, scheme):
     standalone run_multi — wall-clock, return counts, and final iterates."""
     xs, ys, sw = sweep_result
     for pname, knobs in PROFILES.items():
-        fl = FLConfig(**{**BASE, **knobs})
-        sim = fed_runtime.FederatedSimulation(xs, ys, fl, _tc(),
-                                              scheme=scheme)
-        loop = sim.run_multi(10, 4)
+        loop = _exp(xs, ys, scheme, knobs).run_multi(10, 4)
         got = sw.results[scheme][pname]
         np.testing.assert_allclose(got.wall_clock, loop.wall_clock,
                                    rtol=1e-6)
@@ -86,9 +90,7 @@ def test_sweep_accepts_prebuilt_sims():
     xs, ys = _data()
     sims = {"coded": {}}
     for pname, knobs in PROFILES.items():
-        fl = FLConfig(**{**BASE, **knobs})
-        sims["coded"][pname] = fed_runtime.FederatedSimulation(
-            xs, ys, fl, _tc(), scheme="coded")
+        sims["coded"][pname] = _exp(xs, ys, "coded", knobs)
     sw = sweep_mod.run_sweep(xs, ys, profiles=PROFILES, train_cfg=_tc(),
                              iterations=6, realizations=2,
                              schemes=("coded",), fl_kwargs=BASE, sims=sims)
@@ -108,9 +110,7 @@ def test_sweep_pads_coded_profiles_to_common_length():
         sim = sw.sims["coded"][pname]
         lens.add(sim.build_consts()["gx"].shape[1])
         got = sw.results["coded"][pname]
-        fl = FLConfig(**{**BASE, **PROFILES[pname]})
-        loop = fed_runtime.FederatedSimulation(
-            xs, ys, fl, _tc(), scheme="coded").run_multi(6, 2)
+        loop = _exp(xs, ys, "coded", PROFILES[pname]).run_multi(6, 2)
         np.testing.assert_allclose(np.asarray(got.theta),
                                    np.asarray(loop.theta), atol=1e-5)
     # the deployments genuinely differ in allocated loads across this grid
@@ -120,9 +120,8 @@ def test_sweep_pads_coded_profiles_to_common_length():
 def test_sweep_rejects_sims_profile_mismatch():
     """Prebuilt sims must cover exactly the sweep's profile grid."""
     xs, ys = _data()
-    fl = FLConfig(**{**BASE, **PROFILES["paper"]})
-    partial = {"coded": {"paper": fed_runtime.FederatedSimulation(
-        xs, ys, fl, _tc(), scheme="coded")}}
+    partial = {"coded": {"paper": _exp(xs, ys, "coded",
+                                       PROFILES["paper"])}}
     with pytest.raises(ValueError, match="cover profiles"):
         sweep_mod.run_sweep(xs, ys, profiles=PROFILES, train_cfg=_tc(),
                             iterations=3, realizations=2,
@@ -145,7 +144,6 @@ def test_run_multi_eval_vmapped_matches_loop():
     traceable; non-traceable eval_fns fall back to the loop — both agree."""
     import jax.numpy as jnp
     xs, ys = _data()
-    fl = FLConfig(**BASE)
 
     def traceable(th):
         return jnp.mean(th ** 2), jnp.sum(jnp.abs(th))
@@ -154,11 +152,7 @@ def test_run_multi_eval_vmapped_matches_loop():
         arr = np.asarray(th)          # numpy forces the fallback path
         return float((arr ** 2).mean()), float(np.abs(arr).sum())
 
-    res_t = fed_runtime.FederatedSimulation(
-        xs, ys, fl, _tc(), scheme="coded").run_multi(6, 3,
-                                                     eval_fn=traceable)
-    res_h = fed_runtime.FederatedSimulation(
-        xs, ys, fl, _tc(), scheme="coded").run_multi(6, 3,
-                                                     eval_fn=host_only)
+    res_t = _exp(xs, ys, "coded", {}).run_multi(6, 3, eval_fn=traceable)
+    res_h = _exp(xs, ys, "coded", {}).run_multi(6, 3, eval_fn=host_only)
     assert res_t.accuracy is not None and res_t.accuracy.shape == (3,)
     np.testing.assert_allclose(res_t.accuracy, res_h.accuracy, rtol=1e-6)

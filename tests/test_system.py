@@ -3,8 +3,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import FLConfig, RFFConfig, TrainConfig
-from repro.core import fed_runtime, rff
+from repro import api
+from repro.config import ExperimentSpec, FLConfig, RFFConfig, TrainConfig
+from repro.core import rff
 from repro.core.delay_model import mec_network
 from repro.data import sharding, synthetic
 
@@ -34,8 +35,9 @@ def setup():
 
     results = {}
     for scheme in ("naive", "greedy", "coded"):
-        sim = fed_runtime.FederatedSimulation(xs, ys, fl, tcfg,
-                                              scheme=scheme)
+        sim = api.build_experiment(
+            ExperimentSpec(fl=fl, train=tcfg, rff=rcfg, scheme=scheme),
+            xs, ys)
         results[scheme] = sim.run(120, eval_fn=eval_fn, eval_every=119)
     return results
 
