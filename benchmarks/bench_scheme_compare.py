@@ -19,17 +19,22 @@ import sys
 from repro.launch import bench as launch_bench
 
 # (n_clients, l, q, c, iters, realizations) for the profile grid, plus
-# the drift-scenario (static vs adaptive) comparison's own sizes
+# the drift-scenario (static vs adaptive) comparison's and the RunState
+# service benchmark's own sizes
 _SCALES = {
     "smoke": dict(n_clients=5, l=12, q=16, c=3, iters=8, realizations=3,
                   scenario_kwargs=dict(n_clients=6, l=16, q=16, c=3,
-                                       iters=50, adapt_every=5)),
+                                       iters=50, adapt_every=5),
+                  service_kwargs=dict(n_clients=6, l=16, q=16, c=3,
+                                      iters=24, block=6)),
     "default": dict(n_clients=12, l=32, q=64, c=5, iters=40,
-                    realizations=6, scenario_kwargs=None),
+                    realizations=6, scenario_kwargs=None,
+                    service_kwargs=None),
     "full": dict(n_clients=30, l=100, q=256, c=10, iters=150,
                  realizations=8,
                  scenario_kwargs=dict(n_clients=20, l=48, q=64, c=5,
-                                      iters=120, adapt_every=8)),
+                                      iters=120, adapt_every=8),
+                 service_kwargs=None),
 }
 
 
@@ -62,6 +67,14 @@ def run(out_path: str = launch_bench.ARTIFACT_NAME, scale: str = "default",
                    f"speedup={sweep['speedup']:.2f}x"
                    if sweep.get("speedup") else "loop=unmeasured")
         rows.append(("fed_sweep_grid", sweep["host_seconds"] * 1e6, derived))
+    service = result.get("service")
+    if service:
+        rows.append((
+            "fed_service_block_overhead",
+            service["blocked_seconds"] * 1e6,
+            f"oneshot={service['oneshot_seconds']:.3f}s;"
+            f"ratio={service['overhead_ratio']:.3f};"
+            f"resumed_ok={service['resumed_bit_identical']}"))
     for name, case in result.get("scenarios", {}).get("cases", {}).items():
         rows.append((
             f"fed_scenario_{name}", case["host_seconds"] * 1e6,

@@ -1,0 +1,138 @@
+"""Kill/resume smoke: SIGKILL a checkpointing run mid-flight, resume it,
+and require bit-equality with the uninterrupted control run.
+
+Driver mode (default) runs the control in-process, spawns this same file
+in ``--child`` mode (a block-structured run that checkpoints every block
+and sleeps between blocks to widen the kill window), SIGKILLs the child
+once at least two checkpoints are on disk, resumes from the latest one,
+and asserts the final model / wall-clock log / returned counts match the
+control exactly.  Exit code 0 = bit-identical; anything else fails CI.
+
+    PYTHONPATH=src python benchmarks/resume_smoke.py --ckpt-dir /tmp/ck
+"""
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+ITERATIONS = 24
+BLOCK = 4           # checkpoint_every
+KILL_AFTER = 8      # SIGKILL once >= this many rounds are checkpointed
+
+
+def build():
+    """One deterministic deployment shared by control, child, and resume."""
+    from repro.api import build_experiment
+    from repro.config import ExperimentSpec, FLConfig, TrainConfig
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(6, 16, 24)).astype(np.float32) * 0.2
+    ys = rng.normal(size=(6, 16, 3)).astype(np.float32)
+    spec = ExperimentSpec(
+        fl=FLConfig(n_clients=6, delta=0.25, psi=0.3, seed=3),
+        train=TrainConfig(learning_rate=0.5, l2_reg=1e-5,
+                          lr_decay_epochs=(5,)),
+        scheme="adaptive_coded", channel_profile="drift_churn",
+        adapt_every=2, checkpoint_every=BLOCK, run_id="resume-smoke")
+    return build_experiment(spec, xs, ys)
+
+
+def child(ckpt_dir: str) -> None:
+    """Checkpoint every block, sleeping in between so the driver can
+    SIGKILL between (not during) block computations."""
+    from repro.checkpoint import io as ckpt_io
+    exp = build()
+    state = exp.init_state(ITERATIONS)
+    while not state.done:
+        state = exp.run_block(state)
+        exp.save_state(
+            os.path.join(ckpt_dir,
+                         f"{ckpt_io.CKPT_PREFIX}{state.rounds_done:06d}.npz"),
+            state)
+        time.sleep(0.5)
+
+
+def driver(ckpt_dir: str, out: str) -> int:
+    from repro.checkpoint import io as ckpt_io
+    os.makedirs(ckpt_dir, exist_ok=True)
+
+    control = build().run(ITERATIONS)
+
+    proc = subprocess.Popen(
+        [sys.executable, os.path.abspath(__file__),
+         "--child", "--ckpt-dir", ckpt_dir],
+        env=dict(os.environ))
+    deadline = time.time() + 300
+    killed_at = None
+    try:
+        while time.time() < deadline:
+            latest = ckpt_io.latest_checkpoint(ckpt_dir)
+            if latest is not None:
+                rounds = int(os.path.basename(latest)
+                             [len(ckpt_io.CKPT_PREFIX):-len(".npz")])
+                if rounds >= KILL_AFTER:
+                    killed_at = rounds
+                    break
+            if proc.poll() is not None:
+                print(f"FAIL: child exited early (rc={proc.returncode}) "
+                      "before reaching the kill point", file=sys.stderr)
+                return 2
+            time.sleep(0.05)
+    finally:
+        if proc.poll() is None:
+            proc.send_signal(signal.SIGKILL)
+            proc.wait()
+    if killed_at is None:
+        print("FAIL: no checkpoint appeared within the deadline",
+              file=sys.stderr)
+        return 2
+    assert killed_at < ITERATIONS, "child finished before the kill"
+
+    resumed = build().run(ITERATIONS, checkpoint_dir=ckpt_dir, resume=True)
+
+    theta_ok = bool(np.array_equal(np.asarray(control.theta),
+                                   np.asarray(resumed.theta)))
+    wall_ok = [h.wall_clock for h in control.history] \
+        == [h.wall_clock for h in resumed.history]
+    ret_ok = [h.returned for h in control.history] \
+        == [h.returned for h in resumed.history]
+    eps_ok = control.privacy_eps == resumed.privacy_eps
+    ok = theta_ok and wall_ok and ret_ok and eps_ok
+
+    report = {
+        "iterations": ITERATIONS, "checkpoint_every": BLOCK,
+        "killed_at_round": killed_at, "theta_bit_identical": theta_ok,
+        "wall_clock_identical": wall_ok, "returned_identical": ret_ok,
+        "privacy_eps_identical": eps_ok, "ok": ok,
+    }
+    if out:
+        with open(out, "w") as fh:
+            json.dump(report, fh, indent=2)
+    print(json.dumps(report, indent=2))
+    if not ok:
+        print("FAIL: resumed run diverged from control", file=sys.stderr)
+        return 1
+    print(f"OK: SIGKILL at round {killed_at}, resumed bit-identically")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--child", action="store_true",
+                    help="run the killable checkpointing loop")
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--out", default="",
+                    help="optional JSON report path (driver mode)")
+    args = ap.parse_args()
+    if args.child:
+        child(args.ckpt_dir)
+        return 0
+    return driver(args.ckpt_dir, args.out)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,8 +5,11 @@ MEC network) and runs every registered straggler-mitigation scheme through
 the declarative experiment API: one frozen `ExperimentSpec` per scheme,
 `repro.api.build_experiment(spec, xs, ys)` for the runnable deployment.
 Prints the headline comparison (per-iteration accuracy parity + wall-clock
-speedup), then finishes with a multi-realization run (8 independent delay
-draws, one vmapped call) showing the wall-clock confidence band.
+speedup), demonstrates the kill/resume round-trip of the block-structured
+runtime (save a RunState checkpoint mid-run, rebuild the experiment from
+scratch, resume — bit-identical result), then finishes with a
+multi-realization run (8 independent delay draws, one vmapped call)
+showing the wall-clock confidence band.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -65,7 +68,28 @@ def main():
         print(f"{scheme:14s} {h.accuracy:9.3f} {h.wall_clock:9.0f}s "
               f"{speed:>6s} {t_star:>9s} {eps:>10s}")
 
-    # 4. confidence bands: 8 independent delay realizations, one vmapped call
+    # 4. kill/resume round-trip: checkpoint_every=25 makes the run a chain
+    # of 4 blocks, each saving a RunState checkpoint; we "kill" after one
+    # block and resume in a FRESH experiment — the final model is
+    # bit-identical to the uninterrupted run
+    import tempfile
+    ckpt_spec = dataclasses.replace(base_spec, scheme="coded",
+                                    checkpoint_every=25)
+    control = build_experiment(ckpt_spec, xs, ys).run(100)
+    ckpt_dir = tempfile.mkdtemp(prefix="quickstart_ckpt_")
+    interrupted = build_experiment(ckpt_spec, xs, ys)
+    state = interrupted.run_block(interrupted.init_state(100))  # 25 rounds
+    interrupted.save_state(f"{ckpt_dir}/ckpt_{state.rounds_done:06d}.npz",
+                           state)
+    del interrupted, state                                      # the kill
+    resumed = build_experiment(ckpt_spec, xs, ys).run(
+        100, checkpoint_dir=ckpt_dir, resume=True)
+    identical = bool(np.array_equal(np.asarray(control.theta),
+                                    np.asarray(resumed.theta)))
+    print(f"\nkill at round 25 -> resume from {ckpt_dir}: "
+          f"bit-identical = {identical}")
+
+    # 5. confidence bands: 8 independent delay realizations, one vmapped call
     print("\nwall-clock over 8 delay realizations (mean ± std, final round):")
     for scheme in ("naive", "coded"):
         exp = build_experiment(dataclasses.replace(base_spec, scheme=scheme),

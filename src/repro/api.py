@@ -37,16 +37,27 @@ from repro.config import ExperimentSpec
 from repro.core import schemes
 from repro.core.fed_runtime import (Experiment, FedResult,  # noqa: F401
                                     MultiFedResult)
+from repro.core.run_state import RunState  # noqa: F401
 from repro.core.schemes import (Scheme, get_scheme, grid_names,  # noqa: F401
                                 register, registered_names)
 from repro.net.channel import (CHANNEL_PROFILES,  # noqa: F401
                                ChannelProfile)
 
 __all__ = [
-    "ExperimentSpec", "Experiment", "FedResult", "MultiFedResult",
-    "Scheme", "build_experiment", "get_scheme", "grid_names", "register",
-    "registered_names", "CHANNEL_PROFILES", "ChannelProfile",
+    "ExperimentSpec", "Experiment", "ExperimentService", "FedResult",
+    "MultiFedResult", "RunState", "Scheme", "build_experiment",
+    "get_scheme", "grid_names", "register", "registered_names",
+    "CHANNEL_PROFILES", "ChannelProfile",
 ]
+
+
+def __getattr__(name):
+    # lazy: launch.service imports build_experiment from here, so a
+    # top-level import would be circular
+    if name == "ExperimentService":
+        from repro.launch.service import ExperimentService
+        return ExperimentService
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def build_experiment(spec: "ExperimentSpec | dict", x_stack, y_stack, *,

@@ -1,16 +1,41 @@
-"""Checkpointing: flat .npz snapshots of arbitrary param pytrees.
+"""Checkpointing: flat .npz snapshots of param pytrees and run state.
 
 Shard-aware in the sense that leaves are gathered to host before writing
 (fine at the model sizes this container trains) and restored with the same
 treedef; keys encode the tree path.
+
+Two payload families share the format:
+
+  * `save`/`restore` — pure param pytrees (arrays only), keyed by tree
+    path.  `restore` validates against a `like_tree`: a shape mismatch or
+    a file key absent from the reference tree is a `ValueError`, never a
+    silent drop.
+  * `save_state`/`restore_state` — mixed payloads for the resumable
+    runtime (`repro.core.run_state.RunState`): named arrays plus one JSON
+    metadata blob under the reserved ``__meta__`` key (RNG bit-generator
+    states, cursors, and the originating `ExperimentSpec` for
+    provenance).
+
+Keys starting with ``__`` are reserved for format metadata (``__step__``,
+``__meta__``) and never validated against user trees.
+
+Writes are atomic (tmp file + ``os.replace``), so a run killed mid-save
+leaves the previous checkpoint intact — `latest_checkpoint` then resumes
+from the newest complete snapshot.
 """
 from __future__ import annotations
 
+import json
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: key prefix reserved for format metadata, exempt from like_tree checks
+RESERVED_PREFIX = "__"
+#: filename prefix the runtime uses for block-boundary snapshots
+CKPT_PREFIX = "ckpt_"
 
 
 def _flatten(tree):
@@ -26,25 +51,49 @@ def _flatten(tree):
     return out
 
 
-def save(path: str, tree, step: int | None = None):
-    flat = _flatten(tree)
-    if step is not None:
-        flat["__step__"] = np.asarray(step)
+def _atomic_savez(path: str, flat: dict) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     tmp = path + ".tmp"
     np.savez(tmp, **flat)
     os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
 
 
+def save(path: str, tree, step: int | None = None):
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    _atomic_savez(path, flat)
+
+
 def restore(path: str, like_tree):
-    """Restore into the structure of `like_tree` (shapes must match)."""
-    data = np.load(path)
+    """Restore into the structure of `like_tree`.
+
+    Every non-reserved key in the file must exist in `like_tree` and every
+    reference leaf must exist in the file with a matching shape — any
+    divergence raises `ValueError` naming the offending key (a checkpoint
+    from a different run shape should fail loudly, not load partially).
+    """
     flat_like = _flatten(like_tree)
     restored = {}
-    for key, ref in flat_like.items():
-        arr = data[key]
-        assert arr.shape == ref.shape, (key, arr.shape, ref.shape)
-        restored[key] = arr
+    with np.load(path) as data:
+        extra = sorted(k for k in data.files
+                       if not k.startswith(RESERVED_PREFIX)
+                       and k not in flat_like)
+        if extra:
+            raise ValueError(
+                f"checkpoint {path!r} holds key(s) {extra} absent from "
+                f"like_tree — refusing to silently drop them")
+        for key, ref in flat_like.items():
+            if key not in data.files:
+                raise ValueError(
+                    f"checkpoint {path!r} is missing key {key!r} "
+                    f"required by like_tree")
+            arr = data[key]
+            if arr.shape != ref.shape:
+                raise ValueError(
+                    f"checkpoint key {key!r}: stored shape {arr.shape} "
+                    f"does not match like_tree shape {ref.shape}")
+            restored[key] = arr
     leaves_paths = jax.tree_util.tree_flatten_with_path(like_tree)
     paths_leaves = [("/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                               for k in p), leaf)
@@ -55,5 +104,63 @@ def restore(path: str, like_tree):
 
 
 def restore_step(path: str) -> int | None:
-    data = np.load(path)
-    return int(data["__step__"]) if "__step__" in data else None
+    with np.load(path) as data:
+        return int(data["__step__"]) if "__step__" in data.files else None
+
+
+# ---------------------------------------------------------------------------
+# Run-state payloads: named arrays + one JSON metadata blob
+# ---------------------------------------------------------------------------
+
+def save_state(path: str, arrays: dict, meta: dict) -> str:
+    """Atomically write a mixed arrays + JSON-metadata snapshot.
+
+    `arrays` maps names to array-likes (names must not use the reserved
+    ``__`` prefix); `meta` is any JSON-serializable dict — RNG
+    bit-generator states round-trip because PCG64 state words are plain
+    (big) Python ints, which JSON handles exactly.
+    """
+    bad = sorted(k for k in arrays if k.startswith(RESERVED_PREFIX))
+    if bad:
+        raise ValueError(f"array key(s) {bad} use the reserved "
+                         f"{RESERVED_PREFIX!r} prefix")
+    flat = {k: np.asarray(v) for k, v in arrays.items()}
+    flat["__meta__"] = np.asarray(json.dumps(meta))
+    _atomic_savez(path, flat)
+    return path
+
+
+def restore_state(path: str) -> tuple[dict, dict]:
+    """Load a `save_state` snapshot -> (arrays, meta)."""
+    with np.load(path) as data:
+        if "__meta__" not in data.files:
+            raise ValueError(
+                f"{path!r} is not a run-state checkpoint (no __meta__ "
+                "payload; param-tree snapshots restore via `restore`)")
+        meta = json.loads(str(data["__meta__"][()]))
+        arrays = {k: data[k] for k in data.files
+                  if not k.startswith(RESERVED_PREFIX)}
+    return arrays, meta
+
+
+def latest_checkpoint(directory: str,
+                      prefix: str = CKPT_PREFIX) -> str | None:
+    """Newest ``<prefix><number>.npz`` in `directory`, or None.
+
+    "Newest" orders by the numeric suffix (the rounds-done cursor the
+    runtime embeds in the filename), not by mtime, so a clock-skewed
+    filesystem cannot resume from a stale block.
+    """
+    if not os.path.isdir(directory):
+        return None
+    best, best_key = None, None
+    for name in os.listdir(directory):
+        if not (name.startswith(prefix) and name.endswith(".npz")):
+            continue
+        try:
+            key = int(name[len(prefix):-len(".npz")])
+        except ValueError:
+            continue
+        if best_key is None or key > best_key:
+            best, best_key = name, key
+    return None if best is None else os.path.join(directory, best)

@@ -209,6 +209,14 @@ class ExperimentSpec:
     stationary engine bit-exactly.  ``adapt_every`` is the adaptive
     schemes' re-allocation period in rounds (0 = required only by
     adaptive schemes, which reject it).
+
+    ``checkpoint_every`` makes the run block-structured: the round loop
+    executes in blocks of that many rounds, each a resume point where the
+    full ``RunState`` can be serialized (0 = one block for the whole
+    horizon).  For adaptive schemes it must be a multiple of
+    ``adapt_every`` (checked at build time) so re-allocation boundaries
+    align with blocks.  ``run_id`` optionally names the run for the
+    ``ExperimentService`` checkpoint layout.
     """
     fl: FLConfig = FLConfig()
     train: TrainConfig = TrainConfig()
@@ -226,6 +234,12 @@ class ExperimentSpec:
     fused_coded: bool = True
     secure_aggregation: bool = False
     steps_per_epoch: int = 1
+    # resumable runtime: rounds per block between checkpoints (0 = run the
+    # whole horizon as one block — the one-shot behaviour), and an optional
+    # filesystem-safe identity used by the ExperimentService for per-run
+    # checkpoint directories
+    checkpoint_every: int = 0
+    run_id: Optional[str] = None
 
     def __post_init__(self):
         if self.engine not in _ENGINES:
@@ -266,6 +280,23 @@ class ExperimentSpec:
         if self.adapt_every < 0:
             raise ValueError(
                 f"adapt_every must be >= 0, got {self.adapt_every}")
+        if (not isinstance(self.checkpoint_every, int)
+                or self.checkpoint_every < 0):
+            raise ValueError(f"checkpoint_every must be an int >= 0, "
+                             f"got {self.checkpoint_every!r}")
+        if self.checkpoint_every > 0 and self.engine == "legacy":
+            raise ValueError(
+                "checkpoint_every requires the batched engine; the legacy "
+                "per-client oracle has no block-structured run state")
+        if self.run_id is not None:
+            import re
+            if not (isinstance(self.run_id, str)
+                    and re.fullmatch(r"[A-Za-z0-9][A-Za-z0-9._-]{0,127}",
+                                     self.run_id)):
+                raise ValueError(
+                    f"run_id must be a filesystem-safe slug "
+                    f"([A-Za-z0-9._-], not starting with '.'), "
+                    f"got {self.run_id!r}")
         if self.channel_profile is not None or self.channel_params:
             from repro.net.channel import CHANNEL_PROFILES
             name = self.channel_profile

@@ -9,8 +9,25 @@ The straggler-mitigation scheme is a pluggable registry object
 (``repro.core.schemes``: naive / greedy / ideal / coded / partial_coded,
 plus anything registered since) that owns the deployment setup and its
 contributions to the compiled step; `Experiment` is built from a frozen
-`ExperimentSpec` (``repro.api.build_experiment``), and the kwargs-era
-`FederatedSimulation` survives as a deprecated shim over it.
+`ExperimentSpec` (``repro.api.build_experiment``).  The kwargs-era
+`FederatedSimulation` front-end has been removed (a stub raising a
+pointed error remains).
+
+Block-structured resumable runs
+-------------------------------
+Every batched-engine run is threaded through an explicit
+`repro.core.run_state.RunState`: ``run(iterations)`` is a loop of
+``run_block(state, n_rounds) -> state`` calls over the same cached
+compiled scan, where a block is ``spec.checkpoint_every`` rounds (0 = the
+whole horizon in one block, reproducing the historical one-shot
+trajectories bit-exactly).  The state carries the model iterate, round
+cursor, RNG bit-generator state, channel-trace state, estimator
+sufficient statistics, adaptive control values, and the round-log
+accumulators — so ``save_state``/``restore_state``
+(`repro.checkpoint.io`) give kill/resume at any block boundary that is
+bit-identical to the uninterrupted blocked run, including the loss curve
+and the adaptive schedule.  `repro.launch.service.ExperimentService`
+multiplexes many such runs' blocks over one process.
 
 Engines
 -------
@@ -89,7 +106,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
+import os
 from typing import Callable, Optional
 
 import jax
@@ -98,10 +115,16 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.config import ExperimentSpec, FLConfig, TrainConfig
+from repro.checkpoint import io as ckpt_io
+from repro.config import ExperimentSpec
 from repro.core import aggregation, schemes
 from repro.core.delay_model import (mec_network, packet_bits,
                                     sample_round_times, scale_tau)
+from repro.core.run_state import RunState, pack_state, unpack_state
+from repro.net.estimator import (AdaptiveSchedule, OnlineChannelEstimator,
+                                 plan_segment)
+from repro.net.trace import (TraceState, generate_trace_block,
+                             sample_round_times_traced)
 
 #: name of the client-partitioned mesh axis (see `repro.launch.mesh`)
 CLIENT_AXIS = "clients"
@@ -326,6 +349,54 @@ def _pad_rows(arr: jnp.ndarray, rows: int) -> jnp.ndarray:
     return jnp.pad(arr, ((0, extra),) + ((0, 0),) * (arr.ndim - 1))
 
 
+def _empty_sched(n: int) -> dict:
+    """Zero-length adaptive-schedule record (keys per
+    `repro.core.run_state._SCHED_KEYS`); blocks append to it via
+    `_append_sched`, `Experiment._assemble_schedule` turns the finished
+    record back into an `AdaptiveSchedule`."""
+    return {
+        "times": np.zeros((0, n), np.float64),
+        "active": np.zeros((0, n), np.float32),
+        "block_idx": np.zeros(0, np.int32),
+        "t_star_r": np.zeros(0, np.float32),
+        "n_wait_r": np.zeros(0, np.int32),
+        "loads_blocks": np.zeros((0, n), np.float64),
+        "est_mu": np.zeros((0, n), np.float64),
+        "est_tau": np.zeros((0, n), np.float64),
+        "est_p": np.zeros((0, n), np.float64),
+        "est_avail": np.zeros((0, n), np.float64),
+        "est_rounds_seen": np.zeros(0, np.int64),
+    }
+
+
+def _append_sched(sched: dict, seg) -> dict:
+    """Append one `SegmentPlan`'s record to a schedule dict, offsetting
+    the segment-local block indices onto the run-global block axis."""
+    b0 = sched["loads_blocks"].shape[0]
+    est = seg.estimates
+    return {
+        "times": np.concatenate([sched["times"], seg.times]),
+        "active": np.concatenate([sched["active"], seg.active]),
+        "block_idx": np.concatenate(
+            [sched["block_idx"], (seg.block_idx + b0).astype(np.int32)]),
+        "t_star_r": np.concatenate([sched["t_star_r"], seg.t_star_r]),
+        "n_wait_r": np.concatenate([sched["n_wait_r"], seg.n_wait_r]),
+        "loads_blocks": np.concatenate([sched["loads_blocks"],
+                                        seg.loads_blocks]),
+        "est_mu": np.concatenate(
+            [sched["est_mu"], np.stack([e["mu"] for e in est])]),
+        "est_tau": np.concatenate(
+            [sched["est_tau"], np.stack([e["tau"] for e in est])]),
+        "est_p": np.concatenate(
+            [sched["est_p"], np.stack([e["p"] for e in est])]),
+        "est_avail": np.concatenate(
+            [sched["est_avail"], np.stack([e["avail"] for e in est])]),
+        "est_rounds_seen": np.concatenate(
+            [sched["est_rounds_seen"],
+             np.array([e["rounds_seen"] for e in est], np.int64)]),
+    }
+
+
 class Experiment:
     """One runnable FL deployment, built from a frozen `ExperimentSpec`.
 
@@ -340,9 +411,12 @@ class Experiment:
     ``mesh`` override (an int or a concrete 1-D "clients" Mesh) shards the
     batched engine's client axis over devices.
 
-    Prefer the entrypoint ``repro.api.build_experiment(spec, xs, ys)``;
-    the kwargs-era ``FederatedSimulation`` front-end survives as a
-    deprecated shim over this class.
+    Prefer the entrypoint ``repro.api.build_experiment(spec, xs, ys)``.
+
+    Batched-engine runs are block-structured: ``run``/``run_multi`` drive
+    `init_state` / `run_block` / `finish` over an explicit `RunState`,
+    checkpointable at every block boundary via `save_state` /
+    `restore_state` (see the module docstring).
     """
 
     def __init__(self, spec: ExperimentSpec, x_stack, y_stack, *,
@@ -352,7 +426,8 @@ class Experiment:
         if not isinstance(spec, ExperimentSpec):
             raise TypeError(
                 f"spec must be an ExperimentSpec, got {type(spec).__name__}"
-                " (legacy kwargs callers: use FederatedSimulation)")
+                " (build one with repro.config.ExperimentSpec and pass it"
+                " to repro.api.build_experiment)")
         self.spec = spec
         fl_cfg = spec.resolved_fl()      # delay-profile knobs applied
         self.engine = spec.engine
@@ -394,7 +469,20 @@ class Experiment:
                 # network, allocation stays ~put)
                 from repro.net.channel import CHANNEL_PROFILES
                 self.channel = CHANNEL_PROFILES["static"]
+        self.checkpoint_every = spec.checkpoint_every
+        if (self.checkpoint_every > 0 and self.adaptive
+                and self.checkpoint_every % self.adapt_every != 0):
+            raise ValueError(
+                f"checkpoint_every={self.checkpoint_every} must be a "
+                f"multiple of adapt_every={self.adapt_every} so checkpoint "
+                "boundaries align with re-allocation blocks")
+        self.run_id = spec.run_id
         self._trace_seed = fl_cfg.seed + 9973
+        # trace-stream reservation cursor: each single run reserves one
+        # stream index, each traced run_multi one per realization.  The
+        # reserved index lives in the run's RunState (not here), so
+        # replaying a restored state is hermetic — this counter only
+        # hands out fresh streams to NEW runs on this instance.
         self._trace_calls = 0
         self.last_schedule = None     # AdaptiveSchedule of the latest run
         self.fl = fl_cfg
@@ -522,13 +610,21 @@ class Experiment:
         return sample_round_times(self.nodes, np.asarray(self.loads, float),
                                   self.rng, rounds)
 
-    def _next_trace_rng(self) -> np.random.Generator:
-        """Dedicated per-run trace generator: deterministic per (seed, run
-        index) and independent of `self.rng`, so turning the channel on
-        never shifts the delay-draw stream the static engine consumes."""
-        rng = np.random.default_rng((self._trace_seed, self._trace_calls))
-        self._trace_calls += 1
-        return rng
+    def _reserve_trace_streams(self, k: int) -> int:
+        """Reserve `k` consecutive trace-stream indices for a new run and
+        return the base index.  The base lives in the run's `RunState`
+        (``trace_call``), so restored states replay hermetically no
+        matter how many runs this instance has since started."""
+        base = self._trace_calls
+        self._trace_calls += k
+        return base
+
+    def _trace_rng(self, index: int) -> np.random.Generator:
+        """Dedicated per-run trace generator: deterministic per (seed,
+        stream index) and independent of `self.rng`, so turning the
+        channel on never shifts the delay-draw stream the static engine
+        consumes."""
+        return np.random.default_rng((self._trace_seed, int(index)))
 
     def _lr(self, epoch: int) -> float:
         lr = self.train.learning_rate
@@ -537,9 +633,15 @@ class Experiment:
                 lr *= self.train.lr_decay
         return lr
 
-    def _lr_schedule(self, iterations: int) -> np.ndarray:
+    def _lr_schedule_range(self, r0: int, r1: int) -> np.ndarray:
+        """Per-round learning rates for global rounds [r0, r1) — blocks
+        read their position from the global cursor, so the schedule is
+        invariant to how the run is partitioned into blocks."""
         return np.array([self._lr(it // self.steps_per_epoch)
-                         for it in range(iterations)], np.float32)
+                         for it in range(r0, r1)], np.float32)
+
+    def _lr_schedule(self, iterations: int) -> np.ndarray:
+        return self._lr_schedule_range(0, iterations)
 
     # --------------------------------------------------------- batched engine
     def _get_scan(self, collect_theta: bool):
@@ -566,94 +668,396 @@ class Experiment:
         return (jnp.asarray(times, jnp.float32),
                 jnp.asarray(lrs, jnp.float32))
 
-    def _finish_run(self, iterations: int, outs, eval_fn,
-                    eval_every: int) -> FedResult:
-        """Shared post-processing: scan outputs -> wall-clock + history."""
-        collect = eval_fn is not None
-        theta, per_round = outs
-        t_rounds = np.asarray(per_round[0], np.float64)
-        n_ret = np.asarray(per_round[1])
-        thetas = per_round[2] if collect else None
-        wall = self.setup_time + np.cumsum(t_rounds)
-        history: list[RoundLog] = []
-        for it in range(iterations):
-            if collect and (it % eval_every == 0 or it == iterations - 1):
-                loss, acc = eval_fn(thetas[it])
+    def _get_multi_scan(self):
+        """jit'd vmapped scan for the stationary multi-realization mode,
+        cached once per scheme.  Takes the per-realization theta carry
+        explicitly so blocks chain across calls."""
+        cache_key = (self.scheme, "multi")
+        fn = self._scan_cache.get(cache_key)
+        if fn is None:
+            step = build_step(self.step_static(collect_theta=False))
+
+            def multi(consts, theta0_r, times_r, lrs_r):
+                def one(th0, tj):
+                    return jax.lax.scan(
+                        lambda th, inp: step(consts, th, inp), th0,
+                        (tj, lrs_r))
+                return jax.vmap(one)(theta0_r, times_r)
+
+            fn = jax.jit(multi)
+            self._scan_cache[cache_key] = fn
+        return fn
+
+    # ------------------------------------------------- block-structured runs
+    def init_state(self, iterations: int, *,
+                   n_realizations: Optional[int] = None,
+                   collect: bool = False) -> RunState:
+        """Fresh `RunState` for a run of `iterations` rounds.
+
+        ``n_realizations=None`` starts a "single" run; otherwise a
+        "multi" run (stationary — blocks advance all realizations'
+        cursors together through one vmapped scan call) or a
+        "multi_channel" run (traced — blocks advance one full
+        realization at a time, each with its own trace stream).  The
+        state is seeded from this experiment's live RNG and the run's
+        trace streams are reserved here, so runs launched back to back
+        consume disjoint randomness exactly like the pre-RunState
+        engine.
+        """
+        iterations = int(iterations)
+        if iterations < 1:
+            raise ValueError(f"iterations={iterations} must be >= 1")
+        if n_realizations is None:
+            mode = "single"
+            R = None
+        else:
+            R = int(n_realizations)
+            if R < 1:
+                raise ValueError(f"n_realizations={R} must be >= 1")
+            mode = "multi_channel" if self.channel is not None else "multi"
+            collect = False
+        trace_call = -1
+        trace = est = controls = sched = None
+        if self.channel is not None:
+            if mode == "single":
+                trace_call = self._reserve_trace_streams(1)
+                trace = TraceState.init(self.n, self._trace_rng(trace_call))
+                if self.adaptive:
+                    est = OnlineChannelEstimator(
+                        self.nodes,
+                        **self.scheme_params_estimator_kwargs()).state_dict()
+                    controls = self.scheme_obj.initial_controls(self)
+                    sched = _empty_sched(self.n)
             else:
-                loss, acc = float("nan"), float("nan")
-            history.append(RoundLog(it, float(wall[it]), int(n_ret[it]),
-                                    loss, acc))
-        return FedResult(theta=theta, history=history, t_star=self.t_star,
-                         loads=self.loads, setup_time=self.setup_time,
-                         privacy_eps=self.privacy_eps)
+                # one stream per realization; the per-realization
+                # estimator/controls are block-local (a block IS one
+                # whole realization), so they never live in the state
+                trace_call = self._reserve_trace_streams(R)
+        if mode == "single":
+            theta = jnp.zeros((self.q, self.c), jnp.float32)
+            t_rounds = np.zeros(0, np.float64)
+            n_ret = np.zeros(0, np.int32)
+        elif mode == "multi":
+            theta = jnp.zeros((R, self.q, self.c), jnp.float32)
+            t_rounds = np.zeros((R, 0), np.float64)
+            n_ret = np.zeros((R, 0), np.int32)
+        else:
+            theta = jnp.zeros((R, self.q, self.c), jnp.float32)
+            t_rounds = np.zeros((0, iterations), np.float64)
+            n_ret = np.zeros((0, iterations), np.int32)
+        losses = accs = None
+        if mode == "single" and collect:
+            losses = np.zeros(0, np.float64)
+            accs = np.zeros(0, np.float64)
+        return RunState(
+            mode=mode, iterations=iterations, rounds_done=0,
+            realizations_done=0, n_realizations=R, collect=bool(collect),
+            theta=theta, rng_state=self.rng.bit_generator.state,
+            trace_call=trace_call, trace=trace, est=est, controls=controls,
+            t_rounds=t_rounds, n_ret=n_ret, losses=losses, accs=accs,
+            sched=sched)
 
-    def _run_batched(self, iterations: int, times: np.ndarray,
-                     lrs: np.ndarray, eval_fn, eval_every: int) -> FedResult:
-        scan_fn = self._get_scan(eval_fn is not None)
-        theta0 = jnp.zeros((self.q, self.c), jnp.float32)
-        outs = scan_fn(self._get_consts(), theta0, self._scan_xs(times, lrs))
-        return self._finish_run(iterations, outs, eval_fn, eval_every)
+    def run_block(self, state: RunState, n_rounds: Optional[int] = None, *,
+                  eval_fn: Optional[Callable] = None,
+                  eval_every: int = 10) -> RunState:
+        """Advance a run by one block and return the NEW `RunState` (the
+        input is never mutated, so replaying a block from a saved state
+        is always safe).
 
-    # --------------------------------------------------------- channel engine
-    def _channel_outs(self, iterations: int, collect: bool):
-        """One realization through the traced-channel (and, for adaptive
-        schemes, controller-scheduled) path.  Consumes `self.rng`
-        sequentially exactly like the stationary pre-sampling, plus one
-        dedicated trace generator per call."""
-        from repro.net.estimator import AdaptiveController
-        from repro.net.trace import generate_trace, sample_round_times_traced
-        trace = generate_trace(self.nodes, self.channel, iterations,
-                               self._next_trace_rng())
-        lrs = jnp.asarray(self._lr_schedule(iterations))
-        consts = dict(self._get_consts())
+        ``n_rounds`` defaults to ``spec.checkpoint_every``, or the whole
+        remaining horizon when that is 0.  "multi_channel" runs advance
+        exactly one full realization per block regardless of
+        ``n_rounds``.  A "single" run initialized with ``collect=True``
+        must be given its ``eval_fn`` on every block — losses are
+        evaluated block-locally so resumed runs rebuild the identical
+        loss curve.
+        """
+        if state.done:
+            raise ValueError(
+                "run is already complete "
+                f"({state.rounds_done}/{state.iterations} rounds)")
+        if state.mode == "single":
+            if state.collect and eval_fn is None:
+                raise ValueError("state was initialized with collect=True; "
+                                 "run_block needs its eval_fn")
+            if not state.collect and eval_fn is not None:
+                raise ValueError(
+                    "state was initialized with collect=False; re-init "
+                    "with collect=True to evaluate during the run")
+        # detached generator: the stream position lives in the state, not
+        # in this Experiment, so replaying a restored block is hermetic
+        rng = np.random.default_rng()
+        rng.bit_generator.state = state.rng_state
+        if state.mode == "multi_channel":
+            return self._block_multi_channel(state, rng)
+        r0 = state.rounds_done
+        K = int(n_rounds) if n_rounds is not None else (
+            self.checkpoint_every or state.iterations)
+        if K < 1:
+            raise ValueError(f"n_rounds={K} must be >= 1")
+        K = min(K, state.iterations - r0)
+        lrs = self._lr_schedule_range(r0, r0 + K)
+        if state.mode == "multi":
+            return self._block_multi(state, rng, K, lrs)
+        return self._block_single(state, rng, K, lrs, eval_fn, eval_every)
+
+    def _block_single(self, state: RunState, rng, K: int, lrs, eval_fn,
+                      eval_every: int) -> RunState:
+        """K rounds of a single trajectory: stationary pre-sampling, or
+        the traced-channel (and adaptive-controller) path chained through
+        the state's `TraceState` / estimator stats / control values."""
+        r0 = state.rounds_done
+        consts = self._get_consts()
+        trace_new = state.trace
+        est_new, controls_new = state.est, state.controls
+        sched_new = state.sched
+        if self.channel is None:
+            times = sample_round_times(
+                self.nodes, np.asarray(self.loads, float), rng, K)
+            xs = self._scan_xs(times, lrs)
+        else:
+            trace_block, trace_new = generate_trace_block(
+                self.nodes, self.channel, K, state.trace)
+            if self.adaptive:
+                est = OnlineChannelEstimator(
+                    self.nodes, **self.scheme_params_estimator_kwargs())
+                est.load_state_dict(state.est)
+                seg = plan_segment(self, est, trace_block, r0, r0 + K,
+                                   state.controls, rng)
+                xs = (jnp.asarray(seg.times, jnp.float32),
+                      jnp.asarray(lrs), jnp.asarray(seg.active))
+                if self.step_kind == "adaptive_coded":
+                    consts = dict(consts)
+                    consts["gmask_blocks"] = seg.gmask_blocks
+                    xs = xs + (jnp.asarray(seg.t_star_r, jnp.float32),
+                               jnp.asarray(seg.block_idx))
+                else:
+                    xs = xs + (jnp.asarray(seg.n_wait_r),)
+                est_new = est.state_dict()
+                controls_new = seg.controls
+                sched_new = _append_sched(state.sched, seg)
+            else:
+                times = sample_round_times_traced(
+                    self.nodes, np.asarray(self.loads, float), rng,
+                    trace_block)
+                xs = (jnp.asarray(times, jnp.float32), jnp.asarray(lrs),
+                      jnp.asarray(trace_block.active, jnp.float32))
+        scan_fn = self._get_scan(state.collect)
+        theta, per_round = scan_fn(consts, state.theta, xs)
+        losses_new, accs_new = state.losses, state.accs
+        if state.collect:
+            thetas = per_round[2]
+            loss_b = np.full(K, np.nan)
+            acc_b = np.full(K, np.nan)
+            for k in range(K):
+                it = r0 + k
+                if it % eval_every == 0 or it == state.iterations - 1:
+                    loss, acc = eval_fn(thetas[k])
+                    loss_b[k] = float(loss)
+                    acc_b[k] = float(acc)
+            losses_new = np.concatenate([state.losses, loss_b])
+            accs_new = np.concatenate([state.accs, acc_b])
+        return dataclasses.replace(
+            state, rounds_done=r0 + K, theta=theta,
+            rng_state=rng.bit_generator.state, trace=trace_new,
+            est=est_new, controls=controls_new,
+            t_rounds=np.concatenate(
+                [state.t_rounds, np.asarray(per_round[0], np.float64)]),
+            n_ret=np.concatenate(
+                [state.n_ret, np.asarray(per_round[1])]),
+            losses=losses_new, accs=accs_new, sched=sched_new)
+
+    def _block_multi(self, state: RunState, rng, K: int, lrs) -> RunState:
+        """K rounds of ALL stationary realizations in one vmapped scan
+        call; per-realization theta carries chain across blocks."""
+        R = int(state.n_realizations)
+        times = sample_round_times(
+            self.nodes, np.asarray(self.loads, float), rng, R * K)
+        times = times.reshape(R, K, self.n)
+        multi = self._get_multi_scan()
+        theta, (t_rounds, n_ret) = multi(
+            self._get_consts(), jnp.asarray(state.theta),
+            jnp.asarray(times, jnp.float32), jnp.asarray(lrs))
+        return dataclasses.replace(
+            state, rounds_done=state.rounds_done + K, theta=theta,
+            rng_state=rng.bit_generator.state,
+            t_rounds=np.concatenate(
+                [state.t_rounds, np.asarray(t_rounds, np.float64)], axis=1),
+            n_ret=np.concatenate(
+                [state.n_ret, np.asarray(n_ret)], axis=1))
+
+    def _block_multi_channel(self, state: RunState, rng) -> RunState:
+        """One full traced realization per block: a fresh trace stream at
+        index ``trace_call + r`` and (adaptive family) a fresh controller,
+        exactly like the per-realization host loop of the pre-RunState
+        engine."""
+        r = state.realizations_done
+        tstate = TraceState.init(self.n,
+                                 self._trace_rng(state.trace_call + r))
+        trace, _ = generate_trace_block(self.nodes, self.channel,
+                                        state.iterations, tstate)
+        consts = self._get_consts()
+        lrs = jnp.asarray(self._lr_schedule(state.iterations))
+        sched_new = state.sched
         if self.adaptive:
-            sched = AdaptiveController(self, trace).plan(iterations)
-            self.last_schedule = sched
-            xs = (jnp.asarray(sched.times, jnp.float32), lrs,
-                  jnp.asarray(sched.active))
+            est = OnlineChannelEstimator(
+                self.nodes, **self.scheme_params_estimator_kwargs())
+            seg = plan_segment(self, est, trace, 0, state.iterations,
+                               self.scheme_obj.initial_controls(self), rng)
+            xs = (jnp.asarray(seg.times, jnp.float32), lrs,
+                  jnp.asarray(seg.active))
             if self.step_kind == "adaptive_coded":
-                consts["gmask_blocks"] = sched.gmask_blocks
-                xs = xs + (jnp.asarray(sched.t_star, jnp.float32),
-                           jnp.asarray(sched.block_idx))
+                consts = dict(consts)
+                consts["gmask_blocks"] = seg.gmask_blocks
+                xs = xs + (jnp.asarray(seg.t_star_r, jnp.float32),
+                           jnp.asarray(seg.block_idx))
             else:
-                xs = xs + (jnp.asarray(sched.n_wait),)
+                xs = xs + (jnp.asarray(seg.n_wait_r),)
+            # the record kept is the LAST realization's plan, matching the
+            # pre-RunState engine's `last_schedule` semantics
+            sched_new = _append_sched(_empty_sched(self.n), seg)
         else:
             times = sample_round_times_traced(
-                self.nodes, np.asarray(self.loads, float), self.rng, trace)
+                self.nodes, np.asarray(self.loads, float), rng, trace)
             xs = (jnp.asarray(times, jnp.float32), lrs,
                   jnp.asarray(trace.active, jnp.float32))
-        scan_fn = self._get_scan(collect)
+        scan_fn = self._get_scan(False)
         theta0 = jnp.zeros((self.q, self.c), jnp.float32)
-        return scan_fn(consts, theta0, xs)
+        theta_r, per_round = scan_fn(consts, theta0, xs)
+        return dataclasses.replace(
+            state, realizations_done=r + 1,
+            rounds_done=(r + 1) * state.iterations,
+            theta=state.theta.at[r].set(theta_r),
+            rng_state=rng.bit_generator.state, sched=sched_new,
+            t_rounds=np.concatenate(
+                [state.t_rounds,
+                 np.asarray(per_round[0], np.float64)[None]]),
+            n_ret=np.concatenate(
+                [state.n_ret, np.asarray(per_round[1])[None]]))
 
-    def _run_channel(self, iterations: int, eval_fn,
-                     eval_every: int) -> FedResult:
-        outs = self._channel_outs(iterations, collect=eval_fn is not None)
-        return self._finish_run(iterations, outs, eval_fn, eval_every)
+    # ---------------------------------------------------- checkpoint/restore
+    def save_state(self, path: str, state: RunState) -> str:
+        """Checkpoint `state` atomically (`repro.checkpoint.io`),
+        embedding this experiment's `ExperimentSpec` as JSON provenance."""
+        arrays, meta = pack_state(state)
+        meta["spec"] = self.spec.to_dict()
+        return ckpt_io.save_state(path, arrays, meta)
 
-    def _run_multi_channel(self, iterations: int, n_realizations: int,
-                           eval_fn) -> MultiFedResult:
-        """R independent channel realizations (fresh trace + delay draws
-        each).  The compiled scan is shared across realizations (equal
-        shapes), but the host-side trace/controller loop runs per
-        realization — the stationary `run_multi` keeps its one-call vmap."""
-        thetas, t_rounds, n_rets = [], [], []
-        for _ in range(int(n_realizations)):
-            theta, per_round = self._channel_outs(iterations, collect=False)
-            thetas.append(theta)
-            t_rounds.append(np.asarray(per_round[0], np.float64))
-            n_rets.append(np.asarray(per_round[1]))
-        theta = jnp.stack(thetas)
-        wall = self.setup_time + np.cumsum(np.stack(t_rounds), axis=1)
+    def restore_state(self, path: str) -> RunState:
+        """Load a `RunState` checkpoint, verify its spec provenance
+        against this experiment, and bump the trace-stream cursor past
+        the restored run's reservation so new runs stay disjoint."""
+        arrays, meta = ckpt_io.restore_state(path)
+        spec_dict = meta.get("spec")
+        if spec_dict is not None:
+            saved = ExperimentSpec.from_dict(spec_dict)
+            if saved != self.spec:
+                raise ValueError(
+                    f"checkpoint provenance mismatch: {path!r} was saved "
+                    "by a run of a different ExperimentSpec than this "
+                    "experiment's — refusing to resume across specs")
+        state = unpack_state(arrays, meta)
+        if state.trace_call >= 0:
+            reserved = (int(state.n_realizations)
+                        if state.mode == "multi_channel" else 1)
+            self._trace_calls = max(self._trace_calls,
+                                    state.trace_call + reserved)
+        return state
+
+    # ------------------------------------------------------------ finalizing
+    def finish(self, state: RunState,
+               eval_fn: Optional[Callable] = None):
+        """Turn a completed `RunState` into `FedResult` /
+        `MultiFedResult` and sync this experiment's RNG to the run-end
+        stream position (so back-to-back runs consume disjoint draws,
+        exactly like the pre-RunState engine)."""
+        if not state.done:
+            raise ValueError(
+                f"run is not complete ({state.rounds_done}/"
+                f"{state.iterations} rounds); call run_block until "
+                "state.done")
+        self.rng.bit_generator.state = state.rng_state
+        if state.sched is not None:
+            self.last_schedule = self._assemble_schedule(state.sched)
+        if state.mode == "single":
+            return self._finish_single(state)
+        return self._finish_multi(state, eval_fn)
+
+    def _finish_single(self, state: RunState) -> FedResult:
+        wall = self.setup_time + np.cumsum(state.t_rounds)
+        history: list[RoundLog] = []
+        for it in range(state.iterations):
+            loss = float(state.losses[it]) if state.collect else float("nan")
+            acc = float(state.accs[it]) if state.collect else float("nan")
+            history.append(RoundLog(it, float(wall[it]),
+                                    int(state.n_ret[it]), loss, acc))
+        return FedResult(theta=state.theta, history=history,
+                         t_star=self.t_star, loads=self.loads,
+                         setup_time=self.setup_time,
+                         privacy_eps=self.privacy_eps)
+
+    def _finish_multi(self, state: RunState, eval_fn) -> MultiFedResult:
+        wall = self.setup_time + np.cumsum(state.t_rounds, axis=1)
+        theta = state.theta
         acc = None
         if eval_fn is not None:
-            acc = np.array([eval_fn(theta[r])[1]
-                            for r in range(theta.shape[0])])
+            if state.mode == "multi_channel":
+                acc = np.array([eval_fn(theta[r])[1]
+                                for r in range(theta.shape[0])])
+            else:
+                # vmap the eval over the realization axis when eval_fn is
+                # jax-traceable (it must then be pure — it sees a batched
+                # tracer, not R concrete arrays); numpy/host-side eval_fns
+                # raise a tracer-conversion error and fall back to the
+                # loop.  Genuine eval_fn bugs (bad shapes) propagate.
+                try:
+                    acc = np.asarray(jax.vmap(
+                        lambda th: jnp.asarray(eval_fn(th)[1]))(theta))
+                except jax.errors.JAXTypeError:
+                    acc = np.array([eval_fn(theta[r])[1]
+                                    for r in range(theta.shape[0])])
         return MultiFedResult(theta=theta, wall_clock=wall,
-                              returned=np.stack(n_rets),
+                              returned=np.asarray(state.n_ret),
                               t_star=self.t_star, loads=self.loads,
                               setup_time=self.setup_time, accuracy=acc,
                               privacy_eps=self.privacy_eps)
+
+    def _assemble_schedule(self, sched: dict) -> AdaptiveSchedule:
+        """Rebuild the run's `AdaptiveSchedule` from the state's
+        serialized record (gmasks are re-derived from the per-block
+        loads — `gmask_for_loads` is a pure function of them)."""
+        estimates = [
+            {"mu": sched["est_mu"][b], "tau": sched["est_tau"][b],
+             "p": sched["est_p"][b], "avail": sched["est_avail"][b],
+             "rounds_seen": int(sched["est_rounds_seen"][b])}
+            for b in range(sched["loads_blocks"].shape[0])]
+        out = AdaptiveSchedule(
+            times=sched["times"], active=sched["active"],
+            block_idx=sched["block_idx"],
+            loads_blocks=sched["loads_blocks"], estimates=estimates)
+        if self.step_kind == "adaptive_coded":
+            out.t_star = sched["t_star_r"]
+            out.gmask_blocks = jnp.stack(
+                [self.scheme_obj.gmask_for_loads(self, loads)
+                 for loads in sched["loads_blocks"]])
+        else:
+            out.n_wait = sched["n_wait_r"]
+        return out
+
+    def _drive(self, state: RunState, checkpoint_dir: Optional[str],
+               eval_fn=None, eval_every: int = 10) -> RunState:
+        """Advance `state` to completion block by block, checkpointing
+        each block boundary when a directory is given."""
+        while not state.done:
+            state = self.run_block(state, eval_fn=eval_fn,
+                                   eval_every=eval_every)
+            if checkpoint_dir is not None:
+                self.save_state(
+                    os.path.join(
+                        checkpoint_dir,
+                        f"{ckpt_io.CKPT_PREFIX}{state.rounds_done:06d}.npz"),
+                    state)
+        return state
 
     # ---------------------------------------------------------- legacy engine
     def _run_legacy(self, iterations: int, times_all: np.ndarray,
@@ -722,82 +1126,105 @@ class Experiment:
     # ------------------------------------------------------------------- runs
     def run(self, iterations: int,
             eval_fn: Optional[Callable[[jnp.ndarray], tuple[float, float]]] = None,
-            eval_every: int = 10) -> FedResult:
-        """Run `iterations` rounds; delays for the whole run are pre-sampled
-        once, so both engines consume the identical delay matrix.  With a
-        channel profile the delays flow through the network trace (and the
-        adaptive controller's schedule) instead — still one compiled scan."""
-        if self.channel is not None:
-            return self._run_channel(iterations, eval_fn, eval_every)
-        times = self._sample_round_times(iterations)
-        lrs = self._lr_schedule(iterations)
-        if self.engine == "legacy":
-            return self._run_legacy(iterations, times, lrs, eval_fn, eval_every)
-        return self._run_batched(iterations, times, lrs, eval_fn, eval_every)
+            eval_every: int = 10, *, checkpoint_dir: Optional[str] = None,
+            resume: bool = False) -> FedResult:
+        """Run `iterations` rounds as a chain of `run_block` calls over
+        the cached compiled scan: block size = ``spec.checkpoint_every``
+        rounds, or the whole horizon when 0 (which reproduces the
+        historical one-shot trajectories bit-for-bit).  With a channel
+        profile the delays flow through the network trace (and the
+        adaptive controller's schedule) instead — still one compiled
+        scan per block.
+
+        ``checkpoint_dir`` writes an atomic `RunState` checkpoint at
+        every block boundary; ``resume=True`` restores the latest one
+        there (if any) and continues, bit-identical to the uninterrupted
+        blocked run.
+        """
+        if self.engine == "legacy" and self.channel is None:
+            if checkpoint_dir is not None or resume:
+                raise ValueError(
+                    "checkpointing requires the batched engine; the legacy "
+                    "per-client oracle has no block-structured run state")
+            times = self._sample_round_times(iterations)
+            lrs = self._lr_schedule(iterations)
+            return self._run_legacy(iterations, times, lrs, eval_fn,
+                                    eval_every)
+        state = None
+        if resume:
+            if checkpoint_dir is None:
+                raise ValueError("resume=True requires checkpoint_dir")
+            latest = ckpt_io.latest_checkpoint(checkpoint_dir)
+            if latest is not None:
+                state = self.restore_state(latest)
+                if state.mode != "single":
+                    raise ValueError(
+                        f"checkpoint {latest!r} holds a {state.mode!r} "
+                        "run; resume it with run_multi")
+                if state.iterations != int(iterations):
+                    raise ValueError(
+                        f"checkpoint {latest!r} is a {state.iterations}-"
+                        f"round run; this run asked for {iterations}")
+                if state.collect != (eval_fn is not None):
+                    raise ValueError(
+                        f"checkpoint {latest!r} was saved with collect="
+                        f"{state.collect}; pass a matching eval_fn")
+        if state is None:
+            state = self.init_state(iterations,
+                                    collect=eval_fn is not None)
+        state = self._drive(state, checkpoint_dir, eval_fn, eval_every)
+        return self.finish(state)
 
     def run_multi(self, iterations: int, n_realizations: int,
                   eval_fn: Optional[Callable[[jnp.ndarray],
-                                             tuple[float, float]]] = None
-                  ) -> MultiFedResult:
-        """R independent delay realizations of the same deployment, vmapped.
+                                             tuple[float, float]]] = None,
+                  *, checkpoint_dir: Optional[str] = None,
+                  resume: bool = False) -> MultiFedResult:
+        """R independent delay realizations of the same deployment.
 
-        One compiled call produces the full (R, iterations) wall-clock /
-        return-count surface — mean ± std over axis 0 is the Fig. 4/5 curve
-        with its confidence band (`MultiFedResult.wall_clock_bands`).
+        One vmapped scan call per block produces the full
+        (R, iterations) wall-clock / return-count surface — mean ± std
+        over axis 0 is the Fig. 4/5 curve with its confidence band
+        (`MultiFedResult.wall_clock_bands`).  With
+        ``spec.checkpoint_every == 0`` the whole run is one block, i.e.
+        one compiled call, exactly as before.
 
         Always runs on the batched scan engine (the legacy oracle has no
-        vmappable form); the `engine` constructor argument only selects the
-        `run()` path.  The final-iterate eval is vmapped over the
-        realization axis when `eval_fn` is jax-traceable, falling back to a
-        per-realization Python loop otherwise.  Channel-profile runs loop
-        realizations on the host (fresh trace each) over one shared
-        compiled scan instead.
+        vmappable form); the `engine` constructor argument only selects
+        the `run()` path.  The final-iterate eval is vmapped over the
+        realization axis when `eval_fn` is jax-traceable, falling back
+        to a per-realization Python loop otherwise.  Channel-profile
+        runs advance one full realization (fresh trace stream) per block
+        over one shared compiled scan instead — checkpoints then land at
+        realization, not round, granularity.
+
+        ``checkpoint_dir``/``resume`` checkpoint and restore the run at
+        block boundaries exactly like `run`.
         """
-        if self.channel is not None:
-            return self._run_multi_channel(iterations, n_realizations,
-                                           eval_fn)
-        R = int(n_realizations)
-        times = self._sample_round_times(R * iterations)
-        times = times.reshape(R, iterations, self.n)
-        lrs = jnp.asarray(self._lr_schedule(iterations))
-        theta0 = jnp.zeros((self.q, self.c), jnp.float32)
-
-        cache_key = (self.scheme, "multi")
-        multi = self._scan_cache.get(cache_key)
-        if multi is None:
-            step = build_step(self.step_static(collect_theta=False))
-
-            def multi(consts, times_r, lrs_r):
-                def one(tj):
-                    return jax.lax.scan(
-                        lambda th, inp: step(consts, th, inp),
-                        theta0, (tj, lrs_r))
-                return jax.vmap(one)(times_r)
-
-            multi = jax.jit(multi)
-            self._scan_cache[cache_key] = multi
-
-        theta, (t_rounds, n_ret) = multi(self._get_consts(),
-                                         jnp.asarray(times, jnp.float32), lrs)
-        wall = self.setup_time + np.cumsum(
-            np.asarray(t_rounds, np.float64), axis=1)
-        acc = None
-        if eval_fn is not None:
-            # vmap the eval over the realization axis when eval_fn is
-            # jax-traceable (it must then be pure — it sees a batched
-            # tracer, not R concrete arrays); numpy/host-side eval_fns
-            # raise a tracer-conversion error and fall back to the loop.
-            # Genuine eval_fn bugs (bad shapes etc.) propagate normally.
-            try:
-                acc = np.asarray(jax.vmap(
-                    lambda th: jnp.asarray(eval_fn(th)[1]))(theta))
-            except jax.errors.JAXTypeError:
-                acc = np.array([eval_fn(theta[r])[1] for r in range(R)])
-        return MultiFedResult(theta=theta, wall_clock=wall,
-                              returned=np.asarray(n_ret),
-                              t_star=self.t_star, loads=self.loads,
-                              setup_time=self.setup_time, accuracy=acc,
-                              privacy_eps=self.privacy_eps)
+        state = None
+        if resume:
+            if checkpoint_dir is None:
+                raise ValueError("resume=True requires checkpoint_dir")
+            latest = ckpt_io.latest_checkpoint(checkpoint_dir)
+            if latest is not None:
+                state = self.restore_state(latest)
+                if state.mode == "single":
+                    raise ValueError(
+                        f"checkpoint {latest!r} holds a single run; "
+                        "resume it with run()")
+                if (state.iterations != int(iterations)
+                        or int(state.n_realizations)
+                        != int(n_realizations)):
+                    raise ValueError(
+                        f"checkpoint {latest!r} is a {state.iterations}-"
+                        f"round x {state.n_realizations}-realization run; "
+                        f"this run asked for {iterations} x "
+                        f"{n_realizations}")
+        if state is None:
+            state = self.init_state(iterations,
+                                    n_realizations=n_realizations)
+        state = self._drive(state, checkpoint_dir)
+        return self.finish(state, eval_fn)
 
     # ------------------------------------------------------------------ sweep
     def sweep(self, *, profiles: dict, iterations: int, realizations: int,
@@ -817,46 +1244,14 @@ class Experiment:
             schemes=schemes or (self.scheme,), base_spec=self.spec)
 
 
-class FederatedSimulation(Experiment):
-    """Deprecated kwargs front-end over `Experiment`.
+class FederatedSimulation:
+    """Removed.  The deprecated kwargs front-end over `Experiment` was a
+    shim folding its arguments into a frozen `ExperimentSpec`; the two
+    entrypoints shared one code path, so nothing is lost by migrating.
+    The stub survives only to point stragglers at the replacement."""
 
-    Kept as a thin shim for the pre-spec constructor signature: it folds
-    the kwargs into a frozen `ExperimentSpec` and defers everything to
-    `Experiment`, so both entrypoints share one code path (and therefore
-    identical trajectories — locked down by tests/test_experiment_api.py).
-    New code should build an `ExperimentSpec` and call
-    ``repro.api.build_experiment(spec, x_stack, y_stack)``.
-    """
-
-    def __init__(self, x_stack, y_stack, fl_cfg: FLConfig,
-                 train_cfg: TrainConfig, *, scheme: Optional[str] = None,
-                 steps_per_epoch: int = 1, nodes: Optional[list] = None,
-                 rng: Optional[np.random.Generator] = None,
-                 secure_aggregation: bool = False,
-                 engine: str = "batched",
-                 kernel_backend: str = "xla",
-                 alloc_backend: str = "auto",
-                 mesh: "Mesh | int | None" = None,
-                 fused_coded: bool = True):
-        warnings.warn(
-            "FederatedSimulation is deprecated; build a frozen "
-            "ExperimentSpec and call "
-            "repro.api.build_experiment(spec, x_stack, y_stack) instead",
-            DeprecationWarning, stacklevel=2)
-        # a concrete Mesh object is not spec-serializable — pass it through
-        # as the Experiment-level override instead
-        mesh_obj = None
-        spec_mesh = None
-        if mesh is None or isinstance(mesh, int):
-            spec_mesh = mesh
-        else:
-            mesh_obj = mesh
-        spec = ExperimentSpec(
-            fl=fl_cfg, train=train_cfg, scheme=scheme,
-            engine=engine, kernel_backend=kernel_backend,
-            alloc_backend=alloc_backend, mesh=spec_mesh,
-            fused_coded=fused_coded,
-            secure_aggregation=secure_aggregation,
-            steps_per_epoch=steps_per_epoch)
-        super().__init__(spec, x_stack, y_stack, nodes=nodes, rng=rng,
-                         mesh=mesh_obj)
+    def __init__(self, *args, **kwargs):
+        raise TypeError(
+            "FederatedSimulation has been removed; build a frozen "
+            "repro.config.ExperimentSpec and call "
+            "repro.api.build_experiment(spec, x_stack, y_stack) instead")

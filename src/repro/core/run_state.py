@@ -1,0 +1,203 @@
+"""Explicit, serializable state of a block-structured federated run.
+
+`RunState` is everything `Experiment.run_block` needs to advance a run by
+one block — and therefore everything a checkpoint needs to resume it
+bit-identically after a kill:
+
+  * the model carry ``theta`` and the global round cursor (the
+    lr-schedule position is derived from the cursor, never stored),
+  * the run RNG's bit-generator state (delay draws continue mid-stream),
+  * the trace-stream index and live `repro.net.trace.TraceState` of the
+    channel trace (the former hidden ``Experiment._next_trace_rng``
+    counter, folded in here so replays are hermetic),
+  * the `OnlineChannelEstimator` sufficient statistics and the adaptive
+    control values (loads / deadline / wait count) in effect,
+  * the per-round accumulators that become the final `FedResult` history
+    (round times, returned counts, eval losses) and the adaptive
+    schedule record.
+
+Three run modes share the structure: ``"single"`` (one trajectory,
+blocks advance the round cursor), ``"multi"`` (stationary `run_multi`,
+blocks advance all realizations' round cursors together), and
+``"multi_channel"`` (traced `run_multi`, blocks advance one full
+realization at a time — each realization is an independent trace).
+
+`pack_state`/`unpack_state` convert to/from the (arrays, JSON-meta)
+payload of `repro.checkpoint.io.save_state`; numpy PCG64 states are
+plain-int dicts, so the RNG round-trips exactly through JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.net.trace import TraceState
+
+FORMAT_VERSION = 1
+
+_MODES = ("single", "multi", "multi_channel")
+
+#: per-sub-block adaptive schedule record arrays, (B, n) unless noted
+_SCHED_KEYS = ("times", "active", "block_idx", "t_star_r", "n_wait_r",
+               "loads_blocks", "est_mu", "est_tau", "est_p", "est_avail",
+               "est_rounds_seen")
+
+_WIN_KEYS = ("comp", "tau", "ntr", "avail")
+
+
+@dataclasses.dataclass
+class RunState:
+    """One resumable run, between block boundaries.  See module docstring.
+
+    Accumulator shapes by mode (r = rounds_done, R = n_realizations,
+    T = iterations):
+
+      single        t_rounds (r,)    n_ret (r,)    theta (q, c)
+      multi         t_rounds (R, r)  n_ret (R, r)  theta (R, q, c)
+      multi_channel t_rounds (realizations_done, T), theta (R, q, c)
+                    with rows past ``realizations_done`` still zero
+    """
+    mode: str
+    iterations: int
+    rounds_done: int
+    realizations_done: int
+    n_realizations: Optional[int]
+    collect: bool                     # eval thetas collected per block
+    theta: Any                        # jnp.ndarray
+    rng_state: dict                   # run RNG (delay draws)
+    trace_call: int                   # base trace-stream index (-1 = none)
+    trace: Optional[TraceState]
+    est: Optional[dict]               # OnlineChannelEstimator.state_dict()
+    controls: Optional[dict]          # {"loads", "t_star", "n_wait"}
+    t_rounds: np.ndarray
+    n_ret: np.ndarray
+    losses: Optional[np.ndarray]      # (r,) NaN where not evaluated
+    accs: Optional[np.ndarray]
+    sched: Optional[dict]             # adaptive record, keys _SCHED_KEYS
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"unknown run mode {self.mode!r} "
+                             f"(expected one of {_MODES})")
+
+    @property
+    def done(self) -> bool:
+        if self.mode == "multi_channel":
+            return self.realizations_done >= int(self.n_realizations)
+        return self.rounds_done >= self.iterations
+
+
+def _scalar(val):
+    """None-preserving plain-Python scalar for JSON metadata."""
+    if val is None:
+        return None
+    return val.item() if isinstance(val, np.generic) else val
+
+
+def pack_state(state: RunState) -> "tuple[dict, dict]":
+    """RunState -> (arrays, meta) for `checkpoint.io.save_state`."""
+    arrays = {
+        "theta": np.asarray(state.theta),
+        "t_rounds": np.asarray(state.t_rounds),
+        "n_ret": np.asarray(state.n_ret),
+    }
+    meta = {
+        "format": FORMAT_VERSION,
+        "mode": state.mode,
+        "iterations": int(state.iterations),
+        "rounds_done": int(state.rounds_done),
+        "realizations_done": int(state.realizations_done),
+        "n_realizations": _scalar(state.n_realizations),
+        "collect": bool(state.collect),
+        "rng_state": state.rng_state,
+        "trace_call": int(state.trace_call),
+        "has_eval": state.losses is not None,
+        "trace": None,
+        "est": None,
+        "controls": None,
+        "has_sched": state.sched is not None,
+    }
+    if state.losses is not None:
+        arrays["losses"] = np.asarray(state.losses)
+        arrays["accs"] = np.asarray(state.accs)
+    if state.trace is not None:
+        meta["trace"] = {"rng_state": state.trace.rng_state,
+                         "rounds_done": int(state.trace.rounds_done)}
+        arrays["trace/ge_bad"] = state.trace.ge_bad
+        arrays["trace/shadow_x"] = state.trace.shadow_x
+        arrays["trace/drift_g"] = state.trace.drift_g
+        arrays["trace/churn_active"] = state.trace.churn_active
+    if state.est is not None:
+        est = state.est
+        meta["est"] = {"beta": float(est["beta"]),
+                       "window": _scalar(est["window"]),
+                       "rounds_seen": int(est["rounds_seen"])}
+        for key in ("s_tau", "s_ntr", "s_comp", "avail_hat"):
+            arrays[f"est/{key}"] = np.asarray(est[key])
+        for key in _WIN_KEYS:
+            arrays[f"est/win_{key}"] = np.asarray(est["win"][key])
+    if state.controls is not None:
+        meta["controls"] = {
+            "t_star": _scalar(state.controls.get("t_star")),
+            "n_wait": _scalar(state.controls.get("n_wait"))}
+        arrays["controls/loads"] = np.asarray(state.controls["loads"],
+                                              np.float64)
+    if state.sched is not None:
+        for key in _SCHED_KEYS:
+            arrays[f"sched/{key}"] = np.asarray(state.sched[key])
+    return arrays, meta
+
+
+def unpack_state(arrays: dict, meta: dict) -> RunState:
+    """(arrays, meta) -> RunState; inverse of `pack_state`."""
+    if meta.get("format") != FORMAT_VERSION:
+        raise ValueError(f"run-state format {meta.get('format')!r} not "
+                         f"supported (this build reads {FORMAT_VERSION})")
+    trace = None
+    if meta["trace"] is not None:
+        trace = TraceState(
+            rng_state=meta["trace"]["rng_state"],
+            rounds_done=int(meta["trace"]["rounds_done"]),
+            ge_bad=np.asarray(arrays["trace/ge_bad"], bool),
+            shadow_x=np.asarray(arrays["trace/shadow_x"], np.float64),
+            drift_g=np.asarray(arrays["trace/drift_g"], np.float64),
+            churn_active=np.asarray(arrays["trace/churn_active"], bool))
+    est = None
+    if meta["est"] is not None:
+        est = {"beta": meta["est"]["beta"],
+               "window": meta["est"]["window"],
+               "rounds_seen": meta["est"]["rounds_seen"],
+               "win": {key: np.asarray(arrays[f"est/win_{key}"])
+                       for key in _WIN_KEYS}}
+        for key in ("s_tau", "s_ntr", "s_comp", "avail_hat"):
+            est[key] = np.asarray(arrays[f"est/{key}"])
+    controls = None
+    if meta["controls"] is not None:
+        controls = {"loads": np.asarray(arrays["controls/loads"],
+                                        np.float64),
+                    "t_star": meta["controls"]["t_star"],
+                    "n_wait": meta["controls"]["n_wait"]}
+    sched = None
+    if meta.get("has_sched"):
+        sched = {key: np.asarray(arrays[f"sched/{key}"])
+                 for key in _SCHED_KEYS}
+    has_eval = bool(meta.get("has_eval"))
+    return RunState(
+        mode=meta["mode"],
+        iterations=int(meta["iterations"]),
+        rounds_done=int(meta["rounds_done"]),
+        realizations_done=int(meta["realizations_done"]),
+        n_realizations=meta["n_realizations"],
+        collect=bool(meta["collect"]),
+        theta=jnp.asarray(arrays["theta"]),
+        rng_state=meta["rng_state"],
+        trace_call=int(meta["trace_call"]),
+        trace=trace, est=est, controls=controls,
+        t_rounds=np.asarray(arrays["t_rounds"]),
+        n_ret=np.asarray(arrays["n_ret"]),
+        losses=np.asarray(arrays["losses"]) if has_eval else None,
+        accs=np.asarray(arrays["accs"]) if has_eval else None,
+        sched=sched)

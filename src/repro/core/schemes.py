@@ -101,6 +101,15 @@ class Scheme:
         greedy family); non-adaptive schemes never re-plan."""
         raise NotImplementedError(f"{self.name!r} is not adaptive")
 
+    def initial_controls(self, exp) -> dict:
+        """The scheme's control-plane contribution to a fresh `RunState`:
+        the values in effect at round 0, updated by `replan` thereafter
+        and carried across checkpoint boundaries.  Every scheme has a
+        load vector and a wait count; the coded family additionally has
+        its setup-time deadline (``t_star`` is None otherwise)."""
+        return {"loads": np.asarray(exp.loads, np.float64).copy(),
+                "t_star": exp.t_star, "n_wait": exp.n_wait}
+
     def __repr__(self):
         return f"<Scheme {self.name!r} step_kind={self.step_kind!r}>"
 

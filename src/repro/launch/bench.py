@@ -56,7 +56,7 @@ from repro.core.delay_model import ideal_round_time  # noqa: F401
 from repro.launch import scenarios as scenarios_mod
 from repro.launch import sweep as sweep_mod
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 ARTIFACT_NAME = "BENCH_fed_training.json"
 # core grid every artifact must cover; the live registry may add more
 CORE_SCHEMES = ("coded", "naive", "greedy", "ideal")
@@ -94,7 +94,8 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
                 kernel_backend: str = "xla",
                 engine: str = "sweep",
                 measure_loop: bool = True,
-                scenario_kwargs: Optional[dict] = None) -> dict:
+                scenario_kwargs: Optional[dict] = None,
+                service_kwargs: Optional[dict] = None) -> dict:
     """Run the scheme comparison over heterogeneity profiles.
 
     The scheme grid is the LIVE grid-eligible registry
@@ -111,7 +112,11 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
     static-vs-adaptive drift comparison (`repro.launch.scenarios`), keyed
     off `scenario_kwargs` (None -> that runner's defaults; pass
     ``{"skip": True}`` to omit the section, which fails validation and is
-    only for partial reruns).
+    only for partial reruns).  Schema v5 adds the ``service`` section
+    (`run_service_bench`): the block-restructuring overhead of the
+    RunState runtime vs the one-shot scan, plus the multiplexed
+    kill/resume bit-identity check; `service_kwargs` follows the same
+    None-defaults / ``{"skip": True}`` convention.
     """
     if engine not in ("sweep", "loop"):
         raise ValueError(f"unknown engine {engine!r}")
@@ -234,7 +239,100 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
         # schema v4: static-vs-adaptive time-to-target under drift
         artifact["scenarios"] = scenarios_mod.run_scenarios(
             kernel_backend=kernel_backend, **scenario_kwargs)
+    service_kwargs = dict(service_kwargs or {})
+    if not service_kwargs.pop("skip", False):
+        # schema v5: RunState block-restructuring overhead + service resume
+        artifact["service"] = run_service_bench(
+            kernel_backend=kernel_backend, **service_kwargs)
     return artifact
+
+
+def run_service_bench(kernel_backend: str = "xla", n_clients: int = 10,
+                      l: int = 256, q: int = 256, c: int = 8,
+                      iters: int = 200, block: int = 50,
+                      seed: int = 0) -> dict:
+    """Measure the block-structured runtime against the one-shot scan.
+
+    Times a warm (pre-compiled) whole-horizon run with
+    ``checkpoint_every=0`` (one block == the historical single compiled
+    call) against the same run cut into ``iters / block`` blocks — the
+    recorded ``overhead_ratio`` is the price of block restructuring
+    alone (no checkpoint I/O in either timing).  Then exercises the
+    `repro.launch.service.ExperimentService` contract: three multiplexed
+    runs, killed mid-flight and resumed by a fresh service from their
+    checkpoints, must reproduce the uninterrupted results bit-exactly
+    (``resumed_bit_identical``).
+
+    The default problem size is deliberately large enough that per-round
+    compute dominates per-block host dispatch; at toy sizes (e.g. the
+    smoke scale) the ratio mostly measures dispatch latency instead.
+    """
+    import dataclasses
+    import tempfile
+
+    from repro.api import build_experiment
+    from repro.config import ExperimentSpec, FLConfig
+    from repro.launch.service import ExperimentService
+
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n_clients, l, q)).astype(np.float32) * 0.2
+    ys = rng.normal(size=(n_clients, l, c)).astype(np.float32)
+    fl = FLConfig(n_clients=n_clients, delta=0.2, psi=0.2, seed=seed)
+    tc = TrainConfig(learning_rate=0.5, l2_reg=1e-5,
+                     lr_decay_epochs=(max(1, iters // 2),))
+    oneshot_spec = ExperimentSpec(fl=fl, train=tc, scheme="coded",
+                                  kernel_backend=kernel_backend,
+                                  checkpoint_every=0)
+    blocked_spec = dataclasses.replace(oneshot_spec, checkpoint_every=block)
+
+    def timed(spec):
+        exp = build_experiment(spec, xs, ys)
+        exp.run(iters)                      # warm-up: compile the scan
+        t0 = time.perf_counter()
+        exp.run(iters)
+        return time.perf_counter() - t0
+
+    oneshot_seconds = timed(oneshot_spec)
+    blocked_seconds = timed(blocked_spec)
+
+    # multiplexed kill/resume round-trip over three heterogeneous jobs
+    jobs = {
+        "coded": blocked_spec,
+        "greedy": dataclasses.replace(blocked_spec, scheme="greedy"),
+        "adaptive": dataclasses.replace(
+            blocked_spec, scheme="adaptive_coded",
+            channel_profile="drift_churn", adapt_every=block),
+    }
+    with tempfile.TemporaryDirectory() as root:
+        control = ExperimentService(f"{root}/control")
+        for rid, spec in jobs.items():
+            control.submit(spec, xs, ys, iters, run_id=rid)
+        expect = control.run_until_complete()
+
+        svc = ExperimentService(f"{root}/killed")
+        for rid, spec in jobs.items():
+            svc.submit(spec, xs, ys, iters, run_id=rid)
+        for _ in range(len(jobs) + 1):
+            svc.step()                      # partial progress, then "kill"
+        del svc
+        svc2 = ExperimentService(f"{root}/killed")
+        for rid, spec in jobs.items():
+            svc2.submit(spec, xs, ys, iters, run_id=rid)
+        results = svc2.run_until_complete()
+    identical = all(
+        np.array_equal(np.asarray(expect[rid].theta),
+                       np.asarray(results[rid].theta))
+        for rid in jobs)
+
+    return {
+        "iters": int(iters),
+        "block_rounds": int(block),
+        "oneshot_seconds": float(oneshot_seconds),
+        "blocked_seconds": float(blocked_seconds),
+        "overhead_ratio": float(blocked_seconds / oneshot_seconds),
+        "multiplexed_runs": len(jobs),
+        "resumed_bit_identical": bool(identical),
+    }
 
 
 def write_artifact(result: dict, out_path: str = ARTIFACT_NAME) -> str:
@@ -250,7 +348,7 @@ _SCHEME_FIELDS = ("final_wall_clock_mean", "final_wall_clock_std",
 
 
 def validate_artifact(obj) -> list[str]:
-    """Structural check of the BENCH_fed_training.json artifact (schema 4).
+    """Structural check of the BENCH_fed_training.json artifact (schema 5).
 
     `obj` is a dict or a path.  Returns a list of problems (empty == valid)
     rather than raising, so CI can print every issue at once.
@@ -262,7 +360,11 @@ def validate_artifact(obj) -> list[str]:
     entries must report ``t_star``, ``total_load``, and the parity privacy
     leakage ``privacy_eps_max_bits``.  Schema v4 adds the required
     ``scenarios`` section (static-vs-adaptive drift comparison, validated
-    by `repro.launch.scenarios.validate_scenarios`).
+    by `repro.launch.scenarios.validate_scenarios`).  Schema v5 adds the
+    required ``service`` section: finite positive block-vs-oneshot
+    timings/ratio, >= 3 multiplexed runs, and the kill/resume bit-identity
+    flag, which must be True (the timing ratio itself is recorded but not
+    thresholded — host timing noise is not a correctness failure).
     """
     if isinstance(obj, str):
         try:
@@ -310,6 +412,27 @@ def validate_artifact(obj) -> list[str]:
         errs.append("schema v4 artifact missing 'scenarios' section")
     else:
         errs.extend(scenarios_mod.validate_scenarios(obj["scenarios"]))
+    service = obj.get("service")
+    if not isinstance(service, dict):
+        errs.append("schema v5 artifact missing 'service' section")
+    else:
+        for field in ("oneshot_seconds", "blocked_seconds",
+                      "overhead_ratio"):
+            if not _is_pos(service.get(field)):
+                errs.append(f"service/{field}: bad value "
+                            f"{service.get(field)!r}")
+        for field in ("iters", "block_rounds"):
+            val = service.get(field)
+            if not isinstance(val, int) or val < 1:
+                errs.append(f"service/{field}: bad value {val!r}")
+        runs = service.get("multiplexed_runs")
+        if not isinstance(runs, int) or runs < 3:
+            errs.append(f"service/multiplexed_runs: need an int >= 3, "
+                        f"got {runs!r}")
+        if service.get("resumed_bit_identical") is not True:
+            errs.append("service/resumed_bit_identical: kill/resume was "
+                        "not bit-identical "
+                        f"({service.get('resumed_bit_identical')!r})")
     profiles = obj.get("profiles")
     if not isinstance(profiles, dict) or not profiles:
         return errs + ["missing/empty 'profiles'"]

@@ -1,0 +1,157 @@
+"""ExperimentService: multiplex many resumable runs over one process.
+
+The block-structured runtime (`repro.core.fed_runtime.Experiment.run_block`
+over an explicit `RunState`) turns a training run into a sequence of
+resumable steps.  This module adds the scheduler on top: a service accepts
+frozen `ExperimentSpec`s as jobs, round-robins one block per job per
+`step()`, and checkpoints every run at its own ``checkpoint_every``
+boundary under ``root/<run_id>/``.  Because every block boundary is a
+durable `RunState`, killing the process (or the machine) loses at most
+the in-flight block: a fresh service pointed at the same root resumes
+every run from its latest checkpoint and finishes bit-identically to the
+uninterrupted service — theta, loss curve, wall-clock log, and adaptive
+schedule alike (tests/test_service.py).
+
+    svc = ExperimentService("runs/")
+    svc.submit(spec_a, xs, ys, iterations=200, run_id="a")
+    svc.submit(spec_b, xs, ys, iterations=200, run_id="b")
+    results = svc.run_until_complete()     # {"a": FedResult, "b": ...}
+
+Checkpoint layout: ``root/<run_id>/ckpt_<rounds_done>.npz`` — atomic
+writes, numeric suffix ordering, spec provenance embedded per file
+(`repro.checkpoint.io`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Optional
+
+from repro.checkpoint import io as ckpt_io
+from repro.config import ExperimentSpec
+from repro.core.fed_runtime import Experiment
+from repro.core.run_state import RunState
+
+__all__ = ["ExperimentService", "ServiceRun"]
+
+
+@dataclasses.dataclass
+class ServiceRun:
+    """One submitted job: its experiment, live state, and destination."""
+    run_id: str
+    spec: ExperimentSpec
+    exp: Experiment
+    state: RunState
+    ckpt_dir: str
+    eval_fn: Optional[Callable] = None
+    eval_every: int = 10
+    result: object = None
+    resumed: bool = False          # True if submit() found a checkpoint
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class ExperimentService:
+    """Round-robin block scheduler over many concurrent resumable runs.
+
+    Each `submit` builds (or resumes) one run; each `step` advances the
+    next unfinished run by ONE block and checkpoints it, so N concurrent
+    runs interleave fairly regardless of their horizons.  All runs of
+    the same spec share compiled scans through their own `Experiment`
+    cache; the service itself holds no state outside `self.runs` and the
+    checkpoint root, so it is trivially restartable.
+    """
+
+    def __init__(self, root: str, *, mesh=None):
+        self.root = str(root)
+        self.mesh = mesh
+        self.runs: "dict[str, ServiceRun]" = {}
+        self._order: "list[str]" = []
+        self._cursor = 0
+
+    # ------------------------------------------------------------ submission
+    def submit(self, spec: "ExperimentSpec | dict", x_stack, y_stack,
+               iterations: int, *, run_id: Optional[str] = None,
+               n_realizations: Optional[int] = None,
+               eval_fn: Optional[Callable] = None, eval_every: int = 10,
+               nodes=None, rng=None) -> ServiceRun:
+        """Register a run; auto-resumes from ``root/<run_id>/`` when a
+        checkpoint already exists there (validating spec provenance).
+
+        ``run_id`` defaults to ``spec.run_id``, then to ``run<k>``; it
+        names the checkpoint directory, so resubmitting the same id
+        after a kill is exactly how a run is recovered.
+        """
+        from repro.api import build_experiment
+        if isinstance(spec, dict):
+            spec = ExperimentSpec.from_dict(spec)
+        rid = run_id or spec.run_id or f"run{len(self.runs)}"
+        if rid in self.runs:
+            raise ValueError(f"run_id {rid!r} already submitted")
+        if spec.checkpoint_every <= 0:
+            raise ValueError(
+                f"run {rid!r}: service jobs need spec.checkpoint_every > 0 "
+                "(a whole-horizon block would starve the other runs)")
+        exp = build_experiment(spec, x_stack, y_stack, nodes=nodes, rng=rng,
+                               mesh=self.mesh)
+        ckpt_dir = os.path.join(self.root, rid)
+        state = None
+        resumed = False
+        latest = ckpt_io.latest_checkpoint(ckpt_dir)
+        if latest is not None:
+            state = exp.restore_state(latest)
+            if state.iterations != int(iterations) or (
+                    (state.n_realizations or None)
+                    != (int(n_realizations) if n_realizations else None)):
+                raise ValueError(
+                    f"run {rid!r}: checkpoint {latest!r} does not match the "
+                    f"submitted horizon ({state.iterations} rounds x "
+                    f"{state.n_realizations} realizations vs {iterations} "
+                    f"x {n_realizations})")
+            resumed = True
+        if state is None:
+            state = exp.init_state(iterations,
+                                   n_realizations=n_realizations,
+                                   collect=eval_fn is not None)
+        run = ServiceRun(run_id=rid, spec=spec, exp=exp, state=state,
+                         ckpt_dir=ckpt_dir, eval_fn=eval_fn,
+                         eval_every=eval_every, resumed=resumed)
+        self.runs[rid] = run
+        self._order.append(rid)
+        if state.done:   # resumed a run that was already finished
+            run.result = exp.finish(state, eval_fn)
+        return run
+
+    # ------------------------------------------------------------ scheduling
+    @property
+    def pending(self) -> "list[str]":
+        return [rid for rid in self._order if not self.runs[rid].done]
+
+    def step(self) -> Optional[str]:
+        """Advance the next unfinished run by one block, checkpoint it,
+        and finish it if that block completed the run.  Returns the
+        run_id advanced, or None when everything is done."""
+        pending = self.pending
+        if not pending:
+            return None
+        rid = pending[self._cursor % len(pending)]
+        self._cursor += 1
+        run = self.runs[rid]
+        run.state = run.exp.run_block(run.state, eval_fn=run.eval_fn,
+                                      eval_every=run.eval_every)
+        run.exp.save_state(
+            os.path.join(run.ckpt_dir,
+                         f"{ckpt_io.CKPT_PREFIX}"
+                         f"{run.state.rounds_done:06d}.npz"),
+            run.state)
+        if run.state.done:
+            run.result = run.exp.finish(run.state, run.eval_fn)
+        return rid
+
+    def run_until_complete(self) -> dict:
+        """Drive every submitted run to completion; {run_id: result}."""
+        while self.step() is not None:
+            pass
+        return {rid: self.runs[rid].result for rid in self._order}

@@ -26,9 +26,10 @@ on model state, so the whole control loop runs *before* the training scan
 and the engine stays a single compiled program.
 """
 from repro.net.channel import CHANNEL_PROFILES, ChannelProfile  # noqa: F401
-from repro.net.trace import (NetworkTrace, generate_trace,  # noqa: F401
+from repro.net.trace import (NetworkTrace, TraceState,  # noqa: F401
+                             generate_trace, generate_trace_block,
                              sample_round_observations,
                              sample_round_times_traced)
 from repro.net.estimator import (AdaptiveController,  # noqa: F401
-                                 AdaptiveSchedule,
-                                 OnlineChannelEstimator)
+                                 AdaptiveSchedule, SegmentPlan,
+                                 OnlineChannelEstimator, plan_segment)

@@ -161,6 +161,43 @@ class OnlineChannelEstimator:
                 "p": self.p_hat.copy(), "avail": self.avail_hat.copy(),
                 "rounds_seen": self.rounds_seen}
 
+    # ------------------------------------------------------- checkpointing
+    def state_dict(self) -> dict:
+        """Everything needed to continue estimation bit-exactly: the
+        sufficient statistics, availability score, round counter, and the
+        windowed mode's ring buffers (stacked to (k, n) arrays)."""
+        return {
+            "beta": self.beta, "window": self.window,
+            "rounds_seen": int(self.rounds_seen),
+            "s_tau": self._s_tau.copy(), "s_ntr": self._s_ntr.copy(),
+            "s_comp": self._s_comp.copy(),
+            "avail_hat": self.avail_hat.copy(),
+            "win": {key: (np.stack(buf) if buf
+                          else np.zeros((0, self.n), np.float64))
+                    for key, buf in self._win.items()},
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Inverse of `state_dict`; the estimator must have been built
+        with the same smoothing configuration (beta/window)."""
+        if (float(state["beta"]) != self.beta
+                or state["window"] != self.window):
+            raise ValueError(
+                f"estimator state was produced with beta={state['beta']}, "
+                f"window={state['window']}; this estimator has "
+                f"beta={self.beta}, window={self.window}")
+        for attr, key in (("_s_tau", "s_tau"), ("_s_ntr", "s_ntr"),
+                          ("_s_comp", "s_comp"), ("avail_hat", "avail_hat")):
+            arr = np.asarray(state[key], np.float64)
+            if arr.shape != (self.n,):
+                raise ValueError(f"estimator state {key!r} has shape "
+                                 f"{arr.shape}, expected ({self.n},)")
+            setattr(self, attr, arr.copy())
+        self.rounds_seen = int(state["rounds_seen"])
+        self._win = {key: [np.asarray(row, np.float64).copy()
+                           for row in np.asarray(state["win"][key])]
+                     for key in self._win}
+
 
 @dataclasses.dataclass
 class AdaptiveSchedule:
@@ -188,6 +225,103 @@ class AdaptiveSchedule:
         return self.loads_blocks.shape[0]
 
 
+@dataclasses.dataclass
+class SegmentPlan:
+    """One contiguous segment of an adaptive run's control plan.
+
+    Produced by `plan_segment` for global rounds ``[r0, r1)``; the
+    per-round arrays are segment-local, ``block_idx`` indexes into this
+    segment's ``loads_blocks``/``gmask_blocks``, and ``controls`` carries
+    the live control values forward so the next segment continues exactly
+    where this one stopped.
+    """
+    times: np.ndarray                       # (r1-r0, n) float64 delays
+    active: np.ndarray                      # (r1-r0, n) float32 churn mask
+    block_idx: np.ndarray                   # (r1-r0,) int32, segment-local
+    t_star_r: np.ndarray                    # (r1-r0,) float32
+    n_wait_r: np.ndarray                    # (r1-r0,) int32
+    loads_blocks: np.ndarray                # (B_seg, n) float64
+    gmask_blocks: Optional[object]          # (B_seg, rows, L) jnp (coded)
+    estimates: list                         # one snapshot per sub-block
+    controls: dict                          # {"loads","t_star","n_wait"}
+
+
+def plan_segment(exp, estimator: OnlineChannelEstimator,
+                 trace_seg: NetworkTrace, r0: int, r1: int,
+                 controls: dict, rng: np.random.Generator) -> SegmentPlan:
+    """Plan global rounds ``[r0, r1)`` of an adaptive run incrementally.
+
+    `trace_seg` covers exactly this segment (local round 0 = global
+    ``r0``); `controls` holds the loads/deadline/wait-count in effect at
+    ``r0`` and `estimator` the telemetry folded in so far — together they
+    are the full control-plane state, so chaining segments reproduces the
+    one-shot plan bit-exactly as long as every segment boundary lands on
+    an ``adapt_every`` multiple (the runtime validates that).  Re-planning
+    happens at every global round that is a positive multiple of
+    ``adapt_every``, including ``r0`` itself for a resumed segment.
+    """
+    K = exp.adapt_every
+    n = exp.n
+    R_seg = int(r1) - int(r0)
+    if R_seg < 1:
+        raise ValueError(f"empty segment [{r0}, {r1})")
+    if trace_seg.rounds < R_seg:
+        raise ValueError(f"trace segment covers {trace_seg.rounds} rounds, "
+                         f"need {R_seg}")
+    coded = exp.step_kind == "adaptive_coded"
+
+    loads = np.asarray(controls["loads"], np.float64).copy()
+    t_star = controls.get("t_star")
+    n_wait = controls.get("n_wait")
+
+    times = np.zeros((R_seg, n))
+    active = np.zeros((R_seg, n), np.float32)
+    block_idx = np.zeros(R_seg, np.int32)
+    t_star_r = np.zeros(R_seg, np.float32)
+    n_wait_r = np.zeros(R_seg, np.int32)
+    loads_list, gmasks, estimates = [], [], []
+
+    b_local = -1
+    r = int(r0)
+    while r < r1:
+        if r > 0 and r % K == 0:
+            plan_b = exp.scheme_obj.replan(exp, estimator)
+            loads = np.asarray(plan_b.get("loads", loads), np.float64)
+            t_star = plan_b.get("t_star", t_star)
+            n_wait = plan_b.get("n_wait", n_wait)
+        b_local += 1
+        r_end = min(int(r1), (r // K + 1) * K)
+        if coded:
+            gmasks.append(exp.scheme_obj.gmask_for_loads(exp, loads))
+        # block delays consume the run's RNG sequentially, exactly like
+        # the static engine's one-shot pre-sampling
+        obs = sample_round_observations(
+            exp.nodes, loads, rng, trace_seg.slice(r - r0, r_end - r0))
+        estimator.update(obs)
+        lo, hi = r - r0, r_end - r0
+        times[lo:hi] = obs.total
+        active[lo:hi] = obs.active.astype(np.float32)
+        block_idx[lo:hi] = b_local
+        if t_star is not None:
+            t_star_r[lo:hi] = t_star
+        n_wait_r[lo:hi] = n_wait
+        loads_list.append(loads.copy())
+        estimates.append(estimator.snapshot())
+        r = r_end
+
+    gmask_blocks = None
+    if coded:
+        import jax.numpy as jnp
+        gmask_blocks = jnp.stack(gmasks)
+    return SegmentPlan(
+        times=times, active=active, block_idx=block_idx,
+        t_star_r=t_star_r, n_wait_r=n_wait_r,
+        loads_blocks=np.stack(loads_list), gmask_blocks=gmask_blocks,
+        estimates=estimates,
+        controls={"loads": loads.copy(), "t_star": t_star,
+                  "n_wait": n_wait})
+
+
 class AdaptiveController:
     """Blockwise re-estimation + re-allocation ahead of the compiled scan."""
 
@@ -203,59 +337,21 @@ class AdaptiveController:
             exp.nodes, **exp.scheme_params_estimator_kwargs())
 
     def plan(self, iterations: int) -> AdaptiveSchedule:
+        """One-shot plan for a whole run: a single segment from round 0
+        seeded with the scheme's setup-time controls."""
         exp = self.exp
         R = int(iterations)
         if self.trace.rounds < R:
             raise ValueError(f"trace covers {self.trace.rounds} rounds, "
                              f"need {R}")
-        K = exp.adapt_every
-        B = -(-R // K)
-        n = exp.n
-        coded = exp.step_kind == "adaptive_coded"
-
-        loads = np.asarray(exp.loads, np.float64).copy()
-        t_star = exp.t_star
-        n_wait = exp.n_wait
-
-        times = np.zeros((R, n))
-        active = np.zeros((R, n), np.float32)
-        block_idx = np.zeros(R, np.int32)
-        t_star_r = np.zeros(R, np.float32)
-        n_wait_r = np.zeros(R, np.int32)
-        loads_blocks = np.zeros((B, n))
-        gmasks = []
-        estimates = []
-
-        for b in range(B):
-            r0, r1 = b * K, min((b + 1) * K, R)
-            if b > 0:
-                plan_b = exp.scheme_obj.replan(exp, self.estimator)
-                loads = np.asarray(plan_b.get("loads", loads), np.float64)
-                t_star = plan_b.get("t_star", t_star)
-                n_wait = plan_b.get("n_wait", n_wait)
-            if coded:
-                gmasks.append(exp.scheme_obj.gmask_for_loads(exp, loads))
-            # block delays consume exp.rng sequentially, exactly like the
-            # static engine's one-shot pre-sampling
-            obs = sample_round_observations(
-                exp.nodes, loads, exp.rng, self.trace.slice(r0, r1))
-            self.estimator.update(obs)
-            times[r0:r1] = obs.total
-            active[r0:r1] = obs.active.astype(np.float32)
-            block_idx[r0:r1] = b
-            if t_star is not None:
-                t_star_r[r0:r1] = t_star
-            n_wait_r[r0:r1] = n_wait
-            loads_blocks[b] = loads
-            estimates.append(self.estimator.snapshot())
-
+        seg = plan_segment(exp, self.estimator, self.trace, 0, R,
+                           exp.scheme_obj.initial_controls(exp), exp.rng)
         sched = AdaptiveSchedule(
-            times=times, active=active, block_idx=block_idx,
-            loads_blocks=loads_blocks, estimates=estimates)
-        if coded:
-            import jax.numpy as jnp
-            sched.t_star = t_star_r
-            sched.gmask_blocks = jnp.stack(gmasks)
+            times=seg.times, active=seg.active, block_idx=seg.block_idx,
+            loads_blocks=seg.loads_blocks, estimates=seg.estimates)
+        if exp.step_kind == "adaptive_coded":
+            sched.t_star = seg.t_star_r
+            sched.gmask_blocks = seg.gmask_blocks
         else:
-            sched.n_wait = n_wait_r
+            sched.n_wait = seg.n_wait_r
         return sched

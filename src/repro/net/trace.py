@@ -2,7 +2,11 @@
 
 `generate_trace` rolls a `ChannelProfile` forward for a whole training
 run, producing dense ``(rounds, n)`` state tensors (erasure probabilities,
-tau/mu multipliers, availability).  `sample_round_observations` then draws
+tau/mu multipliers, availability).  Under the hood it is a single-block
+call of `generate_trace_block`, which advances an explicit resumable
+`TraceState` (RNG bit-generator state + one recurrence vector per
+dynamic) so the block-structured runtime can checkpoint a trace mid-run
+and continue it bit-exactly.  `sample_round_observations` then draws
 the per-round delays *through* that trace with the same three-draw layout
 as `delay_model.sample_round_times` — one geometric draw per link
 direction plus one exponential compute tail — so the batched engine keeps
@@ -57,19 +61,60 @@ class NetworkTrace:
             active=self.active[r0:r1], profile=self.profile)
 
 
-def generate_trace(nodes: "list[NodeDelayParams]", profile: ChannelProfile,
-                   rounds: int, rng: np.random.Generator) -> NetworkTrace:
-    """Roll the channel profile forward `rounds` rounds for all nodes.
+@dataclasses.dataclass
+class TraceState:
+    """Resumable cursor of a rolling channel trace.
+
+    Every dynamic `generate_trace` rolls forward is a first-order
+    recurrence over the rounds axis, so one ``(n,)`` vector per dynamic —
+    plus the RNG bit-generator state and the global round cursor — is
+    sufficient to continue the trace from any round boundary.  Chaining
+    `generate_trace_block` calls through this state yields, for a fixed
+    block partition, exactly the trajectory of the per-block draws; a
+    single block covering the whole horizon is bit-identical to the
+    one-shot `generate_trace`.
+    """
+    rng_state: dict         # numpy BitGenerator state (JSON-serializable)
+    rounds_done: int        # global rounds already generated
+    ge_bad: np.ndarray      # (n,) bool Gilbert–Elliott bad-state flags
+    shadow_x: np.ndarray    # (n,) raw AR(1) shadowing in dB (pre-trend)
+    drift_g: np.ndarray     # (n,) log-domain compute-drift walk position
+    churn_active: np.ndarray  # (n,) bool availability flags
+
+    @classmethod
+    def init(cls, n: int, rng: np.random.Generator) -> "TraceState":
+        """Fresh state at round 0 (good links, nominal speed, all present),
+        consuming `rng`'s current position as the stream start."""
+        return cls(rng_state=rng.bit_generator.state, rounds_done=0,
+                   ge_bad=np.zeros(n, bool), shadow_x=np.zeros(n),
+                   drift_g=np.zeros(n), churn_active=np.ones(n, bool))
+
+
+def generate_trace_block(nodes: "list[NodeDelayParams]",
+                         profile: ChannelProfile, rounds: int,
+                         state: TraceState
+                         ) -> "tuple[NetworkTrace, TraceState]":
+    """Roll the profile forward `rounds` more rounds from `state`.
 
     Vectorized over nodes; the only Python-level loop is the O(rounds)
     recurrence each dynamic needs (Markov states, AR(1), random walk).
-    The RNG layout is fixed — four (rounds, n) blocks drawn uniformly in
-    one order — so the realization of one dynamic is invariant to the
-    others being toggled (controlled comparisons at equal seed).
+    The RNG layout is fixed — four (rounds, n) blocks drawn in one order
+    — so the realization of one dynamic is invariant to the others being
+    toggled (controlled comparisons at equal seed).  Round 0 of the whole
+    run (``state.rounds_done == 0``) gets the stationary/nominal initial
+    conditions; later blocks continue their recurrences seamlessly.
+
+    Returns the block's trace and the advanced state; `state` itself is
+    not mutated (checkpointing keeps the pre-block snapshot valid).
     """
     prm = stack_node_params(nodes)
     n = len(nodes)
     R = int(rounds)
+    if R < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+    r0 = int(state.rounds_done)
+    rng = np.random.default_rng()
+    rng.bit_generator.state = state.rng_state
     # fixed draw layout (see docstring): GE uniforms, shadowing normals,
     # drift normals, churn uniforms
     ge_u = rng.random((R, n))
@@ -78,9 +123,10 @@ def generate_trace(nodes: "list[NodeDelayParams]", profile: ChannelProfile,
     churn_u = rng.random((R, n))
 
     # --- Gilbert–Elliott erasure states -> absolute per-round erasure probs
+    ge_bad = state.ge_bad
     if profile.has_erasure_dynamics:
-        bad = np.zeros((R, n), bool)          # round 0 starts in good state
-        prev = np.zeros(n, bool)
+        bad = np.zeros((R, n), bool)
+        prev = state.ge_bad.copy()            # round 0 starts in good state
         for t in range(R):
             prev = np.where(prev, ge_u[t] >= profile.ge_p_bg,
                             ge_u[t] < profile.ge_p_gb)
@@ -88,6 +134,7 @@ def generate_trace(nodes: "list[NodeDelayParams]", profile: ChannelProfile,
         scale = np.where(bad, profile.ge_bad_scale, 1.0)
         p_down = np.clip(prm["p_down"] * scale, 0.0, profile.p_cap)
         p_up = np.clip(prm["p_up"] * scale, 0.0, profile.p_cap)
+        ge_bad = prev
     else:
         p_down = np.broadcast_to(prm["p_down"], (R, n)).copy()
         p_up = np.broadcast_to(prm["p_up"], (R, n)).copy()
@@ -95,14 +142,20 @@ def generate_trace(nodes: "list[NodeDelayParams]", profile: ChannelProfile,
     # --- log-normal shadowing (AR(1) in dB) + deterministic trend,
     # optionally MCS-quantized.  The dB process is *attenuation*: positive
     # values slow the link in both the continuous and the MCS mapping.
+    shadow_x = state.shadow_x
     if profile.has_shadowing:
         sigma, rho = profile.shadow_sigma_db, profile.shadow_rho
         x = np.zeros((R, n))
-        x[0] = sigma * shadow_eps[0]          # start at the stationary law
         innov = np.sqrt(max(0.0, 1.0 - rho * rho)) * sigma
-        for t in range(1, R):
-            x[t] = rho * x[t - 1] + innov * shadow_eps[t]
-        x = x + profile.tau_trend_db * np.arange(R)[:, None]
+        prev = state.shadow_x
+        for t in range(R):
+            if r0 + t == 0:
+                x[t] = sigma * shadow_eps[t]  # start at the stationary law
+            else:
+                x[t] = rho * prev + innov * shadow_eps[t]
+            prev = x[t]
+        shadow_x = x[-1].copy()               # raw (pre-trend) carry
+        x = x + profile.tau_trend_db * np.arange(r0, r0 + R)[:, None]
         if profile.mcs:
             # attenuation lowers SNR; rate hops along the CQI ladder
             eff0 = mcs_efficiency(profile.mcs_snr0_db)
@@ -113,31 +166,61 @@ def generate_trace(nodes: "list[NodeDelayParams]", profile: ChannelProfile,
         tau_mult = np.ones((R, n))
 
     # --- bounded compute-speed random walk (log domain)
+    drift_g = state.drift_g
     if profile.has_compute_drift:
         lo, hi = np.log(profile.mu_min), np.log(profile.mu_max)
         step = np.log1p(profile.mu_drift_rate)
-        g = np.zeros((R, n))                  # round 0 at nominal speed
-        for t in range(1, R):
-            g[t] = np.clip(
-                g[t - 1] + step + profile.mu_drift_sigma * drift_eps[t],
-                lo, hi)
+        g = np.zeros((R, n))
+        prev = state.drift_g
+        for t in range(R):
+            if r0 + t == 0:
+                g[t] = 0.0                    # round 0 at nominal speed
+            else:
+                g[t] = np.clip(
+                    prev + step + profile.mu_drift_sigma * drift_eps[t],
+                    lo, hi)
+            prev = g[t]
         mu_mult = np.exp(g)
+        drift_g = g[-1].copy()
     else:
         mu_mult = np.ones((R, n))
 
     # --- dropout/rejoin churn
+    churn_active = state.churn_active
     if profile.has_churn:
-        active = np.ones((R, n), bool)        # round 0 everyone present
-        prev = np.ones(n, bool)
-        for t in range(1, R):
-            prev = np.where(prev, churn_u[t] >= profile.dropout_prob,
-                            churn_u[t] < profile.rejoin_prob)
+        active = np.ones((R, n), bool)
+        prev = state.churn_active.copy()      # round 0 everyone present
+        for t in range(R):
+            if r0 + t > 0:
+                prev = np.where(prev, churn_u[t] >= profile.dropout_prob,
+                                churn_u[t] < profile.rejoin_prob)
             active[t] = prev
+        churn_active = prev
     else:
         active = np.ones((R, n), bool)
 
-    return NetworkTrace(mu_mult=mu_mult, tau_mult=tau_mult, p_down=p_down,
-                        p_up=p_up, active=active, profile=profile)
+    trace = NetworkTrace(mu_mult=mu_mult, tau_mult=tau_mult, p_down=p_down,
+                         p_up=p_up, active=active, profile=profile)
+    new_state = TraceState(rng_state=rng.bit_generator.state,
+                           rounds_done=r0 + R, ge_bad=ge_bad,
+                           shadow_x=shadow_x, drift_g=drift_g,
+                           churn_active=churn_active)
+    return trace, new_state
+
+
+def generate_trace(nodes: "list[NodeDelayParams]", profile: ChannelProfile,
+                   rounds: int, rng: np.random.Generator) -> NetworkTrace:
+    """Roll the channel profile forward `rounds` rounds for all nodes.
+
+    One-shot wrapper over `generate_trace_block`: a fresh `TraceState` at
+    round 0 plus a single block covering the whole horizon.  The caller's
+    generator is advanced past the consumed draws, exactly as if the
+    draws had been made on it directly.
+    """
+    trace, end = generate_trace_block(nodes, profile, rounds,
+                                      TraceState.init(len(nodes), rng))
+    rng.bit_generator.state = end.rng_state
+    return trace
 
 
 @dataclasses.dataclass

@@ -15,7 +15,9 @@ TINY = dict(n_clients=4, l=8, q=12, c=2, iters=5, realizations=2,
             profiles={"uniform": dict(rate_decay=1.0, mac_decay=1.0),
                       "paper": dict(rate_decay=0.95, mac_decay=0.8)},
             scenario_kwargs=dict(n_clients=4, l=8, q=8, c=2, iters=12,
-                                 adapt_every=4))
+                                 adapt_every=4),
+            service_kwargs=dict(n_clients=4, l=8, q=8, c=2, iters=8,
+                                block=4))
 
 
 @pytest.fixture(scope="module")
@@ -71,6 +73,14 @@ def test_artifact_contents(artifact):
         assert case["adaptive_speedup"] > 0
         assert case["static"]["time_to_target"] > 0
         assert case["adaptive"]["time_to_target"] > 0
+    # schema v5: the RunState block-restructuring + service resume section
+    service = loaded["service"]
+    assert service["multiplexed_runs"] >= 3
+    assert service["resumed_bit_identical"] is True
+    assert service["oneshot_seconds"] > 0
+    assert service["blocked_seconds"] > 0
+    assert service["overhead_ratio"] > 0
+    assert service["iters"] % service["block_rounds"] == 0
 
 
 def test_newly_registered_scheme_lands_in_artifact(tmp_path):
@@ -123,6 +133,13 @@ def test_ideal_round_time_is_naive_lower_bound(artifact):
         adaptive_speedup=-2.0), "adaptive_speedup"),
     (lambda d: d["scenarios"]["cases"]["speedup_drift"]["static"].update(
         time_to_target=float("nan")), "time_to_target"),
+    (lambda d: d.pop("service"), "service"),
+    (lambda d: d["service"].update(multiplexed_runs=2), "multiplexed_runs"),
+    (lambda d: d["service"].update(resumed_bit_identical=False),
+     "resumed_bit_identical"),
+    (lambda d: d["service"].update(overhead_ratio=-1.0), "overhead_ratio"),
+    (lambda d: d["service"].update(oneshot_seconds=float("nan")),
+     "oneshot_seconds"),
 ])
 def test_validator_rejects_malformed(artifact, mutate, frag):
     result, _ = artifact

@@ -1,15 +1,14 @@
 """Declarative experiment API: ExperimentSpec round-trip, scheme registry,
-and the deprecated FederatedSimulation shim.
+and the removal of the FederatedSimulation shim.
 
 The contract under test: (1) a spec survives spec -> dict -> JSON -> spec
-bit-exactly, and equal specs build bit-equal step constants; (2) the old
-kwargs constructor is a thin shim over `Experiment` — it emits a
-DeprecationWarning and produces IDENTICAL theta trajectories on both
-kernel backends; (3) every registered scheme (including the new
+bit-exactly, equal specs build bit-equal step constants, and a revived
+spec produces IDENTICAL theta trajectories on both kernel backends;
+(2) the removed kwargs constructor is a stub whose error points at the
+spec entrypoint; (3) every registered scheme (including the new
 partial-redundancy one) runs through `repro.api.build_experiment`.
 """
 import json
-import warnings
 
 import numpy as np
 import pytest
@@ -123,34 +122,37 @@ def test_build_experiment_accepts_dict_spec():
 
 
 # ---------------------------------------------------------------------------
-# Deprecated shim equivalence (acceptance criterion)
+# Removed shim + spec-path equivalence (acceptance criterion)
 # ---------------------------------------------------------------------------
 
-def test_shim_emits_deprecation_warning():
+def test_removed_shim_raises_pointed_error():
+    """The kwargs constructor is gone; the stub's error names the
+    replacement entrypoint."""
     xs, ys = _data()
-    with pytest.warns(DeprecationWarning, match="FederatedSimulation"):
+    with pytest.raises(TypeError, match="build_experiment"):
         fed_runtime.FederatedSimulation(
             xs, ys, FLConfig(n_clients=6), TrainConfig(), scheme="naive")
 
 
 @pytest.mark.parametrize("kernel_backend", ["xla", "pallas"])
 @pytest.mark.parametrize("scheme", ["coded", "naive", "greedy"])
-def test_shim_trajectory_identical_to_spec_path(scheme, kernel_backend):
-    """Old kwargs entrypoint == spec entrypoint, bit-for-bit, on both
-    kernel backends (they share one code path by construction)."""
+def test_revived_spec_trajectory_identical(scheme, kernel_backend):
+    """A spec revived from its serialized dict == the original spec,
+    bit-for-bit, on both kernel backends (the trajectory is a pure
+    function of the frozen spec — the equivalence the old shim tests
+    pinned, now phrased without the removed kwargs path)."""
     xs, ys = _data()
     fl = FLConfig(n_clients=6, delta=0.25, psi=0.3, seed=3)
     tc = TrainConfig(learning_rate=0.5, l2_reg=1e-5, lr_decay_epochs=(5,))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        old = fed_runtime.FederatedSimulation(
-            xs, ys, fl, tc, scheme=scheme, kernel_backend=kernel_backend)
-    new = api.build_experiment(
-        ExperimentSpec(fl=fl, train=tc, scheme=scheme,
-                       kernel_backend=kernel_backend), xs, ys)
+    spec = ExperimentSpec(fl=fl, train=tc, scheme=scheme,
+                          kernel_backend=kernel_backend)
+    revived = ExperimentSpec.from_dict(
+        json.loads(json.dumps(spec.to_dict())))
     trace = lambda th: (float(np.abs(np.asarray(th)).sum()), 0.0)
-    res_old = old.run(8, eval_fn=trace, eval_every=1)
-    res_new = new.run(8, eval_fn=trace, eval_every=1)
+    res_old = api.build_experiment(spec, xs, ys).run(
+        8, eval_fn=trace, eval_every=1)
+    res_new = api.build_experiment(revived, xs, ys).run(
+        8, eval_fn=trace, eval_every=1)
     np.testing.assert_array_equal(np.asarray(res_old.theta),
                                   np.asarray(res_new.theta))
     for ho, hn in zip(res_old.history, res_new.history):

@@ -1,0 +1,309 @@
+"""Bit-identical checkpoint/resume of block-structured runs.
+
+The acceptance contract of the RunState refactor: save a run's state at
+any block boundary, kill the process, restore in a FRESH Experiment, and
+finishing the run produces results bit-identical to the uninterrupted
+blocked run — theta, wall-clock log, returned counts, loss curve,
+privacy_eps, and (adaptive family) the assembled schedule.  Covered for
+the stationary, traced-channel, and adaptive paths on both kernel
+backends, plus run_multi at both its granularities, the trace-stream
+counter regression (the former hidden ``_next_trace_rng`` call index now
+lives in RunState), and the hardened checkpoint/io error contract.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint import io as ckpt_io
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
+
+
+def _data(n=6, l=16, q=24, c=3, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n, l, q)).astype(np.float32) * 0.2
+    ys = rng.normal(size=(n, l, c)).astype(np.float32)
+    return xs, ys
+
+
+def _spec(scheme="coded", **over):
+    base = dict(
+        fl=FLConfig(n_clients=6, delta=0.25, psi=0.3, seed=3),
+        train=TrainConfig(learning_rate=0.5, l2_reg=1e-5,
+                          lr_decay_epochs=(5,)),
+        scheme=scheme, checkpoint_every=4)
+    base.update(over)
+    return ExperimentSpec(**base)
+
+
+def _eval():
+    return lambda th: (float(np.abs(np.asarray(th)).sum()), 0.0)
+
+
+def _assert_same_result(a, b):
+    np.testing.assert_array_equal(np.asarray(a.theta), np.asarray(b.theta))
+    assert a.privacy_eps == b.privacy_eps
+    for ha, hb in zip(a.history, b.history):
+        assert ha.wall_clock == hb.wall_clock
+        assert ha.returned == hb.returned
+        assert (ha.loss == hb.loss
+                or (np.isnan(ha.loss) and np.isnan(hb.loss)))
+
+
+CASES = {
+    "coded": dict(scheme="coded"),
+    "coded_channel": dict(scheme="coded", channel_profile="drift_churn"),
+    "adaptive_coded": dict(scheme="adaptive_coded",
+                           channel_profile="drift_churn", adapt_every=2),
+    "adaptive_greedy": dict(scheme="adaptive_greedy",
+                            channel_profile="drift_churn", adapt_every=2),
+}
+
+
+@pytest.mark.parametrize("kernel_backend", ["xla", "pallas"])
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_kill_and_resume_bit_identical(case, kernel_backend, tmp_path):
+    """Save at the first block boundary (simulated kill: the restoring
+    Experiment is built from scratch) -> resume -> finish == the
+    uninterrupted blocked run, bit for bit."""
+    xs, ys = _data()
+    spec = _spec(kernel_backend=kernel_backend, **CASES[case])
+    ev = _eval()
+
+    control = api.build_experiment(spec, xs, ys).run(
+        12, eval_fn=ev, eval_every=1)
+
+    interrupted = api.build_experiment(spec, xs, ys)
+    state = interrupted.init_state(12, collect=True)
+    state = interrupted.run_block(state, eval_fn=ev, eval_every=1)
+    assert state.rounds_done == 4
+    path = interrupted.save_state(
+        str(tmp_path / f"{ckpt_io.CKPT_PREFIX}000004.npz"), state)
+    assert os.path.exists(path)
+    del interrupted, state       # the kill
+
+    resumed = api.build_experiment(spec, xs, ys).run(
+        12, eval_fn=ev, eval_every=1, checkpoint_dir=str(tmp_path),
+        resume=True)
+    _assert_same_result(control, resumed)
+
+
+def test_adaptive_schedule_survives_resume(tmp_path):
+    """The assembled AdaptiveSchedule (loads trajectory, deadlines,
+    estimator snapshots) is identical between control and resumed run."""
+    xs, ys = _data()
+    spec = _spec("adaptive_coded", channel_profile="drift_churn",
+                 adapt_every=2)
+    exp_a = api.build_experiment(spec, xs, ys)
+    exp_a.run(8)
+    sched_a = exp_a.last_schedule
+
+    exp_b = api.build_experiment(spec, xs, ys)
+    state = exp_b.run_block(exp_b.init_state(8))
+    exp_b.save_state(str(tmp_path / f"{ckpt_io.CKPT_PREFIX}000004.npz"),
+                     state)
+    exp_c = api.build_experiment(spec, xs, ys)
+    exp_c.run(8, checkpoint_dir=str(tmp_path), resume=True)
+    sched_c = exp_c.last_schedule
+
+    assert sched_a.n_blocks == sched_c.n_blocks
+    np.testing.assert_array_equal(sched_a.loads_blocks,
+                                  sched_c.loads_blocks)
+    np.testing.assert_array_equal(sched_a.times, sched_c.times)
+    np.testing.assert_array_equal(sched_a.t_star, sched_c.t_star)
+    np.testing.assert_array_equal(np.asarray(sched_a.gmask_blocks),
+                                  np.asarray(sched_c.gmask_blocks))
+    for ea, ec in zip(sched_a.estimates, sched_c.estimates):
+        for key in ("mu", "tau", "p", "avail"):
+            np.testing.assert_array_equal(ea[key], ec[key])
+        assert ea["rounds_seen"] == ec["rounds_seen"]
+
+
+@pytest.mark.parametrize("channel", [None, "drift_churn"])
+def test_run_multi_kill_and_resume(channel, tmp_path):
+    """run_multi resumes at its block granularity: all-realization round
+    blocks (stationary) or one-realization blocks (traced)."""
+    xs, ys = _data()
+    spec = _spec("coded", channel_profile=channel, checkpoint_every=3)
+    control = api.build_experiment(spec, xs, ys).run_multi(6, 3)
+
+    exp_b = api.build_experiment(spec, xs, ys)
+    state = exp_b.run_block(exp_b.init_state(6, n_realizations=3))
+    exp_b.save_state(
+        str(tmp_path / f"{ckpt_io.CKPT_PREFIX}{state.rounds_done:06d}.npz"),
+        state)
+    resumed = api.build_experiment(spec, xs, ys).run_multi(
+        6, 3, checkpoint_dir=str(tmp_path), resume=True)
+
+    np.testing.assert_array_equal(np.asarray(control.theta),
+                                  np.asarray(resumed.theta))
+    np.testing.assert_array_equal(control.wall_clock, resumed.wall_clock)
+    np.testing.assert_array_equal(control.returned, resumed.returned)
+
+
+def test_trace_stream_counter_lives_in_state(tmp_path):
+    """Regression for the folded-in `_next_trace_rng` counter: restoring
+    an old state replays its ORIGINAL trace stream even after the same
+    Experiment instance has since started other runs (which advance the
+    instance-level reservation cursor)."""
+    xs, ys = _data()
+    spec = _spec("coded", channel_profile="drift_churn")
+    exp = api.build_experiment(spec, xs, ys)
+    state0 = exp.init_state(8)
+    path = exp.save_state(
+        str(tmp_path / f"{ckpt_io.CKPT_PREFIX}000000.npz"), state0)
+    immediate = exp._drive(state0, None)
+
+    # burn more trace streams + RNG draws on the same instance
+    exp.run(8)
+    assert exp._trace_calls >= 2
+
+    replayed = exp.restore_state(path)
+    assert replayed.trace_call == state0.trace_call
+    replayed = exp._drive(replayed, None)
+    np.testing.assert_array_equal(np.asarray(immediate.theta),
+                                  np.asarray(replayed.theta))
+    np.testing.assert_array_equal(immediate.t_rounds, replayed.t_rounds)
+
+
+def test_restore_bumps_reservation_past_checkpoint(tmp_path):
+    """A fresh Experiment that restores a run must hand NEW runs trace
+    streams disjoint from the restored reservation."""
+    xs, ys = _data()
+    spec = _spec("coded", channel_profile="drift_churn")
+    exp_a = api.build_experiment(spec, xs, ys)
+    state = exp_a.init_state(6, n_realizations=3)    # reserves 3 streams
+    path = exp_a.save_state(
+        str(tmp_path / f"{ckpt_io.CKPT_PREFIX}000000.npz"), state)
+
+    exp_b = api.build_experiment(spec, xs, ys)
+    restored = exp_b.restore_state(path)
+    assert exp_b._trace_calls == restored.trace_call + 3
+    fresh = exp_b.init_state(6)
+    assert fresh.trace_call == restored.trace_call + 3
+
+
+def test_checkpoint_every_partitioning_is_self_consistent():
+    """Different checkpoint_every values are different (equally valid)
+    stream partitions; equal partitions agree bit-exactly."""
+    xs, ys = _data()
+    r4a = api.build_experiment(_spec(checkpoint_every=4), xs, ys).run(12)
+    r4b = api.build_experiment(_spec(checkpoint_every=4), xs, ys).run(12)
+    _assert_same_result(r4a, r4b)
+    r0 = api.build_experiment(_spec(checkpoint_every=0), xs, ys).run(12)
+    np.testing.assert_array_equal(np.asarray(r0.theta), np.asarray(
+        api.build_experiment(_spec(checkpoint_every=0), xs, ys)
+        .run(12).theta))
+
+
+def test_run_block_validation_errors(tmp_path):
+    xs, ys = _data()
+    exp = api.build_experiment(_spec(), xs, ys)
+    state = exp.init_state(4)
+    with pytest.raises(ValueError, match="collect"):
+        exp.run_block(state, eval_fn=_eval())
+    done = exp._drive(state, None)
+    with pytest.raises(ValueError, match="complete"):
+        exp.run_block(done)
+    with pytest.raises(ValueError, match="complete"):
+        exp.finish(state)      # original state: 0/4 rounds
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        exp.run(4, resume=True)
+    with pytest.raises(ValueError, match="iterations"):
+        exp.init_state(0)
+
+
+def test_checkpoint_requires_batched_engine():
+    with pytest.raises(ValueError, match="batched"):
+        _spec(engine="legacy", checkpoint_every=4)
+    xs, ys = _data()
+    exp = api.build_experiment(_spec(engine="legacy", checkpoint_every=0),
+                               xs, ys)
+    with pytest.raises(ValueError, match="batched"):
+        exp.run(4, checkpoint_dir="/tmp/nope")
+
+
+def test_checkpoint_every_must_align_with_adapt_every():
+    xs, ys = _data()
+    with pytest.raises(ValueError, match="adapt_every"):
+        api.build_experiment(
+            _spec("adaptive_coded", adapt_every=3, checkpoint_every=4),
+            xs, ys)
+
+
+def test_provenance_mismatch_rejected(tmp_path):
+    """A checkpoint from one spec cannot be resumed by another."""
+    xs, ys = _data()
+    exp_a = api.build_experiment(_spec("coded"), xs, ys)
+    path = exp_a.save_state(
+        str(tmp_path / f"{ckpt_io.CKPT_PREFIX}000000.npz"),
+        exp_a.init_state(4))
+    exp_b = api.build_experiment(_spec("greedy"), xs, ys)
+    with pytest.raises(ValueError, match="provenance"):
+        exp_b.restore_state(path)
+
+
+def test_mode_mismatch_rejected(tmp_path):
+    xs, ys = _data()
+    exp = api.build_experiment(_spec("coded"), xs, ys)
+    exp.save_state(str(tmp_path / f"{ckpt_io.CKPT_PREFIX}000000.npz"),
+                   exp.init_state(4, n_realizations=2))
+    exp2 = api.build_experiment(_spec("coded"), xs, ys)
+    with pytest.raises(ValueError, match="run_multi"):
+        exp2.run(4, checkpoint_dir=str(tmp_path), resume=True)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/io hardening
+# ---------------------------------------------------------------------------
+
+def test_restore_rejects_missing_and_extra_keys(tmp_path):
+    tree = {"a": np.ones((2, 3), np.float32), "b": np.zeros(4, np.float32)}
+    path = str(tmp_path / "t.npz")
+    ckpt_io.save(path, tree)
+    with pytest.raises(ValueError, match="'b'"):
+        ckpt_io.restore(path, {"a": np.zeros((2, 3), np.float32)})
+    with pytest.raises(ValueError, match="absent from like_tree"):
+        ckpt_io.restore(path, {"a": tree["a"]})
+    with pytest.raises(ValueError, match="shape"):
+        ckpt_io.restore(path, {"a": np.zeros((3, 2), np.float32),
+                               "b": tree["b"]})
+
+
+def test_restore_shape_error_names_key_and_shapes(tmp_path):
+    path = str(tmp_path / "t.npz")
+    ckpt_io.save(path, {"theta": np.ones((2, 3), np.float32)})
+    with pytest.raises(ValueError) as err:
+        ckpt_io.restore(path, {"theta": np.zeros((5, 7), np.float32)})
+    msg = str(err.value)
+    assert "theta" in msg and "(2, 3)" in msg and "(5, 7)" in msg
+
+
+def test_state_payload_round_trip_and_meta_required(tmp_path):
+    arrays = {"x": np.arange(6.0).reshape(2, 3),
+              "nested/y": np.ones(3, bool)}
+    meta = {"cursor": 7, "rng": {"state": 123}}
+    path = ckpt_io.save_state(str(tmp_path / "s.npz"), arrays, meta)
+    got_arrays, got_meta = ckpt_io.restore_state(path)
+    assert got_meta == meta
+    for key in arrays:
+        np.testing.assert_array_equal(got_arrays[key], arrays[key])
+    with pytest.raises(ValueError, match="reserved"):
+        ckpt_io.save_state(str(tmp_path / "bad.npz"),
+                           {"__meta__": np.zeros(1)}, {})
+    # a plain tree checkpoint is not a state payload
+    ckpt_io.save(str(tmp_path / "plain.npz"), {"a": np.zeros(2)})
+    with pytest.raises(ValueError, match="__meta__"):
+        ckpt_io.restore_state(str(tmp_path / "plain.npz"))
+
+
+def test_latest_checkpoint_orders_numerically(tmp_path):
+    for step in (4, 12, 8):
+        ckpt_io.save_state(
+            str(tmp_path / f"{ckpt_io.CKPT_PREFIX}{step:06d}.npz"),
+            {"x": np.zeros(1)}, {"step": step})
+    (tmp_path / "notes.txt").write_text("ignore me")
+    latest = ckpt_io.latest_checkpoint(str(tmp_path))
+    assert latest.endswith(f"{ckpt_io.CKPT_PREFIX}000012.npz")
+    assert ckpt_io.latest_checkpoint(str(tmp_path / "empty")) is None

@@ -1,0 +1,158 @@
+"""ExperimentService: multiplexed block scheduling with durable resume.
+
+Contract: N concurrent runs interleaved block-by-block produce results
+bit-identical to running each spec alone (blocks only read their own
+RunState — no cross-run leakage through the shared process); killing the
+service loses at most the in-flight block, and a fresh service pointed
+at the same checkpoint root finishes every run bit-identically.
+"""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint import io as ckpt_io
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
+from repro.launch.service import ExperimentService
+
+
+def _data(n=6, l=16, q=24, c=3, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n, l, q)).astype(np.float32) * 0.2
+    ys = rng.normal(size=(n, l, c)).astype(np.float32)
+    return xs, ys
+
+
+def _spec(scheme="coded", **over):
+    base = dict(
+        fl=FLConfig(n_clients=6, delta=0.25, psi=0.3, seed=3),
+        train=TrainConfig(learning_rate=0.5, l2_reg=1e-5,
+                          lr_decay_epochs=(5,)),
+        scheme=scheme, checkpoint_every=4)
+    base.update(over)
+    return ExperimentSpec(**base)
+
+
+def _three_specs():
+    """Three heterogeneous jobs: static coded, greedy with a different
+    block size, and an adaptive traced-channel run."""
+    return {
+        "a": _spec("coded"),
+        "b": _spec("greedy", checkpoint_every=3),
+        "c": _spec("adaptive_coded", channel_profile="drift_churn",
+                   adapt_every=2),
+    }
+
+
+def test_multiplexed_runs_match_individual(tmp_path):
+    xs, ys = _data()
+    svc = ExperimentService(str(tmp_path))
+    for rid, spec in _three_specs().items():
+        svc.submit(spec, xs, ys, 12, run_id=rid)
+    assert len(svc.pending) == 3
+    results = svc.run_until_complete()
+    assert not svc.pending
+    for rid, spec in _three_specs().items():
+        solo = api.build_experiment(spec, xs, ys).run(12)
+        np.testing.assert_array_equal(np.asarray(solo.theta),
+                                      np.asarray(results[rid].theta))
+        assert [h.wall_clock for h in solo.history] \
+            == [h.wall_clock for h in results[rid].history]
+
+
+def test_step_round_robins_across_runs(tmp_path):
+    xs, ys = _data()
+    svc = ExperimentService(str(tmp_path))
+    for rid, spec in _three_specs().items():
+        svc.submit(spec, xs, ys, 12, run_id=rid)
+    first_cycle = [svc.step() for _ in range(3)]
+    assert sorted(first_cycle) == ["a", "b", "c"]
+    # every run advanced exactly one block and has one checkpoint on disk
+    for rid in ("a", "b", "c"):
+        run = svc.runs[rid]
+        assert run.state.rounds_done == run.spec.checkpoint_every
+        assert ckpt_io.latest_checkpoint(run.ckpt_dir) is not None
+
+
+def test_service_kill_and_resume_bit_identical(tmp_path):
+    """Partial progress -> new service, same root, same submissions ->
+    identical final results (checkpoints carry ALL the state)."""
+    xs, ys = _data()
+    control = ExperimentService(str(tmp_path / "control"))
+    for rid, spec in _three_specs().items():
+        control.submit(spec, xs, ys, 12, run_id=rid)
+    expect = control.run_until_complete()
+
+    svc1 = ExperimentService(str(tmp_path / "killed"))
+    for rid, spec in _three_specs().items():
+        svc1.submit(spec, xs, ys, 12, run_id=rid)
+    for _ in range(5):
+        svc1.step()
+    del svc1                                   # the kill
+
+    svc2 = ExperimentService(str(tmp_path / "killed"))
+    for rid, spec in _three_specs().items():
+        run = svc2.submit(spec, xs, ys, 12, run_id=rid)
+        assert run.resumed
+        assert 0 < run.state.rounds_done < 12
+    results = svc2.run_until_complete()
+    for rid in expect:
+        np.testing.assert_array_equal(np.asarray(expect[rid].theta),
+                                      np.asarray(results[rid].theta))
+        assert expect[rid].privacy_eps == results[rid].privacy_eps
+
+
+def test_resubmitting_finished_run_returns_result(tmp_path):
+    xs, ys = _data()
+    spec = _spec("coded")
+    svc1 = ExperimentService(str(tmp_path))
+    svc1.submit(spec, xs, ys, 8, run_id="done")
+    expect = svc1.run_until_complete()["done"]
+
+    svc2 = ExperimentService(str(tmp_path))
+    run = svc2.submit(spec, xs, ys, 8, run_id="done")
+    assert run.resumed and run.done
+    np.testing.assert_array_equal(np.asarray(expect.theta),
+                                  np.asarray(run.result.theta))
+    assert svc2.step() is None
+
+
+def test_submit_validation(tmp_path):
+    xs, ys = _data()
+    svc = ExperimentService(str(tmp_path))
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        svc.submit(_spec(checkpoint_every=0), xs, ys, 8, run_id="x")
+    svc.submit(_spec(), xs, ys, 8, run_id="x")
+    with pytest.raises(ValueError, match="already submitted"):
+        svc.submit(_spec(), xs, ys, 8, run_id="x")
+    # run_id can ride in the spec itself (validated as a slug there)
+    run = svc.submit(_spec(run_id="from-spec"), xs, ys, 8)
+    assert run.run_id == "from-spec"
+    with pytest.raises(ValueError, match="run_id"):
+        _spec(run_id="bad/slash")
+
+
+def test_resubmit_horizon_mismatch_rejected(tmp_path):
+    xs, ys = _data()
+    spec = _spec("coded")
+    svc1 = ExperimentService(str(tmp_path))
+    svc1.submit(spec, xs, ys, 12, run_id="x")
+    svc1.step()
+    svc2 = ExperimentService(str(tmp_path))
+    with pytest.raises(ValueError, match="horizon"):
+        svc2.submit(spec, xs, ys, 16, run_id="x")
+
+
+def test_service_multi_realization_job(tmp_path):
+    """run_multi jobs multiplex alongside single runs."""
+    xs, ys = _data()
+    spec = _spec("coded", checkpoint_every=3)
+    svc = ExperimentService(str(tmp_path))
+    svc.submit(spec, xs, ys, 6, run_id="multi", n_realizations=3)
+    svc.submit(_spec("greedy"), xs, ys, 8, run_id="single")
+    results = svc.run_until_complete()
+    solo = api.build_experiment(spec, xs, ys).run_multi(6, 3)
+    np.testing.assert_array_equal(np.asarray(solo.theta),
+                                  np.asarray(results["multi"].theta))
+    np.testing.assert_array_equal(solo.wall_clock,
+                                  results["multi"].wall_clock)
+    assert np.asarray(results["single"].theta).shape == (24, 3)
