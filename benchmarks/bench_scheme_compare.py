@@ -17,24 +17,29 @@ import argparse
 import sys
 
 from repro.launch import bench as launch_bench
+from repro.launch import kernel_bench
 
 # (n_clients, l, q, c, iters, realizations) for the profile grid, plus
-# the drift-scenario (static vs adaptive) comparison's and the RunState
-# service benchmark's own sizes
+# the drift-scenario (static vs adaptive) comparison's, the RunState
+# service benchmark's, and the per-kernel microbenchmark's own sizes
 _SCALES = {
     "smoke": dict(n_clients=5, l=12, q=16, c=3, iters=8, realizations=3,
                   scenario_kwargs=dict(n_clients=6, l=16, q=16, c=3,
                                        iters=50, adapt_every=5),
                   service_kwargs=dict(n_clients=6, l=16, q=16, c=3,
-                                      iters=24, block=6)),
+                                      iters=24, block=6),
+                  kernel_kwargs=dict(kernel_bench.SCALES["smoke"], iters=10)),
     "default": dict(n_clients=12, l=32, q=64, c=5, iters=40,
                     realizations=6, scenario_kwargs=None,
-                    service_kwargs=None),
+                    service_kwargs=None,
+                    kernel_kwargs=dict(kernel_bench.SCALES["default"],
+                                       iters=20)),
     "full": dict(n_clients=30, l=100, q=256, c=10, iters=150,
                  realizations=8,
                  scenario_kwargs=dict(n_clients=20, l=48, q=64, c=5,
                                       iters=120, adapt_every=8),
-                 service_kwargs=None),
+                 service_kwargs=None,
+                 kernel_kwargs=dict(kernel_bench.SCALES["full"], iters=20)),
 }
 
 
@@ -75,6 +80,13 @@ def run(out_path: str = launch_bench.ARTIFACT_NAME, scale: str = "default",
             f"oneshot={service['oneshot_seconds']:.3f}s;"
             f"ratio={service['overhead_ratio']:.3f};"
             f"resumed_ok={service['resumed_bit_identical']}"))
+    kernels = result.get("kernels")
+    if kernels:
+        for kname, entry in kernels["entries"].items():
+            rows.append((f"kernel_{kname}", entry["us_per_call"],
+                         f"backend={kernels['backend']}"))
+        rows.append(("kernel_fused_vs_two_pass", 0.0,
+                     f"ratio={kernels['fused_vs_two_pass_ratio']:.3f}"))
     for name, case in result.get("scenarios", {}).get("cases", {}).items():
         rows.append((
             f"fed_scenario_{name}", case["host_seconds"] * 1e6,

@@ -67,8 +67,10 @@ def build_experiment(spec: "ExperimentSpec | dict", x_stack, y_stack, *,
     """Build a runnable `Experiment` from a spec and client data.
 
     spec: an `ExperimentSpec` (or its `to_dict()` form, revived here);
-    x_stack: (n, l, q) RFF-embedded client features; y_stack: (n, l, c)
-    targets.  `nodes` / `rng` override the delay network and the host RNG
+    x_stack: (n, l, q) RFF-embedded client features — or, with
+    ``spec.fused_embed=True``, the RAW (n, l, d) features (the embedding
+    then happens inside the per-round gradient kernel, parameterized by
+    ``spec.rff``); y_stack: (n, l, c) targets.  `nodes` / `rng` override the delay network and the host RNG
     (both default to the spec's seeds, so equal specs reproduce equal
     deployments).  `mesh` accepts a concrete 1-D "clients"
     `jax.sharding.Mesh` (not serializable, hence not a spec field) or a

@@ -232,6 +232,13 @@ class ExperimentSpec:
     alloc_backend: str = "auto"
     mesh: Optional[int] = None
     fused_coded: bool = True
+    # fused embed->gradient round path: x_stack passed to build_experiment
+    # is RAW (n, l, d) features; phi(X) is computed tile-by-tile inside the
+    # gradient kernel each round (kernels.rff_linreg_grad) instead of
+    # materializing the (n, l, q) embedded tensor up front.  Requires an
+    # `rff` config (it supplies q and the shared Omega/delta seed) and the
+    # batched engine.
+    fused_embed: bool = False
     secure_aggregation: bool = False
     steps_per_epoch: int = 1
     # resumable runtime: rounds per block between checkpoints (0 = run the
@@ -288,6 +295,19 @@ class ExperimentSpec:
             raise ValueError(
                 "checkpoint_every requires the batched engine; the legacy "
                 "per-client oracle has no block-structured run state")
+        if self.fused_embed:
+            if self.rff is None:
+                raise ValueError(
+                    "fused_embed=True requires an RFFConfig (`rff`): the "
+                    "fused kernel derives q and the shared Omega/delta "
+                    "frequencies from it")
+            if self.engine == "legacy":
+                raise ValueError(
+                    "fused_embed requires the batched engine; the legacy "
+                    "per-client oracle consumes pre-embedded features")
+            if self.mesh is not None:
+                raise ValueError(
+                    "fused_embed does not support client-mesh sharding yet")
         if self.run_id is not None:
             import re
             if not (isinstance(self.run_id, str)

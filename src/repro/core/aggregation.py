@@ -85,6 +85,54 @@ def fused_client_parity_tensors(sub_x, sub_y, mask, parity_x, parity_y, *,
     return fx, fy, fmask
 
 
+def fused_embed_client_gradients(x_raw, y_stack, omega, delta, theta, *,
+                                 mask, parity_phi=None,
+                                 use_pallas: bool = False,
+                                 interpret: bool = True):
+    """All-client gradients straight from RAW features in one fused call.
+
+    x_raw: (n, l, d) raw features, y_stack: (rows, l, c), mask: (rows, l)
+    -> (rows, q, c): the RFF embedding phi(X) = sqrt(2/q) cos(X Omega +
+    delta) is computed inside the gradient kernel, so the (n, l, q)
+    embedded tensor is never materialized.  With `parity_phi` (l, q) the
+    coded parity pseudo-client (already in embedded q-space) rides along
+    as row n (rows = n + 1); its mask entries must carry the coded
+    1/(u (1-pnr_C)) scale, exactly like `fused_client_parity_tensors`.
+    """
+    return ops.rff_linreg_grad_masked(
+        x_raw, omega, delta, theta, y_stack, mask, parity_phi=parity_phi,
+        use_pallas=use_pallas, interpret=interpret)
+
+
+def fused_embed_client_parity_tensors(sub_x_raw, sub_y, mask, parity_x,
+                                      parity_y, *, pnr_c: float = 0.0,
+                                      l_target: int | None = None):
+    """Raw-space analogue of `fused_client_parity_tensors`.
+
+    sub_x_raw: (n, l_max, d) RAW features, sub_y: (n, l_max, c), mask:
+    (n, l_max); parity_x: (u, q) EMBEDDED parity rows, parity_y: (u, c).
+    Returns (fx, fy, fmask, pphi) with fx: (n, L, d) raw client rows only
+    (the fused kernel appends the parity grid row itself), fy/fmask:
+    (n+1, L, ·) carrying the parity labels and its 1/(u (1-pnr_C))-scaled
+    mask row, and pphi: (L, q) the pre-embedded parity block the kernel
+    substitutes for the in-kernel embed on the parity row.
+    L = max(l_max, u, l_target).
+    """
+    n, l_max, d = sub_x_raw.shape
+    c = sub_y.shape[-1]
+    u, q = parity_x.shape
+    L = max(l_max, u, l_target or 1)
+    fx = jnp.zeros((n, L, d), sub_x_raw.dtype).at[:, :l_max].set(sub_x_raw)
+    fy = jnp.zeros((n + 1, L, c), sub_y.dtype)
+    mask = jnp.asarray(mask, fy.dtype)
+    fmask = jnp.zeros((n + 1, L), mask.dtype)
+    fy = fy.at[:n, :l_max].set(sub_y).at[n, :u].set(parity_y)
+    scale = 1.0 / (u * (1.0 - pnr_c))
+    fmask = fmask.at[:n, :l_max].set(mask).at[n, :u].set(scale)
+    pphi = jnp.zeros((L, q), parity_x.dtype).at[:u].set(parity_x)
+    return fx, fy, fmask, pphi
+
+
 def client_gradient(x, y, theta, *, use_pallas: bool = False):
     """Unnormalized partial gradient X^T (X theta - Y) over processed points."""
     return ops.linreg_grad(x, theta, y, use_pallas=use_pallas)

@@ -117,7 +117,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.checkpoint import io as ckpt_io
 from repro.config import ExperimentSpec
-from repro.core import aggregation, schemes
+from repro.core import aggregation, rff as rff_mod, schemes
+from repro.kernels import ops as kernel_ops
 from repro.core.delay_model import (mec_network, packet_bits,
                                     sample_round_times, scale_tau)
 from repro.core.run_state import RunState, pack_state, unpack_state
@@ -193,10 +194,24 @@ def _make_grad_sum(static: dict):
     Single-device: one masked-kernel call over the whole client tensor.
     Mesh mode: the same call per client shard inside `shard_map`, reduced
     with a psum over the `clients` axis (the MEC server aggregation).
+    With ``fused_embed`` the call signature becomes
+    ``g_sum(consts, gmask, ret, theta)`` — the fused embed->gradient
+    kernel needs the omega/delta (and coded pphi) consts alongside the
+    raw client tensor, and never runs under a mesh.
     """
     use_pallas = static["use_pallas"]
     interpret = static["interpret"]
     mesh: Optional[Mesh] = static["mesh"]
+
+    if static.get("fused_embed", False):
+        def local_fused(consts, gmask, ret, theta):
+            g = aggregation.fused_embed_client_gradients(
+                consts["gx"], consts["gy"], consts["omega"],
+                consts["delta"], theta, mask=gmask,
+                parity_phi=consts.get("pphi"), use_pallas=use_pallas,
+                interpret=interpret)
+            return aggregation.masked_gradient_sum(g, ret)
+        return local_fused
 
     def local(gx, gy, gmask, ret, theta):
         g = aggregation.batched_client_gradients(
@@ -251,6 +266,7 @@ def build_step(static: dict):
     m = static["m"]
     l = static["l"]
     fused = static["fused"]
+    fused_embed = static.get("fused_embed", False)
     channel = static.get("channel", False)
     collect_theta = static["collect_theta"]
     use_pallas = static["use_pallas"]
@@ -327,7 +343,10 @@ def build_step(static: dict):
         # row (fused coded) and any zero-mask mesh padding rows.
         ret = jnp.concatenate([ret_real.astype(jnp.float32),
                                consts["ret_tail"]])
-        g_sum = grad_sum(consts["gx"], consts["gy"], gmask, ret, theta)
+        if fused_embed:
+            g_sum = grad_sum(consts, gmask, ret, theta)
+        else:
+            g_sum = grad_sum(consts["gx"], consts["gy"], gmask, ret, theta)
         if scheme == "coded" and not fused:
             g_sum = g_sum + aggregation.coded_gradient(
                 consts["par_x"], consts["par_y"], theta, pnr_c=0.0,
@@ -489,7 +508,27 @@ class Experiment:
         self.train = spec.train
         self.x = jnp.asarray(x_stack)
         self.y = jnp.asarray(y_stack)
-        self.n, self.l, self.q = self.x.shape
+        # fused_embed: x_stack is RAW (n, l, d); q comes from the RFF
+        # config and the shared-seed (Omega, delta) are derived here so
+        # the in-kernel embed matches rff.rff_transform exactly
+        self.fused_embed = spec.fused_embed
+        if self.fused_embed:
+            if self.adaptive:
+                raise NotImplementedError(
+                    f"scheme {self.scheme!r} does not support "
+                    "fused_embed yet (adaptive re-allocation assumes "
+                    "embedded tensors)")
+            if self.mesh is not None:
+                raise NotImplementedError(
+                    "fused_embed does not support client-mesh sharding "
+                    "yet")
+            self.n, self.l, self.d = self.x.shape
+            self.q = spec.rff.q
+            self.omega, self.delta = rff_mod.rff_params(spec.rff, self.d)
+        else:
+            self.n, self.l, self.q = self.x.shape
+            self.d = None
+            self.omega = self.delta = None
         self.c = self.y.shape[-1]
         self.m = self.n * self.l
         self.steps_per_epoch = spec.steps_per_epoch
@@ -530,6 +569,19 @@ class Experiment:
         Single source of truth for the compiled step's static clamp, the
         legacy oracle, and the adaptive controller's block-0 plan."""
         return max(1, int(math.ceil((1.0 - self.fl.psi) * self.n)))
+
+    def embedded_x(self) -> jnp.ndarray:
+        """Transient (n, l, q) embedded stack for HOST-SIDE setup only
+        (parity encoding, privacy accounting).  The fused_embed round
+        path never materializes this — phi is computed tile-by-tile
+        inside the gradient kernel each round."""
+        if not self.fused_embed:
+            raise ValueError("embedded_x() is only meaningful with "
+                             "fused_embed=True (x is already embedded)")
+        return kernel_ops.rff_embed_batched(
+            self.x, self.omega, self.delta,
+            use_pallas=self.kernel_backend == "pallas",
+            interpret=self._interpret)
 
     # -------------------------------------------------------- scheme plumbing
     def _pick_alloc_backend(self) -> str:
@@ -575,6 +627,9 @@ class Experiment:
             "gx": gx, "gy": gy, "gmask": gmask,
             "ret_tail": jnp.asarray(tail, jnp.float32),
         }
+        if self.fused_embed:
+            consts["omega"] = self.omega
+            consts["delta"] = self.delta
         consts.update(self.scheme_obj.extra_consts(self))
         return consts
 
@@ -588,6 +643,7 @@ class Experiment:
             "m": float(self.m),
             "l": float(self.l),
             "fused": self.fused_coded,
+            "fused_embed": self.fused_embed,
             "mesh": self.mesh,
             "use_pallas": self.kernel_backend == "pallas",
             "interpret": self._interpret,

@@ -40,8 +40,19 @@ def median_sigma(x, n_pairs: int = 2000, seed: int = 0) -> float:
     """
     import numpy as np
     x = np.asarray(x)
+    if x.shape[0] < 2:
+        raise ValueError(
+            f"median_sigma needs at least 2 points, got {x.shape[0]}")
     rng = np.random.default_rng(seed)
     idx = rng.integers(0, x.shape[0], size=(n_pairs, 2))
+    # self-pairs have distance exactly 0 and bias the median low at small
+    # n_pairs — redraw the second index until every pair is distinct
+    while True:
+        self_pairs = idx[:, 0] == idx[:, 1]
+        if not self_pairs.any():
+            break
+        idx[self_pairs, 1] = rng.integers(0, x.shape[0],
+                                          size=int(self_pairs.sum()))
     d = np.linalg.norm(x[idx[:, 0]] - x[idx[:, 1]], axis=1)
     return float(np.median(d))
 

@@ -203,9 +203,13 @@ class CodedScheme(Scheme):
         _, keys = jax.lax.scan(_chain, jax.random.PRNGKey(fl.seed + 99),
                                None, length=exp.n)
         # all n local parity sets in one batched encode (paper eq. 19) —
-        # one vmapped jnp call or one tiled Pallas kernel launch
+        # one vmapped jnp call or one tiled Pallas kernel launch.  In
+        # fused_embed mode the clients hold RAW features; parity encoding
+        # happens over on-the-fly embeds (a transient (n, l, q) stack that
+        # lives only for this setup step — the round path never sees it)
+        x_enc = exp.embedded_x() if exp.fused_embed else exp.x
         stacked = encoding.encode_local_batched(
-            keys, exp.x, exp.y, w_stack, exp.u,
+            keys, x_enc, exp.y, w_stack, exp.u,
             use_pallas=exp.kernel_backend == "pallas",
             interpret=exp._interpret)
         if exp.secure_aggregation:
@@ -257,10 +261,22 @@ class CodedScheme(Scheme):
     def grad_tensors(self, exp, l_target=None):
         from repro.core import aggregation
         if exp.fused_coded:
-            gx, gy, gmask = aggregation.fused_client_parity_tensors(
-                exp._sub_x_pad, exp._sub_y_pad, exp._grad_mask,
-                exp.parity.x, exp.parity.y, pnr_c=0.0,
-                l_target=l_target)
+            if exp.fused_embed:
+                # raw-space client rows; the embedded parity block goes in
+                # as a separate `pphi` const the fused kernel reads on the
+                # parity grid row (stashed here so `extra_consts` — which
+                # has no l_target — ships the matching padded view)
+                gx, gy, gmask, pphi = \
+                    aggregation.fused_embed_client_parity_tensors(
+                        exp._sub_x_pad, exp._sub_y_pad, exp._grad_mask,
+                        exp.parity.x, exp.parity.y, pnr_c=0.0,
+                        l_target=l_target)
+                exp._pphi_const = pphi
+            else:
+                gx, gy, gmask = aggregation.fused_client_parity_tensors(
+                    exp._sub_x_pad, exp._sub_y_pad, exp._grad_mask,
+                    exp.parity.x, exp.parity.y, pnr_c=0.0,
+                    l_target=l_target)
             tail = [1.0]          # the always-active parity pseudo-row
         else:
             gx, gy, gmask = (exp._sub_x_pad, exp._sub_y_pad,
@@ -278,6 +294,8 @@ class CodedScheme(Scheme):
             "t_star": jnp.float32(exp.t_star),
             "active": jnp.asarray(exp.loads > 0, jnp.float32),
         }
+        if exp.fused_coded and exp.fused_embed:
+            consts["pphi"] = exp._pphi_const
         if not exp.fused_coded:
             consts["par_x"] = exp.parity.x
             consts["par_y"] = exp.parity.y
@@ -286,9 +304,12 @@ class CodedScheme(Scheme):
     # --------------------------------------------------------------- privacy
     def privacy_budget(self, exp) -> float:
         """Worst-client eps-MI-DP budget (bits) of sharing u parity rows
-        (paper Appendix F, eq. 62)."""
+        (paper Appendix F, eq. 62).  What leaks is the EMBEDDED data the
+        parity rows are built from, so fused_embed runs account over the
+        same transient embeds the parity encode consumed."""
+        x_src = exp.embedded_x() if exp.fused_embed else exp.x
         return float(max(
-            privacy.mi_dp_budget(np.asarray(exp.x[j]), exp.u)
+            privacy.mi_dp_budget(np.asarray(x_src[j]), exp.u)
             for j in range(exp.n)))
 
 
@@ -349,6 +370,10 @@ class AdaptiveCodedScheme(CodedScheme):
             raise ValueError(
                 "adaptive_coded requires fused_coded=True (re-allocation "
                 "re-weights the fused client+parity mask)")
+        if exp.fused_embed:
+            raise NotImplementedError(
+                "adaptive_coded does not support fused_embed yet (the "
+                "per-block gmask re-weighting assumes embedded tensors)")
         super().setup(exp)
         # full-length priority view: every client's points in selection-
         # priority order, so ANY re-allocated load l_j <= l is a prefix

@@ -19,6 +19,8 @@ from repro.kernels.parity_encode import parity_encode as _parity_encode_kernel
 from repro.kernels.parity_encode import \
     parity_encode_batched as _parity_encode_batched_kernel
 from repro.kernels.rff_embed import rff_embed as _rff_embed_kernel
+from repro.kernels.rff_linreg_grad import \
+    rff_linreg_grad_masked as _rff_linreg_grad_masked_kernel
 from repro.kernels.gqa_decode import gqa_decode as _gqa_decode_kernel
 
 
@@ -137,6 +139,64 @@ def linreg_grad_masked(x_stack, theta, y_stack, mask, *,
     return out[:, :q, :c]
 
 
+def rff_linreg_grad_masked(x_raw, omega, delta, theta, y_stack, mask, *,
+                           parity_phi=None, use_pallas: bool = False,
+                           bm: int = 128, bq: int = 128,
+                           interpret: bool = True):
+    """Fused RFF-embed -> per-client masked gradients from RAW features.
+
+    x_raw: (n, l, d) raw client features, omega: (d, q), delta: (q,),
+    theta: (q, c), y_stack: (rows, l, c), mask: (rows, l) -> (rows, q, c)
+    float32 with  g_j = phi_j^T diag(mask_j) (phi_j theta - Y_j)  and
+    phi_j = sqrt(2/q) cos(X_j omega + delta).
+
+    When `parity_phi` (l, q) is given, the coded parity pseudo-client rides
+    along as one extra grid row (rows = n + 1): it is already embedded (a
+    generator-weighted sum of embedded points lives in q-space), so the
+    kernel substitutes it for the in-kernel embed and its mask entries carry
+    the coded 1/u scale.  The (n, l, q) embedded tensor is never
+    materialized in HBM — this replaces the two-pass rff_embed_batched +
+    linreg_grad_masked round path.  bf16 inputs accumulate in f32 and the
+    output is float32 either way; the jnp fallback upcasts to f32 up front
+    to match.
+    """
+    n, l, d = x_raw.shape
+    q = omega.shape[1]
+    c = theta.shape[1]
+    rows = n + (1 if parity_phi is not None else 0)
+    assert y_stack.shape == (rows, l, c), (y_stack.shape, rows, l, c)
+    assert mask.shape == (rows, l), (mask.shape, rows, l)
+    if not use_pallas:
+        f32 = jnp.float32
+        phi = jax.vmap(lambda x: ref.rff_embed(
+            x.astype(f32), omega.astype(f32), delta.astype(f32)))(x_raw)
+        if parity_phi is not None:
+            phi = jnp.concatenate([phi, parity_phi[None].astype(f32)], axis=0)
+        return jax.vmap(lambda x, y, w: ref.linreg_grad_masked(
+            x, theta.astype(f32), y.astype(f32), w.astype(f32)))(
+                phi, y_stack, mask)
+    bm = _clamp_block(bm, l, interpret)
+    xp = _pad_to(x_raw, (1, bm, _LANE))
+    if parity_phi is not None:
+        # the parity grid row never embeds, but its raw-x block is still
+        # fetched by the BlockSpec — give it a zero dummy row
+        xp = jnp.concatenate([xp, jnp.zeros_like(xp[:1])], axis=0)
+    op = _pad_to(omega, (_LANE, bq))
+    dp = _pad_to(delta, (bq,))
+    tp = _pad_to(theta, (bq, _LANE))
+    yp = _pad_to(y_stack, (1, bm, _LANE))
+    mp = _pad_to(mask, (1, bm))
+    lp, qp = xp.shape[1], op.shape[1]
+    if parity_phi is not None:
+        pp = _pad_to(parity_phi, (bm, bq))[None]
+    else:
+        pp = jnp.zeros((1, lp, qp), x_raw.dtype)
+    out = _rff_linreg_grad_masked_kernel(xp, op, dp, tp, yp, mp, pp,
+                                         n_real=n, bm=bm, bq=bq,
+                                         interpret=interpret, q_true=q)
+    return out[:, :q, :c]
+
+
 def linreg_grad_batched(x_stack, theta, y_stack, *, use_pallas: bool = False,
                         bm: int = 128, bq: int = 128, interpret: bool = True):
     """Per-client gradients over a dense client axis.
@@ -200,7 +260,11 @@ def gqa_decode(q, k, v, k_pos, q_pos, *, window: int = 0,
     if not use_pallas:
         return ref.gqa_decode(q, k, v, k_pos, q_pos, window)
     T = k.shape[1]
-    bt = min(bt, T)
+    # clamp through the 8-multiple helper: a bare min(bt, T) can leave a
+    # non-multiple-of-8 block (T=500 -> bt=500) that only interpret mode
+    # tolerates; _clamp_block rounds to an aligned tile and leaves the
+    # compiled path's block untouched
+    bt = _clamp_block(bt, T, interpret)
     rem = (-T) % bt
     if rem:
         k = jnp.pad(k, ((0, 0), (0, rem), (0, 0), (0, 0)))

@@ -47,10 +47,16 @@ def rff_embed(x, omega, delta, *, bm: int = 128, bq: int = 128, bk: int = 128,
     d2, q = omega.shape
     assert d == d2 and delta.shape == (q,)
     assert m % bm == 0 and q % bq == 0 and d % bk == 0, (m, q, d, bm, bq, bk)
+    # explicit None check: `q_true or q` would silently substitute the
+    # padded q when a caller passes q_true=0
+    if q_true is None:
+        q_true = q
+    if q_true <= 0:
+        raise ValueError(f"q_true must be positive, got {q_true}")
     nk = d // bk
     delta2 = delta.reshape(1, q)
     return pl.pallas_call(
-        functools.partial(_kernel, nk=nk, q_true=q_true or q),
+        functools.partial(_kernel, nk=nk, q_true=q_true),
         grid=(m // bm, q // bq, nk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),

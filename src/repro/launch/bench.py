@@ -53,10 +53,11 @@ from repro.core import schemes as schemes_registry
 # profiles without importing the launch layer
 from repro.core.delay_model import HETEROGENEITY_PROFILES  # noqa: F401
 from repro.core.delay_model import ideal_round_time  # noqa: F401
+from repro.launch import kernel_bench as kernel_bench_mod
 from repro.launch import scenarios as scenarios_mod
 from repro.launch import sweep as sweep_mod
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 ARTIFACT_NAME = "BENCH_fed_training.json"
 # core grid every artifact must cover; the live registry may add more
 CORE_SCHEMES = ("coded", "naive", "greedy", "ideal")
@@ -95,7 +96,8 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
                 engine: str = "sweep",
                 measure_loop: bool = True,
                 scenario_kwargs: Optional[dict] = None,
-                service_kwargs: Optional[dict] = None) -> dict:
+                service_kwargs: Optional[dict] = None,
+                kernel_kwargs: Optional[dict] = None) -> dict:
     """Run the scheme comparison over heterogeneity profiles.
 
     The scheme grid is the LIVE grid-eligible registry
@@ -116,7 +118,10 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
     (`run_service_bench`): the block-restructuring overhead of the
     RunState runtime vs the one-shot scan, plus the multiplexed
     kill/resume bit-identity check; `service_kwargs` follows the same
-    None-defaults / ``{"skip": True}`` convention.
+    None-defaults / ``{"skip": True}`` convention.  Schema v6 adds the
+    ``kernels`` section (`repro.launch.kernel_bench.run_kernel_bench`):
+    per-kernel microbenchmark timings including the fused-vs-two-pass
+    embed->gradient ratio; `kernel_kwargs` follows the same convention.
     """
     if engine not in ("sweep", "loop"):
         raise ValueError(f"unknown engine {engine!r}")
@@ -244,6 +249,12 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
         # schema v5: RunState block-restructuring overhead + service resume
         artifact["service"] = run_service_bench(
             kernel_backend=kernel_backend, **service_kwargs)
+    kernel_kwargs = dict(kernel_kwargs or {})
+    if not kernel_kwargs.pop("skip", False):
+        # schema v6: per-kernel microbenchmark timings + fused ratio
+        kernel_kwargs.setdefault("kernel_backend", kernel_backend)
+        artifact["kernels"] = kernel_bench_mod.run_kernel_bench(
+            **kernel_kwargs)
     return artifact
 
 
@@ -348,7 +359,7 @@ _SCHEME_FIELDS = ("final_wall_clock_mean", "final_wall_clock_std",
 
 
 def validate_artifact(obj) -> list[str]:
-    """Structural check of the BENCH_fed_training.json artifact (schema 5).
+    """Structural check of the BENCH_fed_training.json artifact (schema 6).
 
     `obj` is a dict or a path.  Returns a list of problems (empty == valid)
     rather than raising, so CI can print every issue at once.
@@ -365,6 +376,11 @@ def validate_artifact(obj) -> list[str]:
     timings/ratio, >= 3 multiplexed runs, and the kill/resume bit-identity
     flag, which must be True (the timing ratio itself is recorded but not
     thresholded — host timing noise is not a correctness failure).
+    Schema v6 adds the required ``kernels`` section (per-kernel
+    microbenchmark timings incl. the fused-vs-two-pass ratio, validated
+    by `repro.launch.kernel_bench.validate_kernels`; the regression
+    threshold against a committed artifact is enforced separately by
+    `kernel_bench.compare_kernels` in the CI kernel-bench job).
     """
     if isinstance(obj, str):
         try:
@@ -433,6 +449,10 @@ def validate_artifact(obj) -> list[str]:
             errs.append("service/resumed_bit_identical: kill/resume was "
                         "not bit-identical "
                         f"({service.get('resumed_bit_identical')!r})")
+    if "kernels" not in obj:
+        errs.append("schema v6 artifact missing 'kernels' section")
+    else:
+        errs.extend(kernel_bench_mod.validate_kernels(obj["kernels"]))
     profiles = obj.get("profiles")
     if not isinstance(profiles, dict) or not profiles:
         return errs + ["missing/empty 'profiles'"]

@@ -113,6 +113,11 @@ def run_sweep(x_stack, y_stack, *, profiles: dict,
             "run_sweep replays one compiled step across the grid and has "
             "no traced-channel path; drop channel_profile/channel_params "
             "from base_spec (drift scenarios: repro.launch.scenarios)")
+    if base_spec is not None and base_spec.fused_embed:
+        raise ValueError(
+            "run_sweep derives q from the embedded x_stack and has no "
+            "raw-feature path; drop fused_embed from base_spec (run "
+            "fused-embed deployments through Experiment.run/run_multi)")
     fl_kwargs = dict(fl_kwargs or {})
     fl_kwargs.setdefault("n_clients", int(x_stack.shape[0]))
     R = int(realizations)

@@ -1,0 +1,138 @@
+"""Fused embed->gradient round path (`ExperimentSpec.fused_embed`).
+
+The contract: a fused run consumes RAW (n, l, d) client features and the
+per-round gradient kernel embeds them on the fly — and its theta
+trajectory is BIT-IDENTICAL (f32) to the two-pass control that pre-embeds
+the same features with the same shared-seed (Omega, delta) and runs the
+ordinary path, on both kernel backends.  Parity encoding, load
+allocation, t_star, privacy accounting and the RNG streams all see the
+same embedded values, so nothing but the kernel launch structure differs.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.config import ExperimentSpec, FLConfig, RFFConfig, TrainConfig
+from repro.core import rff as rff_mod
+from repro.kernels import ops
+
+N, L, D, Q, C = 6, 16, 8, 24, 3
+
+
+def _raw_data(n=N, l=L, d=D, c=C, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n, l, d)).astype(np.float32) * 0.5
+    ys = rng.normal(size=(n, l, c)).astype(np.float32)
+    return xs, ys
+
+
+def _spec(scheme="coded", **over):
+    base = dict(
+        fl=FLConfig(n_clients=N, delta=0.25, psi=0.3, seed=3),
+        train=TrainConfig(learning_rate=0.5, l2_reg=1e-5,
+                          lr_decay_epochs=(5,)),
+        scheme=scheme,
+        rff=RFFConfig(q=Q, sigma=1.5, seed=7),
+        fused_embed=True)
+    base.update(over)
+    return ExperimentSpec(**base)
+
+
+def _control(spec, xs_raw, ys):
+    """The two-pass control: pre-embed with the SAME shared-seed RFF
+    params and backend, then run with fused_embed off."""
+    fused = api.build_experiment(spec, xs_raw, ys)
+    phi = np.asarray(fused.embedded_x())
+    control = api.build_experiment(
+        dataclasses.replace(spec, fused_embed=False), phi, ys)
+    return fused, control
+
+
+@pytest.mark.parametrize("kernel_backend", ["xla", "pallas"])
+@pytest.mark.parametrize("scheme,fused_coded", [
+    ("coded", True), ("coded", False), ("naive", True),
+    ("partial_coded", True)])
+def test_fused_embed_trajectory_equivalent(scheme, fused_coded,
+                                           kernel_backend):
+    xs, ys = _raw_data()
+    spec = _spec(scheme, kernel_backend=kernel_backend,
+                 fused_coded=fused_coded)
+    fused, control = _control(spec, xs, ys)
+    trace = lambda th: (float(np.abs(np.asarray(th)).sum()), 0.0)
+    rf = fused.run(6, eval_fn=trace, eval_every=1)
+    rc = control.run(6, eval_fn=trace, eval_every=1)
+    np.testing.assert_array_equal(np.asarray(rf.theta),
+                                  np.asarray(rc.theta))
+    for hf, hc in zip(rf.history, rc.history):
+        assert hf.returned == hc.returned
+        assert hf.wall_clock == hc.wall_clock
+        assert hf.loss == hc.loss
+
+
+def test_fused_embed_run_multi_and_privacy_match_control():
+    xs, ys = _raw_data()
+    spec = _spec("coded")
+    fused, control = _control(spec, xs, ys)
+    mf = fused.run_multi(5, 3)
+    mc = control.run_multi(5, 3)
+    np.testing.assert_array_equal(np.asarray(mf.theta),
+                                  np.asarray(mc.theta))
+    np.testing.assert_array_equal(mf.wall_clock, mc.wall_clock)
+    # deployment metadata is a function of the same embedded values
+    assert fused.t_star == control.t_star
+    assert fused.u == control.u
+    assert fused.privacy_eps == pytest.approx(control.privacy_eps)
+    np.testing.assert_array_equal(fused.loads, control.loads)
+
+
+def test_embedded_x_matches_kernel_embed():
+    xs, ys = _raw_data()
+    exp = api.build_experiment(_spec("coded"), xs, ys)
+    omega, delta = rff_mod.rff_params(exp.spec.rff, D)
+    want = ops.rff_embed_batched(xs, omega, delta)
+    got = exp.embedded_x()
+    assert got.shape == (N, L, Q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # transient: the round path never keeps the embedded tensor; the
+    # experiment's x stays the raw features
+    assert exp.x.shape == (N, L, D)
+    # and the accessor is fused-embed-only
+    plain = api.build_experiment(
+        dataclasses.replace(_spec("coded"), fused_embed=False),
+        np.asarray(want), ys)
+    with pytest.raises(ValueError, match="fused_embed"):
+        plain.embedded_x()
+
+
+def test_fused_embed_spec_round_trip():
+    spec = _spec("partial_coded", scheme_params={"u_fraction": 0.4},
+                 kernel_backend="pallas")
+    revived = ExperimentSpec.from_dict(
+        json.loads(json.dumps(spec.to_dict())))
+    assert revived == spec and revived.fused_embed
+    assert revived.rff == spec.rff
+
+
+def test_fused_embed_spec_validation():
+    with pytest.raises(ValueError, match="rff"):
+        _spec(rff=None)
+    with pytest.raises(ValueError, match="legacy"):
+        _spec(engine="legacy")
+    with pytest.raises(ValueError, match="mesh"):
+        _spec(mesh=2)
+
+
+def test_fused_embed_runtime_rejections():
+    xs, ys = _raw_data()
+    with pytest.raises(NotImplementedError, match="adaptive"):
+        api.build_experiment(
+            _spec("adaptive_coded", channel_profile="compute_drift",
+                  adapt_every=2), xs, ys)
+    from repro.launch.sweep import run_sweep
+    with pytest.raises(ValueError, match="fused_embed"):
+        run_sweep(xs, ys, profiles={"uniform": {}},
+                  train_cfg=TrainConfig(), iterations=2, realizations=1,
+                  base_spec=_spec("coded"))

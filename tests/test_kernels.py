@@ -282,3 +282,220 @@ def test_block_shape_sweep():
         got = np.asarray(ops.linreg_grad(x, theta, y, use_pallas=True,
                                          bm=bm, bq=bq))
         np.testing.assert_allclose(got, base, atol=1e-3)
+
+
+# --- fused RFF-embed -> masked gradient kernel (raw features in, grads out) ---
+
+# n, l, d, q, c — mixed divisible and ragged shapes
+SHAPES_FUSED = [(3, 128, 16, 128, 4), (2, 100, 33, 70, 3),
+                (4, 257, 20, 130, 1), (1, 64, 128, 256, 5)]
+
+
+@pytest.mark.parametrize("n,l,d,q,c", SHAPES_FUSED)
+def test_rff_linreg_grad_fused(n, l, d, q, c):
+    """Fused kernel == its jnp fallback == the explicit two-pass path."""
+    x = _arr((n, l, d), scale=0.3)
+    omega = _arr((d, q), scale=0.3)
+    delta = jnp.asarray(RNG.uniform(0, 2 * np.pi, size=(q,)), jnp.float32)
+    theta = _arr((q, c), scale=0.3)
+    y = _arr((n, l, c))
+    mask = jnp.asarray((RNG.uniform(size=(n, l)) < 0.7).astype(np.float32))
+    got = ops.rff_linreg_grad_masked(x, omega, delta, theta, y, mask,
+                                     use_pallas=True)
+    want = ops.rff_linreg_grad_masked(x, omega, delta, theta, y, mask)
+    assert got.shape == (n, q, c) and got.dtype == jnp.float32
+    denom = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got) / denom,
+                               np.asarray(want) / denom, atol=3e-5)
+    # the fallback IS the two-pass composition, bit for bit — the fused
+    # path replaces it without changing what is computed
+    phi = ops.rff_embed_batched(x, omega, delta)
+    two_pass = ops.linreg_grad_masked(phi, theta, y, mask)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(two_pass))
+
+
+def test_rff_linreg_grad_fused_parity_row():
+    """The coded parity pseudo-client rides the same grid: pre-embedded
+    (l, q) parity features substitute for the in-kernel embed on the last
+    row, and its mask carries the coded 1/u scale."""
+    n, l, d, q, c, u = 3, 64, 16, 64, 3, 24
+    x = _arr((n, l, d), scale=0.3)
+    omega = _arr((d, q), scale=0.3)
+    delta = jnp.asarray(RNG.uniform(0, 2 * np.pi, size=(q,)), jnp.float32)
+    theta = _arr((q, c), scale=0.3)
+    y = _arr((n + 1, l, c))
+    parity_phi = jnp.zeros((l, q), jnp.float32).at[:u].set(
+        _arr((u, q), scale=0.5))
+    mask = np.zeros((n + 1, l), np.float32)
+    mask[:n] = (RNG.uniform(size=(n, l)) < 0.7)
+    mask[n, :u] = 1.0 / u
+    mask = jnp.asarray(mask)
+    got = ops.rff_linreg_grad_masked(x, omega, delta, theta, y, mask,
+                                     parity_phi=parity_phi, use_pallas=True)
+    want = ops.rff_linreg_grad_masked(x, omega, delta, theta, y, mask,
+                                      parity_phi=parity_phi)
+    assert got.shape == (n + 1, q, c)
+    # single-block shapes: the padded contraction contributes exact zeros,
+    # so pallas and jnp agree bit for bit
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the parity row must equal the plain masked gradient on parity_phi
+    par = ref.linreg_grad_masked(parity_phi, theta, y[n], mask[n])
+    np.testing.assert_allclose(np.asarray(got[n]), np.asarray(par),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rff_linreg_grad_fused_bf16():
+    """bf16 inputs accumulate in f32 and the output stays f32."""
+    n, l, d, q, c = 2, 128, 16, 128, 4
+    x = _arr((n, l, d), jnp.bfloat16, scale=0.3)
+    omega = _arr((d, q), jnp.bfloat16, scale=0.3)
+    delta = jnp.asarray(RNG.uniform(0, 2 * np.pi, size=(q,)), jnp.bfloat16)
+    theta = _arr((q, c), jnp.bfloat16, scale=0.3)
+    y = _arr((n, l, c), jnp.bfloat16)
+    mask = jnp.asarray((RNG.uniform(size=(n, l)) < 0.7), jnp.bfloat16)
+    got = ops.rff_linreg_grad_masked(x, omega, delta, theta, y, mask,
+                                     use_pallas=True)
+    want = ops.rff_linreg_grad_masked(x, omega, delta, theta, y, mask)
+    assert got.dtype == jnp.float32 and want.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=0.1, rtol=0.1)
+
+
+def test_rff_linreg_grad_fused_block_sweep():
+    """Numerically stable across BlockSpec tiling choices."""
+    n, l, d, q, c = 2, 256, 16, 256, 4
+    x = _arr((n, l, d), scale=0.3)
+    omega = _arr((d, q), scale=0.3)
+    delta = jnp.asarray(RNG.uniform(0, 2 * np.pi, size=(q,)), jnp.float32)
+    theta = _arr((q, c), scale=0.3)
+    y = _arr((n, l, c))
+    mask = jnp.ones((n, l), jnp.float32)
+    base = np.asarray(ops.rff_linreg_grad_masked(x, omega, delta, theta, y,
+                                                 mask))
+    for bm, bq in [(64, 64), (128, 256), (256, 128)]:
+        got = np.asarray(ops.rff_linreg_grad_masked(
+            x, omega, delta, theta, y, mask, use_pallas=True, bm=bm, bq=bq))
+        np.testing.assert_allclose(got, base, atol=1e-3)
+
+
+def test_rff_linreg_grad_fused_rejects_bad_args():
+    from repro.kernels.rff_linreg_grad import (
+        rff_linreg_grad_masked as kernel)
+    rows, l, d, q, c = 2, 128, 128, 128, 4
+    x = jnp.zeros((rows, l, d), jnp.float32)
+    omega = jnp.zeros((d, q), jnp.float32)
+    delta = jnp.zeros((q,), jnp.float32)
+    theta = jnp.zeros((q, c), jnp.float32)
+    y = jnp.zeros((rows, l, c), jnp.float32)
+    mask = jnp.ones((rows, l), jnp.float32)
+    pphi = jnp.zeros((1, l, q), jnp.float32)
+    with pytest.raises(ValueError, match="q_true"):
+        kernel(x, omega, delta, theta, y, mask, pphi, n_real=rows, q_true=0)
+    with pytest.raises(ValueError, match="n_real"):
+        kernel(x, omega, delta, theta, y, mask, pphi, n_real=rows + 1)
+    # resident Omega/theta past the VMEM budget must raise a clear error
+    wide = 300_000
+    with pytest.raises(ValueError, match="VMEM"):
+        ops.rff_linreg_grad_masked(
+            x, jnp.zeros((d, wide), jnp.float32),
+            jnp.zeros((wide,), jnp.float32),
+            jnp.zeros((wide, c), jnp.float32), y, mask, use_pallas=True)
+
+
+# --- wrapper padding edges: one below / at / one above the block size ---
+#
+# Where the zero-padding stays inside a single contraction block, the
+# padded terms are exact +0.0 contributions and the Pallas (interpret)
+# result must be BIT-EQUAL to the jnp reference — any `_pad_to` /
+# `_clamp_block` regression (wrong scale, garbage in the pad, off-by-one
+# slicing) breaks exact equality loudly.  One past the block multiple the
+# contraction legitimately splits into two accumulation steps, so those
+# cases assert tight allclose instead.
+
+_EDGE = (127, 128, 129)   # around the 128-lane block
+
+
+def _assert_edge(got, want, exact):
+    got, want = np.asarray(got), np.asarray(want)
+    if exact:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("d", _EDGE)
+@pytest.mark.parametrize("q", _EDGE)
+def test_rff_embed_batched_padding_edges(d, q):
+    n, l = 2, 9
+    x = _arr((n, l, d))
+    omega = _arr((d, q))
+    delta = jnp.asarray(RNG.uniform(0, 2 * np.pi, size=(q,)), jnp.float32)
+    got = ops.rff_embed_batched(x, omega, delta, use_pallas=True)
+    want = jax.vmap(lambda xj: ref.rff_embed(xj, omega, delta))(x)
+    _assert_edge(got, want, exact=(d <= 128 and q <= 128))
+
+
+@pytest.mark.parametrize("l", _EDGE)
+@pytest.mark.parametrize("q", _EDGE)
+def test_linreg_grad_masked_padding_edges(l, q):
+    n, c = 2, 3
+    x = _arr((n, l, q), scale=0.3)
+    theta = _arr((q, c), scale=0.3)
+    y = _arr((n, l, c))
+    mask = jnp.asarray((RNG.uniform(size=(n, l)) < 0.7).astype(np.float32))
+    got = ops.linreg_grad_masked(x, theta, y, mask, use_pallas=True)
+    want = jnp.stack([ref.linreg_grad_masked(x[j], theta, y[j], mask[j])
+                      for j in range(n)])
+    _assert_edge(got, want, exact=(l <= 128))
+
+
+@pytest.mark.parametrize("l", _EDGE)
+@pytest.mark.parametrize("q", (63, 64, 65))
+def test_parity_encode_batched_padding_edges(l, q):
+    n, u = 2, 24
+    g = _arr((n, u, l))
+    w = jnp.asarray(RNG.uniform(0.2, 1.0, size=(n, l)), jnp.float32)
+    x = _arr((n, l, q), scale=0.5)
+    got = ops.parity_encode_batched(g, w, x, use_pallas=True)
+    want = jax.vmap(ref.parity_encode)(g, w, x)
+    _assert_edge(got, want, exact=(l <= 128))
+
+
+# --- satellite bugfix pins ---
+
+
+def test_rff_embed_q_true_guard():
+    """q_true=0 must raise, not silently fall back to the padded q."""
+    from repro.kernels.rff_embed import rff_embed as kernel
+    m, d, q = 128, 128, 128
+    x = _arr((m, d))
+    omega = _arr((d, q))
+    delta = jnp.zeros((q,), jnp.float32)
+    with pytest.raises(ValueError, match="q_true"):
+        kernel(x, omega, delta, q_true=0)
+    with pytest.raises(ValueError, match="q_true"):
+        kernel(x, omega, delta, q_true=-3)
+    # None still defaults to the (padded) q
+    got = kernel(x, omega, delta, q_true=None)
+    want = ref.rff_embed(x, omega, delta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_gqa_decode_block_clamp():
+    """T=500 with the default bt=512 must clamp to an 8-aligned block (a
+    bare min(bt, T) left bt=500, which only interpret mode tolerates)."""
+    from repro.kernels.ops import _clamp_block
+    assert _clamp_block(512, 500, True) == 504
+    assert _clamp_block(512, 500, True) % 8 == 0
+    assert _clamp_block(512, 500, False) == 512   # compiled path untouched
+    B, H, K, hd, T = 2, 8, 4, 32, 500
+    q = _arr((B, H, hd))
+    k = _arr((B, T, K, hd), scale=0.3)
+    v = _arr((B, T, K, hd))
+    kp = jnp.asarray(np.where(RNG.uniform(size=T) < 0.9,
+                              np.arange(T), -1), jnp.int32)
+    qp = jnp.int32(T - 1)
+    got = ops.gqa_decode(q, k, v, kp, qp, use_pallas=True)
+    want = ref.gqa_decode(q, k, v, kp, qp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

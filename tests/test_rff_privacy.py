@@ -1,6 +1,7 @@
 """RFF embedding (§III-A) and privacy budget (Appendix F)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.config import RFFConfig
 from repro.core import privacy, rff
@@ -40,6 +41,21 @@ def test_rff_feature_norm():
 def test_median_sigma_positive():
     x = np.random.default_rng(0).normal(size=(100, 5))
     assert rff.median_sigma(x) > 0
+
+
+def test_median_sigma_excludes_self_pairs():
+    """rng.integers can draw (i, i) pairs whose zero distance biases the
+    median low at small n_pairs — every pair must be distinct.  With two
+    points the only distinct pair is (0, 1), so the median is exactly
+    their distance (the old code returned ~0 half the time)."""
+    x = np.array([[0.0, 0.0], [3.0, 4.0]])
+    for seed in range(8):
+        assert rff.median_sigma(x, seed=seed) == pytest.approx(5.0)
+    # a duplicated point is a legitimate zero distance and must survive
+    dup = np.array([[1.0, 1.0], [1.0, 1.0], [4.0, 5.0]])
+    assert rff.median_sigma(dup) >= 0
+    with pytest.raises(ValueError, match="at least 2"):
+        rff.median_sigma(x[:1])
 
 
 def test_privacy_budget_monotone_in_u():
