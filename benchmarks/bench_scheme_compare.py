@@ -21,25 +21,29 @@ from repro.launch import kernel_bench
 
 # (n_clients, l, q, c, iters, realizations) for the profile grid, plus
 # the drift-scenario (static vs adaptive) comparison's, the RunState
-# service benchmark's, and the per-kernel microbenchmark's own sizes
+# service benchmark's, the per-kernel microbenchmark's, and the
+# fault-injection resilience benchmark's own sizes
 _SCALES = {
     "smoke": dict(n_clients=5, l=12, q=16, c=3, iters=8, realizations=3,
                   scenario_kwargs=dict(n_clients=6, l=16, q=16, c=3,
                                        iters=50, adapt_every=5),
                   service_kwargs=dict(n_clients=6, l=16, q=16, c=3,
                                       iters=24, block=6),
-                  kernel_kwargs=dict(kernel_bench.SCALES["smoke"], iters=10)),
+                  kernel_kwargs=dict(kernel_bench.SCALES["smoke"], iters=10),
+                  resilience_kwargs=dict(iters=24)),
     "default": dict(n_clients=12, l=32, q=64, c=5, iters=40,
                     realizations=6, scenario_kwargs=None,
                     service_kwargs=None,
                     kernel_kwargs=dict(kernel_bench.SCALES["default"],
-                                       iters=20)),
+                                       iters=20),
+                    resilience_kwargs=None),
     "full": dict(n_clients=30, l=100, q=256, c=10, iters=150,
                  realizations=8,
                  scenario_kwargs=dict(n_clients=20, l=48, q=64, c=5,
                                       iters=120, adapt_every=8),
                  service_kwargs=None,
-                 kernel_kwargs=dict(kernel_bench.SCALES["full"], iters=20)),
+                 kernel_kwargs=dict(kernel_bench.SCALES["full"], iters=20),
+                 resilience_kwargs=dict(iters=80)),
 }
 
 
@@ -93,6 +97,21 @@ def run(out_path: str = launch_bench.ARTIFACT_NAME, scale: str = "default",
             f"adaptive_speedup={case['adaptive_speedup']:.2f}x;"
             f"tt_static={case['static']['time_to_target']:.2f}s;"
             f"tt_adaptive={case['adaptive']['time_to_target']:.2f}s"))
+    resilience = result.get("resilience")
+    if resilience:
+        for name, case in resilience["cases"].items():
+            rows.append((
+                f"fed_resilience_{name}", case["host_seconds"] * 1e6,
+                f"masked={case['coded']['health']['returns_masked']};"
+                f"naive_skipped="
+                f"{case['naive_unguarded']['health']['rounds_skipped']};"
+                f"graceful={case['coded']['degraded_gracefully']}"))
+        chaos = resilience["service"]
+        rows.append((
+            "fed_resilience_chaos", chaos["host_seconds"] * 1e6,
+            f"crash_retries={chaos['crash_retries']};"
+            f"chaos_ok={chaos['chaos_bit_identical']};"
+            f"fallback_ok={chaos['fallback_recovery_bit_identical']}"))
     return rows
 
 

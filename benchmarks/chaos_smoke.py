@@ -1,0 +1,162 @@
+"""Chaos smoke: SIGKILL a service mid-block AND corrupt its latest
+checkpoint; the restarted service must recover bit-identically.
+
+Extends ``benchmarks/resume_smoke.py`` from kill-tolerance to full
+infrastructure-fault tolerance.  Driver mode (default) runs the control
+service in-process, spawns this same file in ``--child`` mode (an
+`ExperimentService` stepping one block at a time with sleeps to widen
+the kill window), SIGKILLs the child once enough rounds are
+checkpointed, then *corrupts the newest checkpoint on disk* (bit-flips
+through `repro.faults.bitflip_file`) before restarting the service over
+the same root.  The restart must detect the corruption through digest
+verification, fall back to the newest intact checkpoint
+(``fallback_resume``), recompute the lost blocks, and finish with a
+final theta bit-identical to the never-interrupted control.  Exit code
+0 = recovered bit-identically; anything else fails CI.
+
+    PYTHONPATH=src python benchmarks/chaos_smoke.py --root /tmp/chaos
+"""
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+ITERATIONS = 24
+BLOCK = 4           # checkpoint_every
+KILL_AFTER = 8      # SIGKILL once >= this many rounds are checkpointed
+RUN_ID = "chaos-smoke"
+
+
+def build_spec():
+    from repro.config import ExperimentSpec, FLConfig, TrainConfig
+    return ExperimentSpec(
+        fl=FLConfig(n_clients=6, delta=0.25, psi=0.3, seed=3),
+        train=TrainConfig(learning_rate=0.5, l2_reg=1e-5,
+                          lr_decay_epochs=(5,)),
+        scheme="coded", checkpoint_every=BLOCK, run_id=RUN_ID)
+
+
+def data():
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(6, 16, 24)).astype(np.float32) * 0.2
+    ys = rng.normal(size=(6, 16, 3)).astype(np.float32)
+    return xs, ys
+
+
+def make_service(root: str):
+    from repro.launch.service import ExperimentService
+    svc = ExperimentService(root)
+    svc.submit(build_spec(), *data(), ITERATIONS, run_id=RUN_ID)
+    return svc
+
+
+def child(root: str) -> None:
+    """Step the service one block at a time, sleeping in between so the
+    driver can SIGKILL between (not during) block computations."""
+    svc = make_service(root)
+    while svc.pending:
+        svc.step()
+        time.sleep(0.5)
+
+
+def driver(root: str, out: str) -> int:
+    from repro.checkpoint import io as ckpt_io
+    from repro.faults import bitflip_file
+    ckpt_dir = os.path.join(root, RUN_ID)
+    os.makedirs(ckpt_dir, exist_ok=True)
+
+    control = make_service(os.path.join(root, "control")) \
+        .run_until_complete()[RUN_ID]
+
+    proc = subprocess.Popen(
+        [sys.executable, os.path.abspath(__file__),
+         "--child", "--root", root],
+        env=dict(os.environ))
+    deadline = time.time() + 300
+    killed_at = None
+    try:
+        while time.time() < deadline:
+            latest = ckpt_io.latest_checkpoint(ckpt_dir)
+            if latest is not None:
+                rounds = int(os.path.basename(latest)
+                             [len(ckpt_io.CKPT_PREFIX):-len(".npz")])
+                if rounds >= KILL_AFTER:
+                    killed_at = rounds
+                    break
+            if proc.poll() is not None:
+                print(f"FAIL: child exited early (rc={proc.returncode}) "
+                      "before reaching the kill point", file=sys.stderr)
+                return 2
+            time.sleep(0.05)
+    finally:
+        if proc.poll() is None:
+            proc.send_signal(signal.SIGKILL)
+            proc.wait()
+    if killed_at is None:
+        print("FAIL: no checkpoint appeared within the deadline",
+              file=sys.stderr)
+        return 2
+    assert killed_at < ITERATIONS, "child finished before the kill"
+
+    # the second fault: bit rot on the newest checkpoint the kill left
+    corrupted = ckpt_io.latest_checkpoint(ckpt_dir)
+    bitflip_file(corrupted)
+
+    svc = make_service(root)                   # the restart
+    run = svc.runs[RUN_ID]
+    results = svc.run_until_complete()
+    health = svc.health_report()[RUN_ID]
+
+    theta_ok = results[RUN_ID] is not None and bool(np.array_equal(
+        np.asarray(control.theta), np.asarray(results[RUN_ID].theta)))
+    wall_ok = results[RUN_ID] is not None and (
+        [h.wall_clock for h in control.history]
+        == [h.wall_clock for h in results[RUN_ID].history])
+    fallback_ok = bool(run.fallback_resume)
+    ok = theta_ok and wall_ok and fallback_ok
+
+    report = {
+        "iterations": ITERATIONS, "checkpoint_every": BLOCK,
+        "killed_at_round": killed_at,
+        "corrupted_checkpoint": os.path.basename(corrupted),
+        "fallback_resume": fallback_ok,
+        "resumed_at_round": (killed_at - BLOCK if run.resumed else None),
+        "theta_bit_identical": theta_ok,
+        "wall_clock_identical": wall_ok,
+        "health": health, "ok": ok,
+    }
+    if out:
+        with open(out, "w") as fh:
+            json.dump(report, fh, indent=2)
+    print(json.dumps(report, indent=2))
+    if not ok:
+        print("FAIL: chaos recovery diverged from control",
+              file=sys.stderr)
+        return 1
+    print(f"OK: SIGKILL at round {killed_at} + corrupted "
+          f"{os.path.basename(corrupted)}, recovered bit-identically")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--child", action="store_true",
+                    help="run the killable service loop")
+    ap.add_argument("--root", required=True,
+                    help="service checkpoint root")
+    ap.add_argument("--out", default="",
+                    help="optional JSON report path (driver mode)")
+    args = ap.parse_args()
+    if args.child:
+        child(args.root)
+        return 0
+    return driver(args.root, args.out)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,18 +36,21 @@ import numpy as np
 from repro.config import ExperimentSpec
 from repro.core import schemes
 from repro.core.fed_runtime import (Experiment, FedResult,  # noqa: F401
-                                    MultiFedResult)
+                                    MultiFedResult, RunHealth)
 from repro.core.run_state import RunState  # noqa: F401
 from repro.core.schemes import (Scheme, get_scheme, grid_names,  # noqa: F401
                                 register, registered_names)
+from repro.faults import (FAULT_PROFILES, FaultProfile,  # noqa: F401
+                          get_fault_profile)
 from repro.net.channel import (CHANNEL_PROFILES,  # noqa: F401
                                ChannelProfile)
 
 __all__ = [
     "ExperimentSpec", "Experiment", "ExperimentService", "FedResult",
-    "MultiFedResult", "RunState", "Scheme", "build_experiment",
-    "get_scheme", "grid_names", "register", "registered_names",
-    "CHANNEL_PROFILES", "ChannelProfile",
+    "MultiFedResult", "RunHealth", "RunState", "Scheme",
+    "build_experiment", "get_scheme", "grid_names", "register",
+    "registered_names", "CHANNEL_PROFILES", "ChannelProfile",
+    "FAULT_PROFILES", "FaultProfile", "get_fault_profile",
 ]
 
 

@@ -21,12 +21,23 @@ Keys starting with ``__`` are reserved for format metadata (``__step__``,
 
 Writes are atomic (tmp file + ``os.replace``), so a run killed mid-save
 leaves the previous checkpoint intact — `latest_checkpoint` then resumes
-from the newest complete snapshot.
+from the newest complete snapshot.  Stale ``*.tmp`` leftovers from a
+mid-save kill are swept on the next successful save and never considered
+resume candidates.
+
+Run-state snapshots carry a sha256 content digest inside ``__meta__``
+(over canonical array bytes + metadata JSON, not raw npz bytes — zip
+headers embed timestamps).  `restore_state` verifies it and raises
+`CheckpointCorruptError` on truncation, bit rot, or a digest mismatch;
+``latest_checkpoint(..., valid_only=True)`` then falls back to the newest
+checkpoint that still verifies.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import zipfile
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +47,13 @@ import numpy as np
 RESERVED_PREFIX = "__"
 #: filename prefix the runtime uses for block-boundary snapshots
 CKPT_PREFIX = "ckpt_"
+
+#: key carrying the sha256 content digest inside the ``__meta__`` blob
+DIGEST_KEY = "__digest__"
+
+
+class CheckpointCorruptError(ValueError):
+    """A checkpoint file is unreadable or fails digest verification."""
 
 
 def _flatten(tree):
@@ -51,11 +69,29 @@ def _flatten(tree):
     return out
 
 
+def _sweep_stale_tmp(directory: str) -> None:
+    """Remove ``*.tmp`` / ``*.tmp.npz`` leftovers of mid-save kills."""
+    try:
+        names = os.listdir(directory)
+    except OSError:
+        return
+    for name in names:
+        if name.endswith(".tmp") or name.endswith(".tmp.npz"):
+            try:
+                os.remove(os.path.join(directory, name))
+            except OSError:
+                pass
+
+
 def _atomic_savez(path: str, flat: dict) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    directory = os.path.dirname(path) or "."
+    os.makedirs(directory, exist_ok=True)
     tmp = path + ".tmp"
     np.savez(tmp, **flat)
     os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    # a previous save killed between np.savez and os.replace leaves its
+    # tmp file behind forever — sweep those now that this save landed
+    _sweep_stale_tmp(directory)
 
 
 def save(path: str, tree, step: int | None = None):
@@ -112,55 +148,123 @@ def restore_step(path: str) -> int | None:
 # Run-state payloads: named arrays + one JSON metadata blob
 # ---------------------------------------------------------------------------
 
+def _state_digest(arrays: dict, meta: dict) -> str:
+    """sha256 over canonical array bytes + metadata JSON.
+
+    Deliberately NOT a hash of the npz file: zip member headers embed
+    timestamps, so byte-identical payloads produce different files.
+    Hashing (key, dtype, shape, bytes) per array plus the sorted-key
+    metadata JSON makes the digest a pure function of the checkpoint
+    *content*.
+    """
+    h = hashlib.sha256()
+    for key in sorted(arrays):
+        arr = np.ascontiguousarray(arrays[key])
+        h.update(key.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(repr(arr.shape).encode())
+        h.update(arr.tobytes())
+    h.update(json.dumps(meta, sort_keys=True).encode())
+    return h.hexdigest()
+
+
 def save_state(path: str, arrays: dict, meta: dict) -> str:
     """Atomically write a mixed arrays + JSON-metadata snapshot.
 
     `arrays` maps names to array-likes (names must not use the reserved
     ``__`` prefix); `meta` is any JSON-serializable dict — RNG
     bit-generator states round-trip because PCG64 state words are plain
-    (big) Python ints, which JSON handles exactly.
+    (big) Python ints, which JSON handles exactly.  A sha256 content
+    digest is embedded under ``__digest__`` inside the ``__meta__`` blob
+    and verified by `restore_state`.
     """
     bad = sorted(k for k in arrays if k.startswith(RESERVED_PREFIX))
     if bad:
         raise ValueError(f"array key(s) {bad} use the reserved "
                          f"{RESERVED_PREFIX!r} prefix")
+    if DIGEST_KEY in meta:
+        raise ValueError(f"meta key {DIGEST_KEY!r} is reserved")
     flat = {k: np.asarray(v) for k, v in arrays.items()}
-    flat["__meta__"] = np.asarray(json.dumps(meta))
+    meta_full = dict(meta)
+    meta_full[DIGEST_KEY] = _state_digest(flat, meta)
+    flat["__meta__"] = np.asarray(json.dumps(meta_full))
     _atomic_savez(path, flat)
     return path
 
 
-def restore_state(path: str) -> tuple[dict, dict]:
-    """Load a `save_state` snapshot -> (arrays, meta)."""
-    with np.load(path) as data:
-        if "__meta__" not in data.files:
-            raise ValueError(
-                f"{path!r} is not a run-state checkpoint (no __meta__ "
-                "payload; param-tree snapshots restore via `restore`)")
-        meta = json.loads(str(data["__meta__"][()]))
-        arrays = {k: data[k] for k in data.files
-                  if not k.startswith(RESERVED_PREFIX)}
+def restore_state(path: str, verify: bool = True) -> tuple[dict, dict]:
+    """Load a `save_state` snapshot -> (arrays, meta).
+
+    Unreadable files (truncation, zip damage) and digest mismatches (bit
+    rot) raise `CheckpointCorruptError`.  Snapshots written before the
+    digest existed load without verification.  ``verify=False`` skips
+    the digest check (forensics on a known-bad file).
+    """
+    try:
+        with np.load(path) as data:
+            raw = {k: data[k] for k in data.files}
+    except (OSError, EOFError, ValueError, KeyError,
+            zipfile.BadZipFile) as exc:
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r} is unreadable "
+            f"(truncated or damaged): {exc}") from exc
+    if "__meta__" not in raw:
+        raise ValueError(
+            f"{path!r} is not a run-state checkpoint (no __meta__ "
+            "payload; param-tree snapshots restore via `restore`)")
+    try:
+        meta = json.loads(str(raw["__meta__"][()]))
+    except json.JSONDecodeError as exc:
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r} holds an unparseable __meta__ "
+            f"blob: {exc}") from exc
+    arrays = {k: v for k, v in raw.items()
+              if not k.startswith(RESERVED_PREFIX)}
+    digest = meta.pop(DIGEST_KEY, None)
+    if verify and digest is not None:
+        actual = _state_digest(arrays, meta)
+        if actual != digest:
+            raise CheckpointCorruptError(
+                f"checkpoint {path!r} failed digest verification "
+                f"(stored {digest[:12]}…, recomputed {actual[:12]}…) — "
+                "the file was corrupted after writing")
     return arrays, meta
 
 
-def latest_checkpoint(directory: str,
-                      prefix: str = CKPT_PREFIX) -> str | None:
+def latest_checkpoint(directory: str, prefix: str = CKPT_PREFIX,
+                      valid_only: bool = False) -> str | None:
     """Newest ``<prefix><number>.npz`` in `directory`, or None.
 
     "Newest" orders by the numeric suffix (the rounds-done cursor the
     runtime embeds in the filename), not by mtime, so a clock-skewed
-    filesystem cannot resume from a stale block.
+    filesystem cannot resume from a stale block.  Half-written
+    ``*.tmp`` leftovers are never candidates.
+
+    With ``valid_only=True`` candidates are tried newest-first and the
+    first one that passes `restore_state`'s digest verification wins —
+    a corrupted latest checkpoint falls back to the newest intact one
+    instead of poisoning the resume.
     """
     if not os.path.isdir(directory):
         return None
-    best, best_key = None, None
+    candidates = []
     for name in os.listdir(directory):
         if not (name.startswith(prefix) and name.endswith(".npz")):
+            continue
+        if ".tmp" in name:
             continue
         try:
             key = int(name[len(prefix):-len(".npz")])
         except ValueError:
             continue
-        if best_key is None or key > best_key:
-            best, best_key = name, key
-    return None if best is None else os.path.join(directory, best)
+        candidates.append((key, name))
+    for _, name in sorted(candidates, reverse=True):
+        path = os.path.join(directory, name)
+        if not valid_only:
+            return path
+        try:
+            restore_state(path)
+        except CheckpointCorruptError:
+            continue
+        return path
+    return None

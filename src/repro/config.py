@@ -227,6 +227,22 @@ class ExperimentSpec:
     channel_profile: Optional[str] = None
     channel_params: Tuple[Tuple[str, object], ...] = ()
     adapt_every: int = 0
+    # fault injection (repro.faults): a named FaultProfile whose
+    # return-fault knobs (non-finite uploads, stale replay, parity
+    # corruption) are injected into the compiled step, and whose
+    # infrastructure knobs (block crashes, checkpoint corruption) the
+    # ExperimentService consumes.  `fault_params` overrides individual
+    # knobs like `channel_params`.  Fault draws come from a dedicated
+    # RNG stream, so toggling faults never shifts the delay/channel
+    # realization.
+    fault_profile: Optional[str] = None
+    fault_params: Tuple[Tuple[str, object], ...] = ()
+    # jit-compatible non-finite guard: mask faulty client contributions
+    # out of the weighted gradient mask (coded schemes: the parity
+    # gradient compensates the masked mass).  On a clean run the guard
+    # is an IEEE no-op, so trajectories stay bit-identical; disabling it
+    # leaves only the always-on theta-divergence round-skip guard.
+    nonfinite_guard: bool = True
     engine: str = "batched"
     kernel_backend: str = "xla"
     alloc_backend: str = "auto"
@@ -269,7 +285,7 @@ class ExperimentSpec:
         # normalize scheme_params / channel_params (dict / iterable of
         # pairs) to a sorted tuple of pairs so equal specs hash equal
         # regardless of input form
-        for field in ("scheme_params", "channel_params"):
+        for field in ("scheme_params", "channel_params", "fault_params"):
             params = getattr(self, field)
             if isinstance(params, dict):
                 items = params.items()
@@ -331,6 +347,27 @@ class ExperimentSpec:
             # knob names (and values, via construction) validated eagerly
             # so the error points at the spec
             self.resolved_channel()
+        if not isinstance(self.nonfinite_guard, bool):
+            raise ValueError(f"nonfinite_guard must be a bool, "
+                             f"got {self.nonfinite_guard!r}")
+        if self.fault_profile is not None or self.fault_params:
+            from repro.faults.profile import FAULT_PROFILES
+            name = self.fault_profile
+            if name is not None and name not in FAULT_PROFILES:
+                raise ValueError(
+                    f"unknown fault_profile {name!r} "
+                    f"(expected one of {tuple(FAULT_PROFILES)})")
+            if self.engine == "legacy":
+                raise ValueError(
+                    "fault injection requires the batched engine; the "
+                    "legacy per-client oracle has no fault path")
+            if self.mesh is not None and self.resolved_faults() is not None \
+                    and self.resolved_faults().has_return_faults:
+                raise ValueError(
+                    "return-fault injection does not support client-mesh "
+                    "sharding yet (crash/checkpoint faults are fine)")
+            # knob names/values validated eagerly, like channel_params
+            self.resolved_faults()
 
     @property
     def resolved_scheme(self) -> str:
@@ -343,6 +380,25 @@ class ExperimentSpec:
     @property
     def channel_params_dict(self) -> dict:
         return dict(self.channel_params)
+
+    @property
+    def fault_params_dict(self) -> dict:
+        return dict(self.fault_params)
+
+    def resolved_faults(self):
+        """The effective `FaultProfile`, or None when no faults are
+        requested.  ``fault_params`` override the named profile's knobs
+        (base profile "none" when only overrides are given)."""
+        if self.fault_profile is None and not self.fault_params:
+            return None
+        from repro.faults.profile import FAULT_PROFILES
+        base = FAULT_PROFILES[self.fault_profile or "none"]
+        if not self.fault_params:
+            return base
+        try:
+            return dataclasses.replace(base, **self.fault_params_dict)
+        except TypeError as exc:
+            raise ValueError(f"bad fault_params: {exc}") from None
 
     def resolved_channel(self):
         """The effective `ChannelProfile`, or None when no dynamics are
@@ -373,6 +429,7 @@ class ExperimentSpec:
         d = dataclasses.asdict(self)
         d["scheme_params"] = dict(self.scheme_params)
         d["channel_params"] = dict(self.channel_params)
+        d["fault_params"] = dict(self.fault_params)
         return d
 
     @classmethod

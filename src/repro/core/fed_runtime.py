@@ -67,6 +67,19 @@ re-solving the load allocation every ``adapt_every`` rounds, applied as
 block-indexed mask re-weighting so shapes (and the compiled step) never
 change.
 
+Robustness (``ExperimentSpec.fault_profile``, ``repro.faults``): the
+compiled step carries two guards.  The non-finite guard
+(``spec.nonfinite_guard``, default on) zeroes non-finite client/parity
+gradient rows out of the weighted sum and counts them — for coded
+schemes the parity gradient compensates the masked mass exactly as it
+covers stragglers.  The always-on divergence guard never commits a
+non-finite iterate: the round is skipped (model held) and the effective
+lr backs off by `LR_BACKOFF` per skip.  Both are IEEE no-ops on clean
+rounds, so guarded fault-free runs stay bit-identical to history.
+Injected return faults (NaN/inf uploads, stale-update replay, corrupted
+parity) ride the scan inputs from a dedicated RNG stream; degradation
+counters thread through `RunState` and surface as `FedResult.health`.
+
 ``kernel_backend`` selects how the batched engine computes gradients:
 ``"xla"`` (default) is the plain-jnp vmapped path; ``"pallas"`` routes every
 per-round gradient through the fused Pallas kernels
@@ -124,11 +137,15 @@ from repro.core.delay_model import (mec_network, packet_bits,
 from repro.core.run_state import RunState, pack_state, unpack_state
 from repro.net.estimator import (AdaptiveSchedule, OnlineChannelEstimator,
                                  plan_segment)
+from repro.faults import inject as finject
 from repro.net.trace import (TraceState, generate_trace_block,
                              sample_round_times_traced)
 
 #: name of the client-partitioned mesh axis (see `repro.launch.mesh`)
 CLIENT_AXIS = "clients"
+
+#: divergence-guard learning-rate backoff per skipped round
+LR_BACKOFF = 0.5
 
 
 # jitted once at module level so the legacy oracle keeps the same compiled
@@ -147,6 +164,24 @@ class RoundLog:
 
 
 @dataclasses.dataclass
+class RunHealth:
+    """Degradation counters of a completed batched-engine run.
+
+    ``rounds_degraded`` counts rounds where the non-finite guard masked
+    at least one contribution (client upload or parity row);
+    ``returns_masked`` is the total masked contributions over the run;
+    ``rounds_skipped`` counts divergence-guard skips (iterate kept, lr
+    backed off by `LR_BACKOFF`); ``lr_scale`` is the final backoff
+    multiplier — 1.0 means the divergence guard never fired (for multi
+    runs: the worst realization's).
+    """
+    rounds_degraded: int
+    returns_masked: int
+    rounds_skipped: int
+    lr_scale: float
+
+
+@dataclasses.dataclass
 class FedResult:
     theta: jnp.ndarray
     history: list[RoundLog]
@@ -157,6 +192,9 @@ class FedResult:
     # (core/privacy.py, paper Appendix F); None for schemes that share
     # nothing beyond gradients
     privacy_eps: float | None = None
+    # degradation counters (batched engine only; the legacy oracle has
+    # no guards and reports None)
+    health: RunHealth | None = None
 
 
 @dataclasses.dataclass
@@ -174,6 +212,7 @@ class MultiFedResult:
     setup_time: float = 0.0
     accuracy: np.ndarray | None = None   # (R,) if an eval_fn was supplied
     privacy_eps: float | None = None     # see FedResult.privacy_eps
+    health: RunHealth | None = None      # aggregated over realizations
 
     def wall_clock_bands(self) -> tuple[np.ndarray, np.ndarray]:
         """(mean, std) over realizations, each (iterations,) — the Fig. 4/5
@@ -188,36 +227,68 @@ class MultiFedResult:
 # vmappable over a profile axis); everything Python-static lives in `static`.
 # ---------------------------------------------------------------------------
 
+def _guard_and_sum(g, ret, bad, guard):
+    """Inject per-row corruption, guard non-finite rows, and reduce.
+
+    Returns ``(g_sum, n_masked)``.  `bad` (rows,) carries injected fault
+    values: a non-finite entry replaces the whole gradient row of a
+    client that RETURNED this round (a client past the deadline uploads
+    nothing, corrupt or not); finite entries leave rows bit-untouched
+    (the replacement is a `where`, never an add, so -0.0 entries
+    survive).  With `guard` every non-finite row — injected or organic —
+    is zeroed out of the weighted sum and counted; without it, poison
+    flows into the iterate and the always-on divergence guard skips the
+    round instead.  On an all-finite run the guard is an IEEE no-op
+    (``where(True, g, 0) == g``), so guard-on clean trajectories stay
+    bit-identical to historical ones.
+    """
+    if bad is not None:
+        live_bad = jnp.where(ret > 0.0, bad, 0.0)
+        g = jnp.where(jnp.isfinite(live_bad)[:, None, None], g,
+                      live_bad[:, None, None])
+    if not guard:
+        return aggregation.masked_gradient_sum(g, ret), jnp.int32(0)
+    finite = jnp.all(jnp.isfinite(g), axis=(1, 2))
+    n_masked = jnp.sum((ret > 0.0) & ~finite).astype(jnp.int32)
+    g = jnp.where(finite[:, None, None], g, 0.0)
+    return aggregation.masked_gradient_sum(g, ret), n_masked
+
+
 def _make_grad_sum(static: dict):
-    """g_sum(gx, gy, gmask, ret, theta) -> (q, c) returned-masked gradient sum.
+    """g_sum(gx, gy, gmask, ret, theta[, bad]) ->
+    ((q, c) returned-masked gradient sum, n_masked int32).
 
     Single-device: one masked-kernel call over the whole client tensor.
-    Mesh mode: the same call per client shard inside `shard_map`, reduced
-    with a psum over the `clients` axis (the MEC server aggregation).
-    With ``fused_embed`` the call signature becomes
-    ``g_sum(consts, gmask, ret, theta)`` — the fused embed->gradient
-    kernel needs the omega/delta (and coded pphi) consts alongside the
-    raw client tensor, and never runs under a mesh.
+    Mesh mode: the same call per client shard inside `shard_map`, the
+    (sum, count) pair reduced with a psum over the `clients` axis (the
+    MEC server aggregation).  With ``fused_embed`` the call signature
+    becomes ``g_sum(consts, gmask, ret, theta[, bad])`` — the fused
+    embed->gradient kernel needs the omega/delta (and coded pphi) consts
+    alongside the raw client tensor, and never runs under a mesh.  `bad`
+    (fault injection, see `_guard_and_sum`) is only ever passed on the
+    non-mesh paths — return-fault injection under a mesh is rejected at
+    construction.
     """
     use_pallas = static["use_pallas"]
     interpret = static["interpret"]
     mesh: Optional[Mesh] = static["mesh"]
+    guard = static.get("guard", True)
 
     if static.get("fused_embed", False):
-        def local_fused(consts, gmask, ret, theta):
+        def local_fused(consts, gmask, ret, theta, bad=None):
             g = aggregation.fused_embed_client_gradients(
                 consts["gx"], consts["gy"], consts["omega"],
                 consts["delta"], theta, mask=gmask,
                 parity_phi=consts.get("pphi"), use_pallas=use_pallas,
                 interpret=interpret)
-            return aggregation.masked_gradient_sum(g, ret)
+            return _guard_and_sum(g, ret, bad, guard)
         return local_fused
 
-    def local(gx, gy, gmask, ret, theta):
+    def local(gx, gy, gmask, ret, theta, bad=None):
         g = aggregation.batched_client_gradients(
             gx, gy, theta, mask=gmask, use_pallas=use_pallas,
             interpret=interpret)
-        return aggregation.masked_gradient_sum(g, ret)
+        return _guard_and_sum(g, ret, bad, guard)
 
     if mesh is None:
         return local
@@ -231,18 +302,25 @@ def _make_grad_sum(static: dict):
         shard, mesh=mesh,
         in_specs=(P(CLIENT_AXIS), P(CLIENT_AXIS), P(CLIENT_AXIS),
                   P(CLIENT_AXIS), P()),
-        out_specs=P(), check_rep=False)
+        out_specs=(P(), P()), check_rep=False)
 
 
 def build_step(static: dict):
-    """One scan step ``step(consts, theta, inp)``.
+    """One scan step ``step(consts, carry, inp)``.
 
     `static` (Python-level, fixed at trace time): scheme, n, n_wait, l2, m,
-    l, fused, mesh, use_pallas, interpret, collect_theta, channel.
+    l, fused, mesh, use_pallas, interpret, collect_theta, channel, guard,
+    faults, stale.
     `consts` (arrays, vmappable): gx (rows, L, q), gy (rows, L, c), gmask
     (rows, L), ret_tail (rows - n,); coded adds t_star (), active (n,) and —
     when unfused — par_x (u, q) / par_y (u, c); adaptive_coded adds
     gmask_blocks (B, rows, L).
+
+    ``carry`` is ``(theta, lr_scale)`` — lr_scale is the divergence
+    guard's backoff multiplier, 1.0 until a non-finite iterate is
+    produced, halved (`LR_BACKOFF`) on every skipped round thereafter;
+    with ``stale=True`` (stale-update fault injection) it grows the
+    previous round's iterate: ``(theta, lr_scale, theta_prev)``.
 
     ``inp`` is ``(t_row, lr)`` on the stationary path.  With
     ``channel=True`` (a network trace drives the run) it grows a per-round
@@ -252,9 +330,14 @@ def build_step(static: dict):
     with their per-round control values: ``(..., t_star_r, block)`` for
     adaptive_coded (the block index selects that block's re-allocated
     fused load mask — pure mask re-weighting, shapes never change) and
-    ``(..., n_wait_r)`` for adaptive_greedy.  Under the static channel
+    ``(..., n_wait_r)`` for adaptive_greedy.  With ``faults=True``
+    (`repro.faults`) two fault inputs ride at the very END of the tuple:
+    ``(..., fcode, fpar)`` — per-client fault codes (n,) int32 and the
+    round's corrupted-parity flag () f32.  Under the static channel
     profile `active` is identically 1.0 and every extra operation is an
-    IEEE no-op, so trajectories stay bit-identical to the stationary path.
+    IEEE no-op, so trajectories stay bit-identical to the stationary
+    path; likewise guard-on fault-free steps compile to bit-identical
+    trajectories (see `_guard_and_sum`).
 
     Scheme dispatch is static, so each scheme compiles to a straight-line
     fused update.
@@ -268,12 +351,22 @@ def build_step(static: dict):
     fused = static["fused"]
     fused_embed = static.get("fused_embed", False)
     channel = static.get("channel", False)
+    guard = static.get("guard", True)
+    faults = static.get("faults", False)
+    stale = static.get("stale", False)
     collect_theta = static["collect_theta"]
     use_pallas = static["use_pallas"]
     interpret = static["interpret"]
     grad_sum = _make_grad_sum(static)
 
-    def step(consts, theta, inp):
+    def step(consts, carry, inp):
+        if stale:
+            theta, lr_scale, theta_prev = carry
+        else:
+            theta, lr_scale = carry
+        if faults:
+            *inp, fcode, fpar = inp
+            inp = tuple(inp)
         gmask = consts["gmask"]
         if scheme == "adaptive_coded":
             t_row, lr, active, t_star_r, block = inp
@@ -343,19 +436,74 @@ def build_step(static: dict):
         # row (fused coded) and any zero-mask mesh padding rows.
         ret = jnp.concatenate([ret_real.astype(jnp.float32),
                                consts["ret_tail"]])
-        if fused_embed:
-            g_sum = grad_sum(consts, gmask, ret, theta)
+        bad = None
+        if faults:
+            # per-row injected fault values: NaN/inf garbage where the
+            # fault code says so, 0.0 (= leave the row untouched) where
+            # clean; the parity pseudo-row (tail[0] of the fused coded
+            # tensors) corrupts on the round's fpar flag
+            bad_client = jnp.where(
+                fcode == finject.CODE_NAN, jnp.float32(jnp.nan),
+                jnp.where(fcode == finject.CODE_INF, jnp.float32(jnp.inf),
+                          jnp.float32(0.0)))
+            tail_n = consts["ret_tail"].shape[0]
+            tail_bad = jnp.zeros((tail_n,), jnp.float32)
+            if fused and scheme in ("coded", "adaptive_coded") and tail_n:
+                tail_bad = tail_bad.at[0].set(
+                    jnp.where(fpar > 0, jnp.float32(jnp.nan),
+                              jnp.float32(0.0)))
+            bad = jnp.concatenate([bad_client, tail_bad])
+
+        def sum_at(th, ret_v):
+            args = ((consts, gmask, ret_v, th) if fused_embed
+                    else (consts["gx"], consts["gy"], gmask, ret_v, th))
+            if faults:
+                args = args + (bad,)
+            return grad_sum(*args)
+
+        if stale:
+            # stale-replay clients contribute their gradient at the
+            # PREVIOUS iterate: partition the returned mask into fresh
+            # and stale rows and take a second masked sum at theta_prev
+            # (the parity row is server-side and always fresh)
+            stale_f = (fcode == finject.CODE_STALE).astype(jnp.float32)
+            stale_full = jnp.concatenate(
+                [stale_f, jnp.zeros_like(consts["ret_tail"])])
+            g_fresh, m_fresh = sum_at(theta, ret * (1.0 - stale_full))
+            g_stale, m_stale = sum_at(theta_prev, ret * stale_full)
+            g_sum = g_fresh + g_stale
+            n_masked = m_fresh + m_stale
         else:
-            g_sum = grad_sum(consts["gx"], consts["gy"], gmask, ret, theta)
+            g_sum, n_masked = sum_at(theta, ret)
         if scheme == "coded" and not fused:
-            g_sum = g_sum + aggregation.coded_gradient(
+            g_par = aggregation.coded_gradient(
                 consts["par_x"], consts["par_y"], theta, pnr_c=0.0,
                 use_pallas=use_pallas, interpret=interpret)
-        theta_new = theta - lr * (g_sum / denom + l2 * theta)
-        out = (t_round, n_ret)
+            if faults:
+                par_bad = jnp.where(fpar > 0, jnp.float32(jnp.nan),
+                                    jnp.float32(0.0))
+                g_par = jnp.where(jnp.isfinite(par_bad), g_par, par_bad)
+            if guard:
+                par_ok = jnp.all(jnp.isfinite(g_par))
+                n_masked = n_masked + (~par_ok).astype(jnp.int32)
+                g_par = jnp.where(par_ok, g_par, 0.0)
+            g_sum = g_sum + g_par
+        theta_upd = theta - (lr * lr_scale) * (g_sum / denom + l2 * theta)
+        # always-on divergence guard: a non-finite iterate is never
+        # committed — the round is skipped (model held) and the lr backs
+        # off.  `lr * lr_scale` with lr_scale == 1.0 is bit-identical to
+        # the unguarded update, so clean runs reproduce history exactly.
+        ok = jnp.all(jnp.isfinite(theta_upd))
+        theta_new = jnp.where(ok, theta_upd, theta)
+        lr_scale_new = jnp.where(ok, lr_scale,
+                                 lr_scale * jnp.float32(LR_BACKOFF))
+        skipped = (~ok).astype(jnp.int32)
+        out = (t_round, n_ret, n_masked, skipped)
         if collect_theta:
             out = out + (theta_new,)
-        return theta_new, out
+        carry_new = ((theta_new, lr_scale_new, theta) if stale
+                     else (theta_new, lr_scale_new))
+        return carry_new, out
 
     return step
 
@@ -488,6 +636,22 @@ class Experiment:
                 # network, allocation stays ~put)
                 from repro.net.channel import CHANNEL_PROFILES
                 self.channel = CHANNEL_PROFILES["static"]
+        # --- fault injection (repro.faults): return faults compile into
+        # the step via a dedicated RNG stream; service-level faults
+        # (crashes, checkpoint corruption) are read by ExperimentService
+        self.faults = spec.resolved_faults()
+        self.nonfinite_guard = bool(spec.nonfinite_guard)
+        self.return_faults = (self.faults is not None
+                              and self.faults.has_return_faults)
+        self.stale_faults = (self.faults is not None
+                             and self.faults.stale_prob > 0.0)
+        if self.return_faults and self.mesh is not None:
+            # the config layer rejects spec.mesh; this catches the
+            # build_experiment(..., mesh=...) override path too
+            raise NotImplementedError(
+                "return-fault injection does not support client-mesh "
+                "sharding yet (crash/checkpoint faults are fine)")
+        self._fault_seed = fl_cfg.seed + 7717
         self.checkpoint_every = spec.checkpoint_every
         if (self.checkpoint_every > 0 and self.adaptive
                 and self.checkpoint_every % self.adapt_every != 0):
@@ -649,6 +813,9 @@ class Experiment:
             "interpret": self._interpret,
             "collect_theta": collect_theta,
             "channel": self.channel is not None,
+            "guard": self.nonfinite_guard,
+            "faults": self.return_faults,
+            "stale": self.stale_faults,
         }
 
     def scheme_params_estimator_kwargs(self) -> dict:
@@ -708,9 +875,9 @@ class Experiment:
         fn = self._scan_cache.get(cache_key)
         if fn is None:
             step = build_step(self.step_static(collect_theta))
-            fn = jax.jit(lambda consts, theta0, xs:
-                         jax.lax.scan(lambda th, inp: step(consts, th, inp),
-                                      theta0, xs))
+            fn = jax.jit(lambda consts, carry0, xs:
+                         jax.lax.scan(lambda c, inp: step(consts, c, inp),
+                                      carry0, xs))
             self._scan_cache[cache_key] = fn
         return fn
 
@@ -726,23 +893,57 @@ class Experiment:
 
     def _get_multi_scan(self):
         """jit'd vmapped scan for the stationary multi-realization mode,
-        cached once per scheme.  Takes the per-realization theta carry
-        explicitly so blocks chain across calls."""
+        cached once per scheme.  Takes the per-realization carry
+        explicitly so blocks chain across calls.  With return faults
+        enabled the per-realization fault inputs join the vmapped xs."""
         cache_key = (self.scheme, "multi")
         fn = self._scan_cache.get(cache_key)
         if fn is None:
             step = build_step(self.step_static(collect_theta=False))
-
-            def multi(consts, theta0_r, times_r, lrs_r):
-                def one(th0, tj):
-                    return jax.lax.scan(
-                        lambda th, inp: step(consts, th, inp), th0,
-                        (tj, lrs_r))
-                return jax.vmap(one)(theta0_r, times_r)
+            if self.return_faults:
+                def multi(consts, carry0_r, times_r, lrs_r, fc_r, fp_r):
+                    def one(c0, tj, fc, fp):
+                        return jax.lax.scan(
+                            lambda c, inp: step(consts, c, inp), c0,
+                            (tj, lrs_r, fc, fp))
+                    return jax.vmap(one)(carry0_r, times_r, fc_r, fp_r)
+            else:
+                def multi(consts, carry0_r, times_r, lrs_r):
+                    def one(c0, tj):
+                        return jax.lax.scan(
+                            lambda c, inp: step(consts, c, inp), c0,
+                            (tj, lrs_r))
+                    return jax.vmap(one)(carry0_r, times_r)
 
             fn = jax.jit(multi)
             self._scan_cache[cache_key] = fn
         return fn
+
+    # ------------------------------------------------------- fault plumbing
+    def _fault_rows(self, state: RunState, rounds: int):
+        """Draw `rounds` rows of fault inputs from the state's dedicated
+        fault stream; returns ``(xs_extra, new_rng_state)`` — ``((), old
+        state)`` when return faults are off.  The stream is seeded off
+        ``fl.seed + 7717``, independent of both the delay-draw RNG and
+        the channel-trace streams, so toggling faults never shifts the
+        network realization a run faces."""
+        if not self.return_faults:
+            return (), state.fault_rng_state
+        frng = np.random.default_rng()
+        frng.bit_generator.state = state.fault_rng_state
+        fcodes, fpar = finject.sample_fault_rows(
+            self.faults, frng, rounds, self.n)
+        return ((jnp.asarray(fcodes), jnp.asarray(fpar, jnp.float32)),
+                frng.bit_generator.state)
+
+    def _carry0(self, theta, lr_scale, theta_prev=None):
+        """Scan carry matching `build_step`'s static configuration."""
+        carry = (jnp.asarray(theta),
+                 jnp.asarray(np.asarray(lr_scale), jnp.float32))
+        if self.stale_faults:
+            carry = carry + (jnp.asarray(
+                theta if theta_prev is None else theta_prev),)
+        return carry
 
     # ------------------------------------------------- block-structured runs
     def init_state(self, iterations: int, *,
@@ -793,25 +994,45 @@ class Experiment:
             theta = jnp.zeros((self.q, self.c), jnp.float32)
             t_rounds = np.zeros(0, np.float64)
             n_ret = np.zeros(0, np.int32)
+            lr_scale = 1.0
+            n_masked = np.zeros(0, np.int64)
+            skipped = np.zeros(0, np.int64)
         elif mode == "multi":
             theta = jnp.zeros((R, self.q, self.c), jnp.float32)
             t_rounds = np.zeros((R, 0), np.float64)
             n_ret = np.zeros((R, 0), np.int32)
+            lr_scale = np.ones(R, np.float64)
+            n_masked = np.zeros((R, 0), np.int64)
+            skipped = np.zeros((R, 0), np.int64)
         else:
             theta = jnp.zeros((R, self.q, self.c), jnp.float32)
             t_rounds = np.zeros((0, iterations), np.float64)
             n_ret = np.zeros((0, iterations), np.int32)
+            lr_scale = np.ones(R, np.float64)
+            n_masked = np.zeros((0, iterations), np.int64)
+            skipped = np.zeros((0, iterations), np.int64)
         losses = accs = None
         if mode == "single" and collect:
             losses = np.zeros(0, np.float64)
             accs = np.zeros(0, np.float64)
+        # stale-fault replay needs the previous iterate in the carry;
+        # multi_channel blocks are whole realizations, so theirs is
+        # block-local and never lives in the state
+        theta_prev = (theta if self.stale_faults
+                      and mode != "multi_channel" else None)
+        fault_rng_state = None
+        if self.return_faults:
+            fault_rng_state = np.random.default_rng(
+                (self._fault_seed,)).bit_generator.state
         return RunState(
             mode=mode, iterations=iterations, rounds_done=0,
             realizations_done=0, n_realizations=R, collect=bool(collect),
             theta=theta, rng_state=self.rng.bit_generator.state,
             trace_call=trace_call, trace=trace, est=est, controls=controls,
             t_rounds=t_rounds, n_ret=n_ret, losses=losses, accs=accs,
-            sched=sched)
+            sched=sched, lr_scale=lr_scale, n_masked=n_masked,
+            skipped=skipped, theta_prev=theta_prev,
+            fault_rng_state=fault_rng_state)
 
     def run_block(self, state: RunState, n_rounds: Optional[int] = None, *,
                   eval_fn: Optional[Callable] = None,
@@ -898,11 +1119,16 @@ class Experiment:
                     trace_block)
                 xs = (jnp.asarray(times, jnp.float32), jnp.asarray(lrs),
                       jnp.asarray(trace_block.active, jnp.float32))
+        fault_xs, fault_rng_new = self._fault_rows(state, K)
+        xs = xs + fault_xs
         scan_fn = self._get_scan(state.collect)
-        theta, per_round = scan_fn(consts, state.theta, xs)
+        carry_out, per_round = scan_fn(
+            consts, self._carry0(state.theta, state.lr_scale,
+                                 state.theta_prev), xs)
+        theta = carry_out[0]
         losses_new, accs_new = state.losses, state.accs
         if state.collect:
-            thetas = per_round[2]
+            thetas = per_round[4]
             loss_b = np.full(K, np.nan)
             acc_b = np.full(K, np.nan)
             for k in range(K):
@@ -921,7 +1147,14 @@ class Experiment:
                 [state.t_rounds, np.asarray(per_round[0], np.float64)]),
             n_ret=np.concatenate(
                 [state.n_ret, np.asarray(per_round[1])]),
-            losses=losses_new, accs=accs_new, sched=sched_new)
+            losses=losses_new, accs=accs_new, sched=sched_new,
+            lr_scale=float(carry_out[1]),
+            n_masked=np.concatenate(
+                [state.n_masked, np.asarray(per_round[2], np.int64)]),
+            skipped=np.concatenate(
+                [state.skipped, np.asarray(per_round[3], np.int64)]),
+            theta_prev=(carry_out[2] if self.stale_faults else None),
+            fault_rng_state=fault_rng_new)
 
     def _block_multi(self, state: RunState, rng, K: int, lrs) -> RunState:
         """K rounds of ALL stationary realizations in one vmapped scan
@@ -931,16 +1164,35 @@ class Experiment:
             self.nodes, np.asarray(self.loads, float), rng, R * K)
         times = times.reshape(R, K, self.n)
         multi = self._get_multi_scan()
-        theta, (t_rounds, n_ret) = multi(
-            self._get_consts(), jnp.asarray(state.theta),
-            jnp.asarray(times, jnp.float32), jnp.asarray(lrs))
+        args = (self._get_consts(),
+                self._carry0(state.theta, state.lr_scale,
+                             state.theta_prev),
+                jnp.asarray(times, jnp.float32), jnp.asarray(lrs))
+        fault_rng_new = state.fault_rng_state
+        if self.return_faults:
+            frng = np.random.default_rng()
+            frng.bit_generator.state = state.fault_rng_state
+            fcodes, fpar = finject.sample_fault_rows(
+                self.faults, frng, R * K, self.n)
+            args = args + (
+                jnp.asarray(fcodes.reshape(R, K, self.n)),
+                jnp.asarray(fpar.reshape(R, K), jnp.float32))
+            fault_rng_new = frng.bit_generator.state
+        carry_out, (t_rounds, n_ret, n_masked, skipped) = multi(*args)
         return dataclasses.replace(
-            state, rounds_done=state.rounds_done + K, theta=theta,
+            state, rounds_done=state.rounds_done + K, theta=carry_out[0],
             rng_state=rng.bit_generator.state,
             t_rounds=np.concatenate(
                 [state.t_rounds, np.asarray(t_rounds, np.float64)], axis=1),
             n_ret=np.concatenate(
-                [state.n_ret, np.asarray(n_ret)], axis=1))
+                [state.n_ret, np.asarray(n_ret)], axis=1),
+            lr_scale=np.asarray(carry_out[1], np.float64),
+            n_masked=np.concatenate(
+                [state.n_masked, np.asarray(n_masked, np.int64)], axis=1),
+            skipped=np.concatenate(
+                [state.skipped, np.asarray(skipped, np.int64)], axis=1),
+            theta_prev=(carry_out[2] if self.stale_faults else None),
+            fault_rng_state=fault_rng_new)
 
     def _block_multi_channel(self, state: RunState, rng) -> RunState:
         """One full traced realization per block: a fresh trace stream at
@@ -977,9 +1229,16 @@ class Experiment:
                 self.nodes, np.asarray(self.loads, float), rng, trace)
             xs = (jnp.asarray(times, jnp.float32), lrs,
                   jnp.asarray(trace.active, jnp.float32))
+        fault_xs, fault_rng_new = self._fault_rows(state,
+                                                   state.iterations)
+        xs = xs + fault_xs
         scan_fn = self._get_scan(False)
         theta0 = jnp.zeros((self.q, self.c), jnp.float32)
-        theta_r, per_round = scan_fn(consts, theta0, xs)
+        carry_out, per_round = scan_fn(
+            consts, self._carry0(theta0, 1.0), xs)
+        theta_r = carry_out[0]
+        lr_scale_new = np.asarray(state.lr_scale, np.float64).copy()
+        lr_scale_new[r] = float(carry_out[1])
         return dataclasses.replace(
             state, realizations_done=r + 1,
             rounds_done=(r + 1) * state.iterations,
@@ -989,7 +1248,15 @@ class Experiment:
                 [state.t_rounds,
                  np.asarray(per_round[0], np.float64)[None]]),
             n_ret=np.concatenate(
-                [state.n_ret, np.asarray(per_round[1])[None]]))
+                [state.n_ret, np.asarray(per_round[1])[None]]),
+            lr_scale=lr_scale_new,
+            n_masked=np.concatenate(
+                [state.n_masked,
+                 np.asarray(per_round[2], np.int64)[None]]),
+            skipped=np.concatenate(
+                [state.skipped,
+                 np.asarray(per_round[3], np.int64)[None]]),
+            fault_rng_state=fault_rng_new)
 
     # ---------------------------------------------------- checkpoint/restore
     def save_state(self, path: str, state: RunState) -> str:
@@ -1039,6 +1306,17 @@ class Experiment:
             return self._finish_single(state)
         return self._finish_multi(state, eval_fn)
 
+    @staticmethod
+    def _run_health(state: RunState) -> "RunHealth | None":
+        if state.n_masked is None:
+            return None
+        ls = np.asarray(state.lr_scale, np.float64)
+        return RunHealth(
+            rounds_degraded=int(np.sum(np.asarray(state.n_masked) > 0)),
+            returns_masked=int(np.sum(state.n_masked)),
+            rounds_skipped=int(np.sum(state.skipped)),
+            lr_scale=float(ls.min() if ls.ndim else ls))
+
     def _finish_single(self, state: RunState) -> FedResult:
         wall = self.setup_time + np.cumsum(state.t_rounds)
         history: list[RoundLog] = []
@@ -1050,7 +1328,8 @@ class Experiment:
         return FedResult(theta=state.theta, history=history,
                          t_star=self.t_star, loads=self.loads,
                          setup_time=self.setup_time,
-                         privacy_eps=self.privacy_eps)
+                         privacy_eps=self.privacy_eps,
+                         health=self._run_health(state))
 
     def _finish_multi(self, state: RunState, eval_fn) -> MultiFedResult:
         wall = self.setup_time + np.cumsum(state.t_rounds, axis=1)
@@ -1076,7 +1355,8 @@ class Experiment:
                               returned=np.asarray(state.n_ret),
                               t_star=self.t_star, loads=self.loads,
                               setup_time=self.setup_time, accuracy=acc,
-                              privacy_eps=self.privacy_eps)
+                              privacy_eps=self.privacy_eps,
+                              health=self._run_health(state))
 
     def _assemble_schedule(self, sched: dict) -> AdaptiveSchedule:
         """Rebuild the run's `AdaptiveSchedule` from the state's
@@ -1210,7 +1490,8 @@ class Experiment:
         if resume:
             if checkpoint_dir is None:
                 raise ValueError("resume=True requires checkpoint_dir")
-            latest = ckpt_io.latest_checkpoint(checkpoint_dir)
+            latest = ckpt_io.latest_checkpoint(checkpoint_dir,
+                                               valid_only=True)
             if latest is not None:
                 state = self.restore_state(latest)
                 if state.mode != "single":
@@ -1261,7 +1542,8 @@ class Experiment:
         if resume:
             if checkpoint_dir is None:
                 raise ValueError("resume=True requires checkpoint_dir")
-            latest = ckpt_io.latest_checkpoint(checkpoint_dir)
+            latest = ckpt_io.latest_checkpoint(checkpoint_dir,
+                                               valid_only=True)
             if latest is not None:
                 state = self.restore_state(latest)
                 if state.mode == "single":

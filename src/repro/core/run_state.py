@@ -14,7 +14,12 @@ bit-identically after a kill:
     control values (loads / deadline / wait count) in effect,
   * the per-round accumulators that become the final `FedResult` history
     (round times, returned counts, eval losses) and the adaptive
-    schedule record.
+    schedule record,
+  * the degradation state of the self-healing runtime: the divergence
+    guard's lr backoff scale, per-round masked-return / skipped-round
+    accumulators (surfaced as `FedResult.health`), the previous-round
+    iterate when stale-update faults are enabled, and the dedicated
+    fault-stream RNG state (`repro.faults`).
 
 Three run modes share the structure: ``"single"`` (one trajectory,
 blocks advance the round cursor), ``"multi"`` (stationary `run_multi`,
@@ -36,7 +41,7 @@ import numpy as np
 
 from repro.net.trace import TraceState
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
 
 _MODES = ("single", "multi", "multi_channel")
 
@@ -77,6 +82,16 @@ class RunState:
     losses: Optional[np.ndarray]      # (r,) NaN where not evaluated
     accs: Optional[np.ndarray]
     sched: Optional[dict]             # adaptive record, keys _SCHED_KEYS
+    # --- self-healing runtime state (format >= 2) --------------------
+    lr_scale: Any = None              # divergence-backoff lr multiplier,
+                                      # () for single / (R,) for multi
+    n_masked: Optional[np.ndarray] = None  # per-round masked returns,
+                                           # shaped like n_ret
+    skipped: Optional[np.ndarray] = None   # per-round 0/1 divergence
+                                           # skips, shaped like n_ret
+    theta_prev: Any = None            # previous-round iterate (present
+                                      # only when stale faults are on)
+    fault_rng_state: Optional[dict] = None  # fault-stream RNG (PCG64)
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -119,7 +134,15 @@ def pack_state(state: RunState) -> "tuple[dict, dict]":
         "est": None,
         "controls": None,
         "has_sched": state.sched is not None,
+        "fault_rng_state": state.fault_rng_state,
     }
+    if state.lr_scale is not None:
+        arrays["lr_scale"] = np.asarray(state.lr_scale, np.float64)
+    if state.n_masked is not None:
+        arrays["n_masked"] = np.asarray(state.n_masked)
+        arrays["skipped"] = np.asarray(state.skipped)
+    if state.theta_prev is not None:
+        arrays["theta_prev"] = np.asarray(state.theta_prev)
     if state.losses is not None:
         arrays["losses"] = np.asarray(state.losses)
         arrays["accs"] = np.asarray(state.accs)
@@ -200,4 +223,13 @@ def unpack_state(arrays: dict, meta: dict) -> RunState:
         n_ret=np.asarray(arrays["n_ret"]),
         losses=np.asarray(arrays["losses"]) if has_eval else None,
         accs=np.asarray(arrays["accs"]) if has_eval else None,
-        sched=sched)
+        sched=sched,
+        lr_scale=(np.asarray(arrays["lr_scale"])
+                  if "lr_scale" in arrays else None),
+        n_masked=(np.asarray(arrays["n_masked"])
+                  if "n_masked" in arrays else None),
+        skipped=(np.asarray(arrays["skipped"])
+                 if "skipped" in arrays else None),
+        theta_prev=(jnp.asarray(arrays["theta_prev"])
+                    if "theta_prev" in arrays else None),
+        fault_rng_state=meta.get("fault_rng_state"))

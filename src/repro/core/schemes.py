@@ -143,7 +143,18 @@ class IdealScheme(Scheme):
 
 
 class CodedScheme(Scheme):
-    """CodedFedL (paper §III): optimized loads + global parity set."""
+    """CodedFedL (paper §III): optimized loads + global parity set.
+
+    The parity set is also what makes the coded family *robust*: the
+    MDS-style global parity gradient stands in for whatever client mass
+    is missing from a round, whether that mass was lost to stragglers
+    (the paper's case) or masked out by the runtime's non-finite guard
+    (`fed_runtime.build_step` with fault injection, `repro.faults`).  A
+    naive average has no such stand-in — masked returns simply shrink
+    its effective batch, which is the coded-degrades-gracefully /
+    naive-pays contrast the resilience benchmark records
+    (`repro.launch.resilience`).
+    """
     name = "coded"
     step_kind = "coded"
     coded = True

@@ -1,0 +1,135 @@
+"""Declarative fault profiles, registered like `CHANNEL_PROFILES`.
+
+A `FaultProfile` names the failure modes injected into a run and their
+per-round probabilities.  Two layers consume it:
+
+  * **Return faults** (``nan_prob`` / ``stale_prob`` /
+    ``parity_corrupt_prob``) are injected into the compiled training step
+    by `repro.core.fed_runtime` — a faulty client uploads a non-finite
+    gradient, replays its update from a stale model iterate, or (coded
+    schemes) the shared parity contribution arrives corrupted.  Corruption
+    is modeled as non-finite garbage, which is exactly what the runtime's
+    non-finite guard can detect; arbitrary finite Byzantine values are out
+    of scope (they need coding-theoretic decoding, not a guard).
+  * **Infrastructure faults** (``crash_prob`` / ``ckpt_corrupt_prob``)
+    are injected by `repro.launch.service.ExperimentService` — a block
+    computation dies mid-flight (SIGKILL-style: no state advance, no
+    checkpoint) or a just-written checkpoint is truncated/bit-flipped on
+    disk, exercising retry/backoff and the digest-verified restore
+    fallback.
+
+All knobs default to 0, so ``FaultProfile()`` (the ``"none"`` profile) is
+benign and — because the fault RNG stream is separate from the delay and
+channel-trace streams, and a benign profile compiles to the exact
+fault-free step — bit-identical to running without a profile at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+_NAN_KINDS = ("nan", "inf", "mix")
+_CKPT_KINDS = ("truncate", "bitflip", "mix")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultProfile:
+    """Declarative fault-mix knobs (all OFF by default = benign)."""
+    # non-finite client gradient returns: each client's upload is
+    # independently corrupted with `nan_prob` per round; `nan_kind`
+    # selects NaN, +inf, or an even mix
+    nan_prob: float = 0.0
+    nan_kind: str = "nan"
+    # stale-update replay: the client returns its gradient computed at
+    # the PREVIOUS round's model iterate (mutually exclusive with a
+    # non-finite fault on the same client-round)
+    stale_prob: float = 0.0
+    # corrupted parity contribution (coded schemes): the shared parity
+    # gradient for the round arrives non-finite and must be masked —
+    # the round degrades to the returned clients only
+    parity_corrupt_prob: float = 0.0
+    # service-level: probability a scheduled block crashes before
+    # computing (retried with backoff by the ExperimentService)
+    crash_prob: float = 0.0
+    # service-level: probability a just-written checkpoint is corrupted
+    # on disk, and how ("truncate" | "bitflip" | "mix")
+    ckpt_corrupt_prob: float = 0.0
+    ckpt_corrupt_kind: str = "truncate"
+
+    def __post_init__(self):
+        for name in ("nan_prob", "stale_prob", "parity_corrupt_prob",
+                     "crash_prob", "ckpt_corrupt_prob"):
+            val = getattr(self, name)
+            if not (isinstance(val, (int, float)) and 0.0 <= val <= 1.0):
+                raise ValueError(f"{name}={val!r} must lie in [0, 1]")
+        if self.nan_kind not in _NAN_KINDS:
+            raise ValueError(f"nan_kind={self.nan_kind!r} must be one of "
+                             f"{_NAN_KINDS}")
+        if self.ckpt_corrupt_kind not in _CKPT_KINDS:
+            raise ValueError(f"ckpt_corrupt_kind="
+                             f"{self.ckpt_corrupt_kind!r} must be one of "
+                             f"{_CKPT_KINDS}")
+
+    # ------------------------------------------------------------ properties
+    @property
+    def has_return_faults(self) -> bool:
+        """True if the compiled step must inject per-round faults."""
+        return (self.nan_prob > 0.0 or self.stale_prob > 0.0
+                or self.parity_corrupt_prob > 0.0)
+
+    @property
+    def has_service_faults(self) -> bool:
+        """True if the ExperimentService must inject infra faults."""
+        return self.crash_prob > 0.0 or self.ckpt_corrupt_prob > 0.0
+
+    @property
+    def is_benign(self) -> bool:
+        return not (self.has_return_faults or self.has_service_faults)
+
+    # ------------------------------------------------------------ round trip
+    def to_dict(self) -> dict:
+        """Plain-JSON dict; `from_dict(to_dict(p)) == p`."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultProfile":
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(
+                f"unknown FaultProfile field(s) {sorted(unknown)}")
+        return cls(**d)
+
+
+#: Named profiles addressable from ``ExperimentSpec.fault_profile`` (and
+#: `ExperimentService`'s chaos knobs).  "none" is the benign identity;
+#: the rest are the fault mixes the resilience bench and chaos tests run.
+FAULT_PROFILES: dict[str, FaultProfile] = {
+    # benign: compiles to the exact fault-free step
+    "none": FaultProfile(),
+    # flaky clients: ~8% of uploads per round come back NaN
+    "flaky_clients": FaultProfile(nan_prob=0.08),
+    # Byzantine-lite mix: occasional NaN/inf plus stale-update replay
+    "byzantine_lite": FaultProfile(nan_prob=0.05, nan_kind="mix",
+                                   stale_prob=0.10),
+    # the shared parity upload is corrupted ~15% of rounds (coded
+    # schemes degrade those rounds to the returned clients only)
+    "corrupt_parity": FaultProfile(parity_corrupt_prob=0.15),
+    # infrastructure only: blocks crash ~30% of the time (service
+    # retry/backoff territory), checkpoints survive
+    "crash_loop": FaultProfile(crash_prob=0.3),
+    # infrastructure only: flaky disk — half the checkpoints written are
+    # truncated or bit-flipped (digest-verified fallback territory)
+    "bad_disk": FaultProfile(ckpt_corrupt_prob=0.5,
+                             ckpt_corrupt_kind="mix"),
+    # everything at once: the chaos-test profile
+    "chaos": FaultProfile(nan_prob=0.05, nan_kind="mix", stale_prob=0.05,
+                          parity_corrupt_prob=0.10, crash_prob=0.2,
+                          ckpt_corrupt_prob=0.3, ckpt_corrupt_kind="mix"),
+}
+
+
+def get_fault_profile(name: str) -> FaultProfile:
+    try:
+        return FAULT_PROFILES[name]
+    except KeyError:
+        raise ValueError(f"unknown fault profile {name!r} (known: "
+                         f"{tuple(FAULT_PROFILES)})") from None

@@ -54,10 +54,11 @@ from repro.core import schemes as schemes_registry
 from repro.core.delay_model import HETEROGENEITY_PROFILES  # noqa: F401
 from repro.core.delay_model import ideal_round_time  # noqa: F401
 from repro.launch import kernel_bench as kernel_bench_mod
+from repro.launch import resilience as resilience_mod
 from repro.launch import scenarios as scenarios_mod
 from repro.launch import sweep as sweep_mod
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 ARTIFACT_NAME = "BENCH_fed_training.json"
 # core grid every artifact must cover; the live registry may add more
 CORE_SCHEMES = ("coded", "naive", "greedy", "ideal")
@@ -97,7 +98,8 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
                 measure_loop: bool = True,
                 scenario_kwargs: Optional[dict] = None,
                 service_kwargs: Optional[dict] = None,
-                kernel_kwargs: Optional[dict] = None) -> dict:
+                kernel_kwargs: Optional[dict] = None,
+                resilience_kwargs: Optional[dict] = None) -> dict:
     """Run the scheme comparison over heterogeneity profiles.
 
     The scheme grid is the LIVE grid-eligible registry
@@ -122,6 +124,11 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
     ``kernels`` section (`repro.launch.kernel_bench.run_kernel_bench`):
     per-kernel microbenchmark timings including the fused-vs-two-pass
     embed->gradient ratio; `kernel_kwargs` follows the same convention.
+    Schema v7 adds the ``resilience`` section
+    (`repro.launch.resilience.run_resilience`): coded-vs-naive
+    time-to-target under client-fault profiles plus the self-healing
+    service chaos check; `resilience_kwargs` follows the same
+    convention.
     """
     if engine not in ("sweep", "loop"):
         raise ValueError(f"unknown engine {engine!r}")
@@ -255,6 +262,11 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
         kernel_kwargs.setdefault("kernel_backend", kernel_backend)
         artifact["kernels"] = kernel_bench_mod.run_kernel_bench(
             **kernel_kwargs)
+    resilience_kwargs = dict(resilience_kwargs or {})
+    if not resilience_kwargs.pop("skip", False):
+        # schema v7: fault-injection degradation + service chaos recovery
+        artifact["resilience"] = resilience_mod.run_resilience(
+            kernel_backend=kernel_backend, **resilience_kwargs)
     return artifact
 
 
@@ -359,7 +371,7 @@ _SCHEME_FIELDS = ("final_wall_clock_mean", "final_wall_clock_std",
 
 
 def validate_artifact(obj) -> list[str]:
-    """Structural check of the BENCH_fed_training.json artifact (schema 6).
+    """Structural check of the BENCH_fed_training.json artifact (schema 7).
 
     `obj` is a dict or a path.  Returns a list of problems (empty == valid)
     rather than raising, so CI can print every issue at once.
@@ -381,6 +393,11 @@ def validate_artifact(obj) -> list[str]:
     by `repro.launch.kernel_bench.validate_kernels`; the regression
     threshold against a committed artifact is enforced separately by
     `kernel_bench.compare_kernels` in the CI kernel-bench job).
+    Schema v7 adds the required ``resilience`` section (fault-injection
+    degradation + service chaos recovery, validated by
+    `repro.launch.resilience.validate_resilience` — which enforces the
+    headline claims: coded degrades gracefully, unguarded naive stalls,
+    chaos recovery is bit-identical).
     """
     if isinstance(obj, str):
         try:
@@ -453,6 +470,10 @@ def validate_artifact(obj) -> list[str]:
         errs.append("schema v6 artifact missing 'kernels' section")
     else:
         errs.extend(kernel_bench_mod.validate_kernels(obj["kernels"]))
+    if "resilience" not in obj:
+        errs.append("schema v7 artifact missing 'resilience' section")
+    else:
+        errs.extend(resilience_mod.validate_resilience(obj["resilience"]))
     profiles = obj.get("profiles")
     if not isinstance(profiles, dict) or not profiles:
         return errs + ["missing/empty 'profiles'"]

@@ -20,17 +20,35 @@ schedule alike (tests/test_service.py).
 Checkpoint layout: ``root/<run_id>/ckpt_<rounds_done>.npz`` — atomic
 writes, numeric suffix ordering, spec provenance embedded per file
 (`repro.checkpoint.io`).
+
+Self-healing (`repro.faults`): a failed block — an injected
+`InjectedCrashError` from the run's `FaultProfile.crash_prob`, or any
+organic exception — never advances the run's state; the service retries
+it with exponential backoff (``retry_backoff * 2**(attempt-1)`` seconds)
+and quarantines the run after ``max_retries`` consecutive failures so
+one sick job cannot stall its siblings.  Checkpoint corruption
+(``ckpt_corrupt_prob``) damages the just-written file on disk; the
+in-memory state is unaffected, but a *restarted* service resumes through
+``latest_checkpoint(valid_only=True)`` — the digest-verified fallback to
+the newest intact snapshot — and re-computes the lost blocks, finishing
+bit-identically to a fault-free-infrastructure control
+(benchmarks/chaos_smoke.py).  `health_report` summarizes all of it.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import time
+import zlib
 from typing import Callable, Optional
+
+import numpy as np
 
 from repro.checkpoint import io as ckpt_io
 from repro.config import ExperimentSpec
 from repro.core.fed_runtime import Experiment
 from repro.core.run_state import RunState
+from repro.faults.inject import InjectedCrashError, corrupt_checkpoint
 
 __all__ = ["ExperimentService", "ServiceRun"]
 
@@ -47,6 +65,11 @@ class ServiceRun:
     eval_every: int = 10
     result: object = None
     resumed: bool = False          # True if submit() found a checkpoint
+    fallback_resume: bool = False  # resumed past a corrupt latest ckpt
+    retries: int = 0               # consecutive failures of the CURRENT block
+    total_retries: int = 0         # failures over the run's lifetime
+    quarantined: bool = False      # gave up after max_retries failures
+    last_error: Optional[str] = None
 
     @property
     def done(self) -> bool:
@@ -62,14 +85,32 @@ class ExperimentService:
     the same spec share compiled scans through their own `Experiment`
     cache; the service itself holds no state outside `self.runs` and the
     checkpoint root, so it is trivially restartable.
+
+    Retry knobs: ``max_retries`` consecutive block failures quarantine a
+    run; ``retry_backoff`` (seconds, default 0 so tests never sleep) is
+    the base of the exponential backoff between attempts.  ``fault_seed``
+    keys the service-level chaos stream — injected crashes and
+    checkpoint corruption draw from ``(fault_seed, crc32(run_id),
+    rounds_done, total_retries)``, so every retry of a crashed block
+    redraws its fate (no deterministic crash loops) while the sequence
+    stays reproducible per seed.
     """
 
-    def __init__(self, root: str, *, mesh=None):
+    def __init__(self, root: str, *, mesh=None, max_retries: int = 3,
+                 retry_backoff: float = 0.0, fault_seed: int = 0):
+        if max_retries < 0:
+            raise ValueError(f"max_retries={max_retries} must be >= 0")
+        if retry_backoff < 0:
+            raise ValueError(f"retry_backoff={retry_backoff} must be >= 0")
         self.root = str(root)
         self.mesh = mesh
+        self.max_retries = int(max_retries)
+        self.retry_backoff = float(retry_backoff)
+        self.fault_seed = int(fault_seed)
         self.runs: "dict[str, ServiceRun]" = {}
         self._order: "list[str]" = []
         self._cursor = 0
+        self.last_health: Optional[dict] = None
 
     # ------------------------------------------------------------ submission
     def submit(self, spec: "ExperimentSpec | dict", x_stack, y_stack,
@@ -82,7 +123,10 @@ class ExperimentService:
 
         ``run_id`` defaults to ``spec.run_id``, then to ``run<k>``; it
         names the checkpoint directory, so resubmitting the same id
-        after a kill is exactly how a run is recovered.
+        after a kill is exactly how a run is recovered.  A corrupt or
+        truncated latest checkpoint is skipped in favor of the newest
+        one that passes digest verification (``fallback_resume`` flags
+        that this happened — the lost blocks are simply re-computed).
         """
         from repro.api import build_experiment
         if isinstance(spec, dict):
@@ -99,7 +143,9 @@ class ExperimentService:
         ckpt_dir = os.path.join(self.root, rid)
         state = None
         resumed = False
-        latest = ckpt_io.latest_checkpoint(ckpt_dir)
+        latest_any = ckpt_io.latest_checkpoint(ckpt_dir)
+        latest = ckpt_io.latest_checkpoint(ckpt_dir, valid_only=True)
+        fallback = latest_any is not None and latest != latest_any
         if latest is not None:
             state = exp.restore_state(latest)
             if state.iterations != int(iterations) or (
@@ -117,7 +163,8 @@ class ExperimentService:
                                    collect=eval_fn is not None)
         run = ServiceRun(run_id=rid, spec=spec, exp=exp, state=state,
                          ckpt_dir=ckpt_dir, eval_fn=eval_fn,
-                         eval_every=eval_every, resumed=resumed)
+                         eval_every=eval_every, resumed=resumed,
+                         fallback_resume=fallback)
         self.runs[rid] = run
         self._order.append(rid)
         if state.done:   # resumed a run that was already finished
@@ -127,31 +174,104 @@ class ExperimentService:
     # ------------------------------------------------------------ scheduling
     @property
     def pending(self) -> "list[str]":
-        return [rid for rid in self._order if not self.runs[rid].done]
+        return [rid for rid in self._order
+                if not (self.runs[rid].done or self.runs[rid].quarantined)]
+
+    def _chaos_rng(self, run: ServiceRun) -> np.random.Generator:
+        """Per-(run, block, attempt) chaos stream — `total_retries` in
+        the key means a retried block redraws its crash/corruption fate
+        instead of deterministically crashing forever."""
+        return np.random.default_rng(
+            (self.fault_seed, zlib.crc32(run.run_id.encode()),
+             run.state.rounds_done, run.total_retries))
+
+    def _advance(self, run: ServiceRun) -> None:
+        """One block of `run`, with injected infrastructure faults: a
+        crash fires BEFORE the block computes (SIGKILL-style — no state
+        advance, no checkpoint); checkpoint corruption damages the file
+        just written (detected by the digest on any later restore)."""
+        faults = run.exp.faults
+        chaos = (self._chaos_rng(run)
+                 if faults is not None and faults.has_service_faults
+                 else None)
+        if chaos is not None:
+            # fixed draw order (crash, then corruption) so toggling one
+            # knob never shifts the other's realization
+            u_crash, u_ckpt = chaos.random(2)
+            if u_crash < faults.crash_prob:
+                raise InjectedCrashError(
+                    f"run {run.run_id!r}: injected crash at block "
+                    f"rounds_done={run.state.rounds_done} "
+                    f"(attempt {run.retries + 1})")
+        run.state = run.exp.run_block(run.state, eval_fn=run.eval_fn,
+                                      eval_every=run.eval_every)
+        path = run.exp.save_state(
+            os.path.join(run.ckpt_dir,
+                         f"{ckpt_io.CKPT_PREFIX}"
+                         f"{run.state.rounds_done:06d}.npz"),
+            run.state)
+        if chaos is not None and u_ckpt < faults.ckpt_corrupt_prob:
+            corrupt_checkpoint(path, kind=faults.ckpt_corrupt_kind,
+                               rng=chaos)
 
     def step(self) -> Optional[str]:
         """Advance the next unfinished run by one block, checkpoint it,
-        and finish it if that block completed the run.  Returns the
-        run_id advanced, or None when everything is done."""
+        and finish it if that block completed the run.  A failed block
+        is retried with exponential backoff on the run's next turn;
+        after ``max_retries`` consecutive failures the run is
+        quarantined (its checkpoints stay on disk for a later resume).
+        Returns the run_id acted on, or None when nothing is pending."""
         pending = self.pending
         if not pending:
             return None
         rid = pending[self._cursor % len(pending)]
         self._cursor += 1
         run = self.runs[rid]
-        run.state = run.exp.run_block(run.state, eval_fn=run.eval_fn,
-                                      eval_every=run.eval_every)
-        run.exp.save_state(
-            os.path.join(run.ckpt_dir,
-                         f"{ckpt_io.CKPT_PREFIX}"
-                         f"{run.state.rounds_done:06d}.npz"),
-            run.state)
+        if run.retries > 0 and self.retry_backoff > 0:
+            time.sleep(self.retry_backoff * 2 ** (run.retries - 1))
+        try:
+            self._advance(run)
+        except Exception as exc:           # noqa: BLE001 — quarantine path
+            run.retries += 1
+            run.total_retries += 1
+            run.last_error = f"{type(exc).__name__}: {exc}"
+            if run.retries > self.max_retries:
+                run.quarantined = True
+            return rid
+        run.retries = 0
+        run.last_error = None
         if run.state.done:
             run.result = run.exp.finish(run.state, run.eval_fn)
         return rid
 
     def run_until_complete(self) -> dict:
-        """Drive every submitted run to completion; {run_id: result}."""
+        """Drive every submitted run to completion (or quarantine);
+        {run_id: result} — a quarantined run's result is None.  The full
+        per-run health report lands in ``self.last_health``."""
         while self.step() is not None:
             pass
+        self.last_health = self.health_report()
         return {rid: self.runs[rid].result for rid in self._order}
+
+    # --------------------------------------------------------------- health
+    def health_report(self) -> dict:
+        """{run_id: status dict} across every submitted run: progress,
+        resume provenance, retry/quarantine counters, and — for finished
+        runs — the runtime's `RunHealth` degradation counters."""
+        report = {}
+        for rid in self._order:
+            run = self.runs[rid]
+            health = getattr(run.result, "health", None)
+            report[rid] = {
+                "done": run.done,
+                "quarantined": run.quarantined,
+                "rounds_done": int(run.state.rounds_done),
+                "iterations": int(run.state.iterations),
+                "resumed": run.resumed,
+                "fallback_resume": run.fallback_resume,
+                "total_retries": run.total_retries,
+                "last_error": run.last_error,
+                "health": (dataclasses.asdict(health)
+                           if health is not None else None),
+            }
+        return report

@@ -118,6 +118,13 @@ def run_sweep(x_stack, y_stack, *, profiles: dict,
             "run_sweep derives q from the embedded x_stack and has no "
             "raw-feature path; drop fused_embed from base_spec (run "
             "fused-embed deployments through Experiment.run/run_multi)")
+    if base_spec is not None:
+        base_faults = base_spec.resolved_faults()
+        if base_faults is not None and base_faults.has_return_faults:
+            raise ValueError(
+                "run_sweep has no fault-injection path; drop "
+                "fault_profile/fault_params from base_spec (fault runs go "
+                "through Experiment.run/run_multi or the resilience bench)")
     fl_kwargs = dict(fl_kwargs or {})
     fl_kwargs.setdefault("n_clients", int(x_stack.shape[0]))
     R = int(realizations)
@@ -175,17 +182,21 @@ def run_sweep(x_stack, y_stack, *, profiles: dict,
         lrs = jnp.asarray(lr_schedules[names[0]])
         step = fed_runtime.build_step(ref_static)
 
+        carry0 = (theta0, jnp.float32(1.0))
+
         def profile_run(consts_p, times_p, lrs_r):
             def one(tj):
                 return jax.lax.scan(
-                    lambda th, inp: step(consts_p, th, inp),
-                    theta0, (tj, lrs_r))
+                    lambda c, inp: step(consts_p, c, inp),
+                    carry0, (tj, lrs_r))
             return jax.vmap(one)(times_p)
 
         sweep_fn = jax.jit(jax.vmap(profile_run, in_axes=(0, 0, None)))
         t0 = time.perf_counter()
-        theta, (t_rounds, n_ret) = jax.block_until_ready(
-            sweep_fn(consts, jnp.asarray(times, jnp.float32), lrs))
+        carry_out, (t_rounds, n_ret, _n_masked, _skipped) = \
+            jax.block_until_ready(
+                sweep_fn(consts, jnp.asarray(times, jnp.float32), lrs))
+        theta = carry_out[0]
         host_seconds[scheme] = time.perf_counter() - t0
 
         per_profile = {}

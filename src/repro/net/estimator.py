@@ -120,18 +120,20 @@ class OnlineChannelEstimator:
             del buf[: len(buf) - self.window]
 
     def _refresh_windowed(self) -> None:
-        import warnings
-        with warnings.catch_warnings():
-            # all-NaN columns (a node unseen for the whole window) keep
-            # their previous estimate
-            warnings.simplefilter("ignore", RuntimeWarning)
-            for key, attr in (("comp", "_s_comp"), ("tau", "_s_tau"),
-                              ("ntr", "_s_ntr"), ("avail", "avail_hat")):
-                if not self._win[key]:
-                    continue
-                mean = np.nanmean(np.stack(self._win[key]), axis=0)
-                cur = getattr(self, attr)
-                setattr(self, attr, np.where(np.isnan(mean), cur, mean))
+        # explicit NaN-masked mean: an all-NaN column (a node unseen for
+        # the whole window) keeps its previous estimate, without the
+        # RuntimeWarning np.nanmean emits on empty slices
+        for key, attr in (("comp", "_s_comp"), ("tau", "_s_tau"),
+                          ("ntr", "_s_ntr"), ("avail", "avail_hat")):
+            if not self._win[key]:
+                continue
+            stacked = np.stack(self._win[key])
+            seen = ~np.isnan(stacked)
+            count = seen.sum(axis=0)
+            total = np.where(seen, stacked, 0.0).sum(axis=0)
+            mean = total / np.maximum(count, 1)
+            cur = getattr(self, attr)
+            setattr(self, attr, np.where(count > 0, mean, cur))
 
     # ------------------------------------------------------------ readouts
     @property

@@ -1,0 +1,295 @@
+"""Fault-injection subsystem + self-healing runtime.
+
+Contracts under test:
+
+  * `FaultProfile` is a frozen, validated, JSON-round-tripping value,
+    resolved through the spec exactly like channel profiles.
+  * Fault sampling draws from its own fixed-layout RNG stream, so
+    toggling faults never shifts the delay realizations (hermeticity),
+    and the guard machinery is IEEE-bit-exact a no-op on clean runs.
+  * Under non-finite client returns, coded training degrades gracefully
+    (parity absorbs the masked mass; trajectory stays finite and
+    `FedResult.health` counts it), guarded naive detects-and-reports,
+    and unguarded naive stalls through the divergence guard.
+  * Fault-injected runs checkpoint/resume bit-identically (the fault
+    RNG state lives in RunState).
+  * The service retries injected crashes, quarantines hopeless runs,
+    and recovers bit-identically from crash + checkpoint corruption.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint import io as ckpt_io
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
+from repro.faults import (CODE_CLEAN, CODE_INF, CODE_NAN, CODE_STALE,
+                          FAULT_PROFILES, FaultProfile, get_fault_profile,
+                          sample_fault_rows)
+from repro.launch.service import ExperimentService
+
+
+def _data(n=8, l=24, q=6, c=3, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n, l, q)).astype(np.float32) * 0.3
+    theta_true = rng.normal(size=(q, c)).astype(np.float32)
+    ys = (np.einsum("nlq,qc->nlc", xs, theta_true)
+          + 0.005 * rng.normal(size=(n, l, c))).astype(np.float32)
+    return xs, ys
+
+
+def _spec(scheme="coded", **over):
+    base = dict(fl=FLConfig(n_clients=8, seed=3),
+                train=TrainConfig(learning_rate=0.05),
+                scheme=scheme)
+    base.update(over)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# FaultProfile: validation + serialization
+# ---------------------------------------------------------------------------
+
+def test_profile_round_trips_through_json():
+    for name, prof in FAULT_PROFILES.items():
+        revived = FaultProfile.from_dict(
+            json.loads(json.dumps(prof.to_dict())))
+        assert revived == prof, name
+
+
+@pytest.mark.parametrize("bad", [
+    dict(nan_prob=-0.1), dict(nan_prob=1.5), dict(nan_kind="bogus"),
+    dict(stale_prob=2.0), dict(crash_prob=-1.0),
+    dict(ckpt_corrupt_kind="shred"),
+])
+def test_profile_rejects_bad_values(bad):
+    with pytest.raises(ValueError):
+        FaultProfile(**bad)
+
+
+def test_profile_from_dict_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="tornado_prob"):
+        FaultProfile.from_dict({"tornado_prob": 0.5})
+
+
+def test_get_fault_profile_unknown_name():
+    with pytest.raises(ValueError, match="no_such"):
+        get_fault_profile("no_such")
+
+
+def test_spec_resolves_and_overrides_fault_profile():
+    spec = _spec(fault_profile="flaky_clients",
+                 fault_params=(("nan_prob", 0.5),))
+    faults = spec.resolved_faults()
+    assert faults.nan_prob == 0.5
+    revived = ExperimentSpec.from_dict(
+        json.loads(json.dumps(spec.to_dict())))
+    assert revived == spec
+    with pytest.raises(ValueError, match="fault_params"):
+        _spec(fault_profile="flaky_clients",
+              fault_params=(("tornado_prob", 1.0),))
+    with pytest.raises(ValueError):
+        _spec(fault_profile="no_such")
+
+
+def test_spec_rejects_return_faults_on_mesh():
+    with pytest.raises((ValueError, NotImplementedError)):
+        _spec(fault_profile="flaky_clients", mesh=2)
+
+
+# ---------------------------------------------------------------------------
+# fault sampling: fixed draw layout
+# ---------------------------------------------------------------------------
+
+def test_sample_fault_rows_shapes_and_codes():
+    prof = FAULT_PROFILES["byzantine_lite"]
+    codes, parity = sample_fault_rows(
+        prof, np.random.default_rng(7), 50, 10)
+    assert codes.shape == (50, 10) and codes.dtype == np.int32
+    assert parity.shape == (50,)
+    assert set(np.unique(codes)) <= {CODE_CLEAN, CODE_NAN, CODE_INF,
+                                     CODE_STALE}
+    assert np.any(codes != CODE_CLEAN)
+
+
+def test_sample_layout_is_fixed_across_knobs():
+    """The four draw blocks are always consumed, so turning one fault
+    type off never shifts another type's realization."""
+    base = FAULT_PROFILES["flaky_clients"]
+    with_stale = dataclasses.replace(base, stale_prob=0.2)
+    c_base, _ = sample_fault_rows(base, np.random.default_rng(11), 40, 8)
+    c_stale, _ = sample_fault_rows(with_stale, np.random.default_rng(11),
+                                   40, 8)
+    nan_mask = np.isin(c_base, (CODE_NAN, CODE_INF))
+    np.testing.assert_array_equal(
+        nan_mask, np.isin(c_stale, (CODE_NAN, CODE_INF)))
+    # stale only lands on rows that were clean
+    assert not np.any((c_stale == CODE_STALE) & nan_mask)
+
+
+# ---------------------------------------------------------------------------
+# runtime degradation
+# ---------------------------------------------------------------------------
+
+def test_guard_is_bit_exact_noop_on_clean_runs():
+    xs, ys = _data()
+    on = api.build_experiment(_spec(nonfinite_guard=True), xs, ys).run(16)
+    off = api.build_experiment(_spec(nonfinite_guard=False), xs, ys).run(16)
+    np.testing.assert_array_equal(np.asarray(on.theta),
+                                  np.asarray(off.theta))
+    assert on.health.returns_masked == 0
+    assert on.health.rounds_skipped == 0
+    assert on.health.lr_scale == 1.0
+
+
+def test_faults_do_not_shift_delay_realizations():
+    """Fault RNG hermeticity: wall-clocks (pure delay draws) are
+    identical with and without client faults."""
+    xs, ys = _data()
+    clean = api.build_experiment(_spec(), xs, ys).run(16)
+    faulty = api.build_experiment(
+        _spec(fault_profile="flaky_clients"), xs, ys).run(16)
+    assert [h.wall_clock for h in clean.history] \
+        == [h.wall_clock for h in faulty.history]
+    assert [h.returned for h in clean.history] \
+        == [h.returned for h in faulty.history]
+
+
+@pytest.mark.parametrize("profile", ["flaky_clients", "byzantine_lite"])
+def test_coded_degrades_gracefully(profile):
+    xs, ys = _data()
+    res = api.build_experiment(_spec(fault_profile=profile), xs, ys).run(20)
+    assert np.all(np.isfinite(np.asarray(res.theta)))
+    assert res.health.returns_masked > 0
+    assert res.health.rounds_degraded > 0
+
+
+def test_naive_guarded_detects_and_reports():
+    xs, ys = _data()
+    res = api.build_experiment(
+        _spec("naive", fault_profile="flaky_clients"), xs, ys).run(20)
+    assert np.all(np.isfinite(np.asarray(res.theta)))
+    assert res.health.returns_masked > 0
+
+
+def test_naive_unguarded_stalls():
+    """The ablation: without the guard a NaN return poisons the round;
+    the divergence guard skips it and backs the lr off — repeatedly."""
+    xs, ys = _data()
+    res = api.build_experiment(
+        _spec("naive", fault_profile="flaky_clients",
+              nonfinite_guard=False), xs, ys).run(20)
+    assert np.all(np.isfinite(np.asarray(res.theta)))   # skips kept it
+    assert res.health.rounds_skipped > 0
+    assert res.health.lr_scale < 1.0
+
+
+def test_run_multi_threads_health():
+    xs, ys = _data()
+    multi = api.build_experiment(
+        _spec(fault_profile="flaky_clients"), xs, ys).run_multi(10, 3)
+    assert multi.health is not None
+    assert multi.health.returns_masked > 0
+
+
+def test_faulty_run_resumes_bit_identically(tmp_path):
+    """The fault RNG state lives in RunState: kill/resume mid-run under
+    active fault injection reproduces the uninterrupted run exactly."""
+    xs, ys = _data()
+    spec = _spec(fault_profile="byzantine_lite", checkpoint_every=4)
+    control = api.build_experiment(spec, xs, ys).run(12)
+
+    exp = api.build_experiment(spec, xs, ys)
+    state = exp.run_block(exp.init_state(12))
+    exp.save_state(
+        str(tmp_path / f"{ckpt_io.CKPT_PREFIX}000004.npz"), state)
+    resumed = api.build_experiment(spec, xs, ys).run(
+        12, checkpoint_dir=str(tmp_path), resume=True)
+    np.testing.assert_array_equal(np.asarray(control.theta),
+                                  np.asarray(resumed.theta))
+    assert dataclasses.asdict(control.health) \
+        == dataclasses.asdict(resumed.health)
+
+
+# ---------------------------------------------------------------------------
+# self-healing service
+# ---------------------------------------------------------------------------
+
+def _submit(svc, spec, xs, ys, rid, iters=20):
+    return svc.submit(spec, xs, ys, iters, run_id=rid)
+
+
+def test_service_survives_crash_loop_bit_identically(tmp_path):
+    xs, ys = _data()
+    base = _spec(checkpoint_every=4)
+    ctrl = ExperimentService(str(tmp_path / "ctrl"))
+    _submit(ctrl, base, xs, ys, "a")
+    expect = ctrl.run_until_complete()["a"]
+
+    chaos = ExperimentService(str(tmp_path / "chaos"), fault_seed=5,
+                              max_retries=10)
+    _submit(chaos, dataclasses.replace(base, fault_profile="crash_loop"),
+            xs, ys, "a")
+    got = chaos.run_until_complete()["a"]
+    health = chaos.last_health["a"]
+    assert health["total_retries"] >= 1          # crashes actually fired
+    assert not health["quarantined"]
+    np.testing.assert_array_equal(np.asarray(expect.theta),
+                                  np.asarray(got.theta))
+
+
+def test_service_quarantines_hopeless_run_and_isolates_it(tmp_path):
+    xs, ys = _data()
+    base = _spec(checkpoint_every=4)
+    dead_spec = dataclasses.replace(base,
+                                    fault_params=(("crash_prob", 1.0),))
+    svc = ExperimentService(str(tmp_path), max_retries=2)
+    _submit(svc, dead_spec, xs, ys, "dead")
+    _submit(svc, base, xs, ys, "ok")
+    results = svc.run_until_complete()
+    health = svc.last_health
+    assert results["dead"] is None
+    assert health["dead"]["quarantined"]
+    assert health["dead"]["total_retries"] == 3   # max_retries + 1
+    assert "InjectedCrashError" in health["dead"]["last_error"]
+    assert results["ok"] is not None
+    solo = api.build_experiment(base, xs, ys).run(20)
+    np.testing.assert_array_equal(np.asarray(solo.theta),
+                                  np.asarray(results["ok"].theta))
+
+
+def test_service_restart_falls_back_past_corrupt_checkpoints(tmp_path):
+    """bad_disk corrupts checkpoints after writing; a restarted service
+    must resume from the newest intact one and finish bit-identically."""
+    xs, ys = _data()
+    base = _spec(checkpoint_every=4)
+    ctrl = ExperimentService(str(tmp_path / "ctrl"))
+    _submit(ctrl, base, xs, ys, "a")
+    expect = ctrl.run_until_complete()["a"]
+
+    disk_spec = dataclasses.replace(base, fault_profile="bad_disk")
+    svc = ExperimentService(str(tmp_path / "disk"), fault_seed=5)
+    _submit(svc, disk_spec, xs, ys, "a")
+    svc.run_until_complete()
+    ckpt_dir = str(tmp_path / "disk" / "a")
+    assert ckpt_io.latest_checkpoint(ckpt_dir) \
+        != ckpt_io.latest_checkpoint(ckpt_dir, valid_only=True)
+
+    svc2 = ExperimentService(str(tmp_path / "disk"))   # the restart
+    run = _submit(svc2, disk_spec, xs, ys, "a")
+    assert run.resumed and run.fallback_resume
+    got = svc2.run_until_complete()["a"]
+    np.testing.assert_array_equal(np.asarray(expect.theta),
+                                  np.asarray(got.theta))
+
+
+def test_service_health_surfaces_runtime_degradation(tmp_path):
+    xs, ys = _data()
+    svc = ExperimentService(str(tmp_path))
+    _submit(svc, _spec(fault_profile="flaky_clients", checkpoint_every=4),
+            xs, ys, "f")
+    svc.run_until_complete()
+    health = svc.last_health["f"]["health"]
+    assert health is not None and health["returns_masked"] > 0

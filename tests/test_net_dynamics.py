@@ -270,3 +270,28 @@ def test_estimator_validation():
         OnlineChannelEstimator(nodes, beta=0.0)
     with pytest.raises(ValueError, match="window"):
         OnlineChannelEstimator(nodes, window=0)
+
+
+def test_windowed_estimator_all_nan_column_is_warning_free():
+    """A node unseen for the whole window keeps its previous estimates
+    without np.nanmean's all-NaN RuntimeWarning (the windowed refresh
+    uses an explicit mask; warnings-as-errors pins it)."""
+    import warnings
+
+    true = [NodeDelayParams(mu=4.0, alpha=2.0, tau=0.08, p=0.1)
+            for _ in range(3)]
+    tr = generate_trace(true, CHANNEL_PROFILES["static"], 30,
+                        np.random.default_rng(1))
+    obs = sample_round_observations(true, np.full(3, 10.0),
+                                    np.random.default_rng(2), tr)
+    obs.active[:, 0] = False                 # node 0: all-NaN window
+    est = OnlineChannelEstimator(true, window=30)
+    mu0, tau0, p0 = est.mu_hat[0], est.tau_hat[0], est.p_hat[0]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        est.update(obs)
+    assert est.mu_hat[0] == mu0 and est.tau_hat[0] == tau0
+    assert est.p_hat[0] == p0
+    assert est.avail_hat[0] == 0.0
+    # the observed nodes' windowed means did move off the warm start
+    assert est.mu_hat[1] != pytest.approx(true[1].mu, abs=0.0)

@@ -307,3 +307,100 @@ def test_latest_checkpoint_orders_numerically(tmp_path):
     latest = ckpt_io.latest_checkpoint(str(tmp_path))
     assert latest.endswith(f"{ckpt_io.CKPT_PREFIX}000012.npz")
     assert ckpt_io.latest_checkpoint(str(tmp_path / "empty")) is None
+
+
+# ---------------------------------------------------------------------------
+# restore-path failures: every way a checkpoint can be bad on disk
+# ---------------------------------------------------------------------------
+
+def _truncate(path):
+    from repro.faults import truncate_file
+    truncate_file(path, frac=0.5)
+
+
+def _bitflip(path):
+    from repro.faults import bitflip_file
+    bitflip_file(path)
+
+
+def _tamper_digest(path):
+    """Rewrite the npz with one array's bytes changed but the original
+    ``__meta__`` (and its embedded digest) kept — a structurally valid
+    file whose content no longer matches its digest."""
+    with np.load(path) as data:
+        raw = {k: data[k] for k in data.files}
+    key = next(k for k in raw if not k.startswith("__"))
+    raw[key] = np.asarray(raw[key]) + 1
+    np.savez(path[:-len(".npz")], **raw)
+
+
+@pytest.mark.parametrize("corrupt, match", [
+    (_truncate, "unreadable"),
+    (_bitflip, "unreadable|digest"),
+    (_tamper_digest, "digest"),
+], ids=["truncated", "bitflipped", "digest_mismatch"])
+def test_restore_state_detects_corruption(tmp_path, corrupt, match):
+    path = ckpt_io.save_state(str(tmp_path / "s.npz"),
+                              {"x": np.arange(64.0)}, {"cursor": 3})
+    ckpt_io.restore_state(path)                    # sanity: intact loads
+    corrupt(path)
+    with pytest.raises(ckpt_io.CheckpointCorruptError, match=match):
+        ckpt_io.restore_state(path)
+
+
+def test_latest_checkpoint_valid_only_falls_back(tmp_path):
+    for step in (4, 8, 12):
+        ckpt_io.save_state(
+            str(tmp_path / f"{ckpt_io.CKPT_PREFIX}{step:06d}.npz"),
+            {"x": np.full(8, float(step))}, {"step": step})
+    _truncate(str(tmp_path / f"{ckpt_io.CKPT_PREFIX}000012.npz"))
+    # plain mode still returns the (corrupt) newest; valid_only skips it
+    assert ckpt_io.latest_checkpoint(str(tmp_path)).endswith("000012.npz")
+    assert ckpt_io.latest_checkpoint(
+        str(tmp_path), valid_only=True).endswith("000008.npz")
+    _tamper_digest(str(tmp_path / f"{ckpt_io.CKPT_PREFIX}000008.npz"))
+    assert ckpt_io.latest_checkpoint(
+        str(tmp_path), valid_only=True).endswith("000004.npz")
+
+
+def test_stale_tmp_files_swept_and_never_resumed(tmp_path):
+    """A mid-save kill's ``*.tmp`` leftover is never a resume candidate
+    and is swept by the next successful save."""
+    stale = tmp_path / f"{ckpt_io.CKPT_PREFIX}000008.npz.tmp.npz"
+    stale.write_bytes(b"half-written garbage")
+    assert ckpt_io.latest_checkpoint(str(tmp_path)) is None
+    ckpt_io.save_state(
+        str(tmp_path / f"{ckpt_io.CKPT_PREFIX}000004.npz"),
+        {"x": np.zeros(2)}, {})
+    assert not stale.exists()
+    assert ckpt_io.latest_checkpoint(str(tmp_path)).endswith("000004.npz")
+
+
+def test_resume_from_empty_dir_starts_fresh(tmp_path):
+    """resume=True over a checkpoint-less directory falls back to a
+    fresh run (and produces the same result as not resuming at all)."""
+    xs, ys = _data()
+    control = api.build_experiment(_spec(), xs, ys).run(8)
+    resumed = api.build_experiment(_spec(), xs, ys).run(
+        8, checkpoint_dir=str(tmp_path / "nothing_here"), resume=True)
+    _assert_same_result(control, resumed)
+
+
+def test_resume_falls_back_past_corrupt_latest(tmp_path):
+    """End-to-end: corrupt the newest checkpoint mid-run; resume must
+    restore the older intact one and still finish bit-identically."""
+    xs, ys = _data()
+    spec = _spec()
+    control = api.build_experiment(spec, xs, ys).run(12)
+
+    exp = api.build_experiment(spec, xs, ys)
+    state = exp.init_state(12)
+    for _ in range(2):                             # two block boundaries
+        state = exp.run_block(state)
+        exp.save_state(
+            str(tmp_path / f"{ckpt_io.CKPT_PREFIX}"
+                f"{state.rounds_done:06d}.npz"), state)
+    _truncate(str(tmp_path / f"{ckpt_io.CKPT_PREFIX}000008.npz"))
+    resumed = api.build_experiment(spec, xs, ys).run(
+        12, checkpoint_dir=str(tmp_path), resume=True)
+    _assert_same_result(control, resumed)
