@@ -21,8 +21,9 @@ from repro.launch import kernel_bench
 
 # (n_clients, l, q, c, iters, realizations) for the profile grid, plus
 # the drift-scenario (static vs adaptive) comparison's, the RunState
-# service benchmark's, the per-kernel microbenchmark's, and the
-# fault-injection resilience benchmark's own sizes
+# service benchmark's, the per-kernel microbenchmark's, the
+# fault-injection resilience benchmark's, and the hierarchical
+# population-scaling benchmark's own sizes
 _SCALES = {
     "smoke": dict(n_clients=5, l=12, q=16, c=3, iters=8, realizations=3,
                   scenario_kwargs=dict(n_clients=6, l=16, q=16, c=3,
@@ -30,20 +31,27 @@ _SCALES = {
                   service_kwargs=dict(n_clients=6, l=16, q=16, c=3,
                                       iters=24, block=6),
                   kernel_kwargs=dict(kernel_bench.SCALES["smoke"], iters=10),
-                  resilience_kwargs=dict(iters=24)),
+                  resilience_kwargs=dict(iters=24),
+                  # the full REQUIRED_NS ladder (the artifact validator
+                  # pins it) at the shallowest deterministic solver depth
+                  scale_kwargs=dict(rounds=2, trace_rounds=2,
+                                    solver_kwargs=dict(n_golden_search=12,
+                                                       n_bisect=20))),
     "default": dict(n_clients=12, l=32, q=64, c=5, iters=40,
                     realizations=6, scenario_kwargs=None,
                     service_kwargs=None,
                     kernel_kwargs=dict(kernel_bench.SCALES["default"],
                                        iters=20),
-                    resilience_kwargs=None),
+                    resilience_kwargs=None, scale_kwargs=None),
     "full": dict(n_clients=30, l=100, q=256, c=10, iters=150,
                  realizations=8,
                  scenario_kwargs=dict(n_clients=20, l=48, q=64, c=5,
                                       iters=120, adapt_every=8),
                  service_kwargs=None,
                  kernel_kwargs=dict(kernel_bench.SCALES["full"], iters=20),
-                 resilience_kwargs=dict(iters=80)),
+                 resilience_kwargs=dict(iters=80),
+                 scale_kwargs=dict(
+                     ns=(1_000, 10_000, 100_000, 1_000_000))),
 }
 
 

@@ -63,10 +63,11 @@ def __getattr__(name):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def build_experiment(spec: "ExperimentSpec | dict", x_stack, y_stack, *,
+def build_experiment(spec: "ExperimentSpec | dict", x_stack=None,
+                     y_stack=None, *,
                      nodes: Optional[list] = None,
                      rng: Optional[np.random.Generator] = None,
-                     mesh=None) -> Experiment:
+                     mesh=None, data_fn=None):
     """Build a runnable `Experiment` from a spec and client data.
 
     spec: an `ExperimentSpec` (or its `to_dict()` form, revived here);
@@ -78,11 +79,36 @@ def build_experiment(spec: "ExperimentSpec | dict", x_stack, y_stack, *,
     deployments).  `mesh` accepts a concrete 1-D "clients"
     `jax.sharding.Mesh` (not serializable, hence not a spec field) or a
     device count, overriding ``spec.mesh``.
+
+    Specs with ``hier_shards > 1`` or ``sample_fraction < 1.0`` build a
+    `repro.hier.HierExperiment` instead (edge-aggregator shards, sampled
+    cohorts with coded compensation); those may stream client blocks via
+    ``data_fn(lo, hi) -> (x, y)`` in place of dense stacks, so a
+    population of 1e5-1e6 clients never materializes an (n, l, q)
+    tensor.  The identity configuration (``hier_shards=1,
+    sample_fraction=1.0``) always takes the flat engine, so its
+    trajectories are bit-identical to the pre-hier runtime.
     """
     if isinstance(spec, dict):
         spec = ExperimentSpec.from_dict(spec)
     # validate the scheme against the live registry up front so the error
     # points at the spec, not at a stack frame deep in Experiment setup
     schemes.get_scheme(spec.resolved_scheme)
+    if spec.hier_active:
+        from repro.hier import HierExperiment
+        if nodes is not None or mesh is not None:
+            raise ValueError(
+                "the hierarchical tier builds its delay population from "
+                "the spec (repro.hier.population_delay_arrays) and shards "
+                "clients over edge aggregators; nodes/mesh overrides are "
+                "not supported with hier_shards > 1 or "
+                "sample_fraction < 1.0")
+        return HierExperiment(spec, x_stack, y_stack, data_fn=data_fn,
+                              rng=rng)
+    if data_fn is not None:
+        raise ValueError(
+            "data_fn streaming is only supported by the hierarchical tier "
+            "(hier_shards > 1 or sample_fraction < 1.0); the flat engine "
+            "takes dense x_stack/y_stack")
     return Experiment(spec, x_stack, y_stack, nodes=nodes, rng=rng,
                       mesh=mesh)

@@ -263,6 +263,15 @@ class ExperimentSpec:
     # checkpoint directories
     checkpoint_every: int = 0
     run_id: Optional[str] = None
+    # hierarchical population tier (repro.hier): number of edge-aggregator
+    # shards the population is partitioned into, and the per-round
+    # Bernoulli client-sampling fraction (its draws come from a dedicated
+    # RNG stream, so toggling it never shifts the delay realization; the
+    # parity gradient is reweighted to compensate the unsampled mass).
+    # The identity values (1, 1.0) keep the flat engine — build_experiment
+    # only routes to HierExperiment when either departs from identity.
+    hier_shards: int = 1
+    sample_fraction: float = 1.0
 
     def __post_init__(self):
         if self.engine not in _ENGINES:
@@ -368,6 +377,60 @@ class ExperimentSpec:
                     "sharding yet (crash/checkpoint faults are fine)")
             # knob names/values validated eagerly, like channel_params
             self.resolved_faults()
+        if not isinstance(self.hier_shards, int) \
+                or isinstance(self.hier_shards, bool) or self.hier_shards < 1:
+            raise ValueError(f"hier_shards must be an int >= 1, "
+                             f"got {self.hier_shards!r}")
+        if self.hier_shards > self.fl.n_clients:
+            raise ValueError(
+                f"hier_shards={self.hier_shards} exceeds "
+                f"fl.n_clients={self.fl.n_clients} (each edge-aggregator "
+                "shard needs at least one client)")
+        if not isinstance(self.sample_fraction, (int, float)) \
+                or isinstance(self.sample_fraction, bool) \
+                or not 0.0 < float(self.sample_fraction) <= 1.0:
+            raise ValueError(f"sample_fraction must lie in (0, 1], "
+                             f"got {self.sample_fraction!r}")
+        if self.hier_active:
+            hier = (f"hier_shards={self.hier_shards}, "
+                    f"sample_fraction={self.sample_fraction}")
+            if self.engine == "legacy":
+                raise ValueError(
+                    f"the hierarchical tier ({hier}) requires the batched "
+                    "engine; the legacy per-client oracle has no sharded "
+                    "round")
+            if self.channel_profile is not None or self.channel_params:
+                raise ValueError(
+                    f"the hierarchical tier ({hier}) has no traced-channel "
+                    "path yet; drop channel_profile/channel_params "
+                    "(population traces: repro.hier.generate_trace_chunked)")
+            if self.fault_profile is not None or self.fault_params:
+                raise ValueError(
+                    f"the hierarchical tier ({hier}) has no fault-injection "
+                    "path yet; drop fault_profile/fault_params")
+            if self.adapt_every > 0:
+                raise ValueError(
+                    f"the hierarchical tier ({hier}) runs the static coded "
+                    "round per shard; adaptive re-allocation "
+                    f"(adapt_every={self.adapt_every}) is not supported")
+            if self.fused_embed:
+                raise ValueError(
+                    f"the hierarchical tier ({hier}) consumes embedded "
+                    "client blocks; fused_embed is not supported")
+            if self.secure_aggregation:
+                raise ValueError(
+                    f"the hierarchical tier ({hier}) does not implement "
+                    "secure aggregation of shard rows yet")
+            if self.mesh is not None:
+                raise ValueError(
+                    f"the hierarchical tier ({hier}) shards clients over "
+                    "edge aggregators, not a device mesh; drop mesh")
+
+    @property
+    def hier_active(self) -> bool:
+        """True when the spec departs from the flat engine's identity
+        configuration and must run on the hierarchical tier."""
+        return self.hier_shards > 1 or float(self.sample_fraction) < 1.0
 
     @property
     def resolved_scheme(self) -> str:
@@ -398,7 +461,9 @@ class ExperimentSpec:
         try:
             return dataclasses.replace(base, **self.fault_params_dict)
         except TypeError as exc:
-            raise ValueError(f"bad fault_params: {exc}") from None
+            knobs = tuple(f.name for f in dataclasses.fields(base))
+            raise ValueError(f"bad fault_params: {exc} "
+                             f"(valid knobs: {knobs})") from None
 
     def resolved_channel(self):
         """The effective `ChannelProfile`, or None when no dynamics are
@@ -413,7 +478,9 @@ class ExperimentSpec:
         try:
             return dataclasses.replace(base, **self.channel_params_dict)
         except TypeError as exc:
-            raise ValueError(f"bad channel_params: {exc}") from None
+            knobs = tuple(f.name for f in dataclasses.fields(base))
+            raise ValueError(f"bad channel_params: {exc} "
+                             f"(valid knobs: {knobs})") from None
 
     def resolved_fl(self) -> FLConfig:
         """`fl` with the named delay profile's knobs applied."""
@@ -445,8 +512,10 @@ class ExperimentSpec:
                     if tup_field in val and val[tup_field] is not None:
                         val[tup_field] = tuple(val[tup_field])
                 d[key] = typ(**val)
-        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        valid = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - valid
         if unknown:
             raise ValueError(
-                f"unknown ExperimentSpec field(s) {sorted(unknown)}")
+                f"unknown ExperimentSpec field(s) {sorted(unknown)} "
+                f"(valid fields: {sorted(valid)})")
         return cls(**d)

@@ -179,9 +179,20 @@ def sample_round_times(nodes: "list[NodeDelayParams]", loads,
     incur communication delay only, matching `NodeDelayParams.sample`.
     Returns float64 delays of shape (rounds, n).
     """
-    prm = stack_node_params(nodes)
+    return sample_round_times_stacked(stack_node_params(nodes), loads,
+                                      rng, rounds)
+
+
+def sample_round_times_stacked(prm: dict, loads, rng: np.random.Generator,
+                               rounds: int = 1) -> np.ndarray:
+    """`sample_round_times` over pre-stacked `stack_node_params` arrays.
+
+    Identical draw layout (geometric down, geometric up, exponential) and
+    bit-identical output — the population tier (`repro.hier`) works with
+    stacked arrays to avoid materializing n Python node objects per draw.
+    """
     loads = np.asarray(loads, np.float64)
-    n = len(nodes)
+    n = prm["mu"].shape[0]
     if loads.shape != (n,):
         raise ValueError(f"loads shape {loads.shape} != ({n},)")
     n_down = rng.geometric(1.0 - prm["p_down"], size=(rounds, n))

@@ -595,6 +595,13 @@ class Experiment:
                 f"spec must be an ExperimentSpec, got {type(spec).__name__}"
                 " (build one with repro.config.ExperimentSpec and pass it"
                 " to repro.api.build_experiment)")
+        if spec.hier_active:
+            raise ValueError(
+                f"spec requests the hierarchical tier (hier_shards="
+                f"{spec.hier_shards}, sample_fraction="
+                f"{spec.sample_fraction}) but was passed to the flat "
+                "engine; build it with repro.api.build_experiment, which "
+                "routes hier-active specs to repro.hier.HierExperiment")
         self.spec = spec
         fl_cfg = spec.resolved_fl()      # delay-profile knobs applied
         self.engine = spec.engine

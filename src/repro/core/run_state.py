@@ -21,11 +21,15 @@ bit-identically after a kill:
     iterate when stale-update faults are enabled, and the dedicated
     fault-stream RNG state (`repro.faults`).
 
-Three run modes share the structure: ``"single"`` (one trajectory,
+Four run modes share the structure: ``"single"`` (one trajectory,
 blocks advance the round cursor), ``"multi"`` (stationary `run_multi`,
-blocks advance all realizations' round cursors together), and
+blocks advance all realizations' round cursors together),
 ``"multi_channel"`` (traced `run_multi`, blocks advance one full
-realization at a time — each realization is an independent trace).
+realization at a time — each realization is an independent trace), and
+``"hier"`` (the hierarchical population tier, `repro.hier.topology` —
+which additionally carries the dedicated client-sampling stream's RNG
+position ``sample_rng_state`` so sampled cohorts replay bit-identically
+across kill/resume).
 
 `pack_state`/`unpack_state` convert to/from the (arrays, JSON-meta)
 payload of `repro.checkpoint.io.save_state`; numpy PCG64 states are
@@ -43,7 +47,7 @@ from repro.net.trace import TraceState
 
 FORMAT_VERSION = 2
 
-_MODES = ("single", "multi", "multi_channel")
+_MODES = ("single", "multi", "multi_channel", "hier")
 
 #: per-sub-block adaptive schedule record arrays, (B, n) unless noted
 _SCHED_KEYS = ("times", "active", "block_idx", "t_star_r", "n_wait_r",
@@ -92,6 +96,8 @@ class RunState:
     theta_prev: Any = None            # previous-round iterate (present
                                       # only when stale faults are on)
     fault_rng_state: Optional[dict] = None  # fault-stream RNG (PCG64)
+    # --- hierarchical tier state (mode "hier") -----------------------
+    sample_rng_state: Optional[dict] = None  # client-sampling-stream RNG
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -135,6 +141,7 @@ def pack_state(state: RunState) -> "tuple[dict, dict]":
         "controls": None,
         "has_sched": state.sched is not None,
         "fault_rng_state": state.fault_rng_state,
+        "sample_rng_state": state.sample_rng_state,
     }
     if state.lr_scale is not None:
         arrays["lr_scale"] = np.asarray(state.lr_scale, np.float64)
@@ -232,4 +239,5 @@ def unpack_state(arrays: dict, meta: dict) -> RunState:
                  if "skipped" in arrays else None),
         theta_prev=(jnp.asarray(arrays["theta_prev"])
                     if "theta_prev" in arrays else None),
-        fault_rng_state=meta.get("fault_rng_state"))
+        fault_rng_state=meta.get("fault_rng_state"),
+        sample_rng_state=meta.get("sample_rng_state"))

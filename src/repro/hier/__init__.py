@@ -1,0 +1,39 @@
+"""Hierarchical population-scale tier (edge aggregators over client shards).
+
+Scales the CodedFedL round from one MEC cell (n ~ 1e3) to a population of
+n = 1e5-1e6 clients:
+
+  * `repro.hier.population` — chunked/streamed population state: stacked
+    delay-parameter arrays instead of n Python node objects, a
+    scan-over-blocks two-step load-allocation solver, and a client-chunked
+    channel-trace generator, all O(block) memory.
+  * `repro.hier.sampling` — per-round client sampling on its own
+    fixed-layout RNG stream plus the coded-compensation parity reweight
+    that keeps the sampled update an unbiased SGD step.
+  * `repro.hier.topology` — the two-level topology: edge-aggregator
+    shards each run a coded round over their cohort and contribute one
+    aggregate row to the server-level combine (`HierExperiment`).
+
+`repro.api.build_experiment` routes specs with ``hier_shards > 1`` or
+``sample_fraction < 1.0`` here; the identity configuration
+(``hier_shards=1, sample_fraction=1.0``) stays on the flat engine, so its
+trajectory is bit-identical to the pre-hier runtime.
+"""
+from repro.hier.population import (generate_trace_chunked,  # noqa: F401
+                                   iter_trace_chunks,
+                                   nodes_for_range,
+                                   population_delay_arrays,
+                                   two_step_allocate_chunked)
+from repro.hier.sampling import (SAMPLE_SEED_OFFSET,  # noqa: F401
+                                 parity_reweight, sample_cohort_rows,
+                                 sampling_rng)
+from repro.hier.topology import (HierExperiment, HierResult,  # noqa: F401
+                                 ShardPlan, shard_ranges)
+
+__all__ = [
+    "HierExperiment", "HierResult", "ShardPlan", "shard_ranges",
+    "SAMPLE_SEED_OFFSET", "parity_reweight", "sample_cohort_rows",
+    "sampling_rng", "generate_trace_chunked", "iter_trace_chunks",
+    "nodes_for_range", "population_delay_arrays",
+    "two_step_allocate_chunked",
+]

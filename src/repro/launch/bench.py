@@ -55,10 +55,11 @@ from repro.core.delay_model import HETEROGENEITY_PROFILES  # noqa: F401
 from repro.core.delay_model import ideal_round_time  # noqa: F401
 from repro.launch import kernel_bench as kernel_bench_mod
 from repro.launch import resilience as resilience_mod
+from repro.launch import scale as scale_mod
 from repro.launch import scenarios as scenarios_mod
 from repro.launch import sweep as sweep_mod
 
-SCHEMA_VERSION = 7
+SCHEMA_VERSION = 8
 ARTIFACT_NAME = "BENCH_fed_training.json"
 # core grid every artifact must cover; the live registry may add more
 CORE_SCHEMES = ("coded", "naive", "greedy", "ideal")
@@ -68,11 +69,12 @@ CORE_SCHEMES = ("coded", "naive", "greedy", "ideal")
 SCHEMES = schemes_registry.grid_names()
 
 
-def _build_sims(xs, ys, profiles, fl_base, tc, kernel_backend, scheme_names):
+def _build_sims(xs, ys, profiles, fl_base, tc, kernel_backend, scheme_names,
+                base_spec=None):
     """{scheme: {profile: Experiment}} — the per-deployment setup
     (load allocation, parity encode, delay network) both engines share."""
     return {scheme: sweep_mod._build_sims(xs, ys, profiles, tc, scheme,
-                                          fl_base, kernel_backend)
+                                          fl_base, kernel_backend, base_spec)
             for scheme in scheme_names}
 
 
@@ -99,7 +101,9 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
                 scenario_kwargs: Optional[dict] = None,
                 service_kwargs: Optional[dict] = None,
                 kernel_kwargs: Optional[dict] = None,
-                resilience_kwargs: Optional[dict] = None) -> dict:
+                resilience_kwargs: Optional[dict] = None,
+                scale_kwargs: Optional[dict] = None,
+                base_spec=None) -> dict:
     """Run the scheme comparison over heterogeneity profiles.
 
     The scheme grid is the LIVE grid-eligible registry
@@ -128,10 +132,27 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
     (`repro.launch.resilience.run_resilience`): coded-vs-naive
     time-to-target under client-fault profiles plus the self-healing
     service chaos check; `resilience_kwargs` follows the same
+    convention.  Schema v8 adds the ``scale`` section
+    (`repro.launch.scale.run_scale`): the hierarchical-tier
+    population-scaling curve (wall-clock/memory over the n ladder) plus
+    the flat-routing identity check; `scale_kwargs` follows the same
     convention.
+
+    `base_spec` replays a full `ExperimentSpec` across the profile grid
+    (see `run_sweep`).  Hierarchical/sampled specs are rejected here: the
+    scheme-comparison grid is a flat-engine benchmark.
     """
     if engine not in ("sweep", "loop"):
         raise ValueError(f"unknown engine {engine!r}")
+    if base_spec is not None and base_spec.hier_active:
+        raise ValueError(
+            "the scheme-comparison benchmark runs the flat engine over a "
+            "small dense grid and has no edge-aggregator path; drop "
+            f"hier_shards (got {base_spec.hier_shards}) / sample_fraction "
+            f"(got {base_spec.sample_fraction}) from base_spec — the "
+            "hierarchical tier is benched by the schema-v8 'scale' "
+            "section (repro.launch.scale.run_scale / "
+            "benchmarks/bench_hier_scale.py)")
     scheme_names = schemes_registry.grid_names()
     missing = set(CORE_SCHEMES) - set(scheme_names)
     if missing:
@@ -150,7 +171,7 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
 
     t0 = time.perf_counter()
     sims = _build_sims(xs, ys, profiles, fl_base, tc, kernel_backend,
-                       scheme_names)
+                       scheme_names, base_spec)
     setup_seconds = time.perf_counter() - t0
 
     sweep_info = None
@@ -160,7 +181,8 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
         sw = sweep_mod.run_sweep(
             xs, ys, profiles=profiles, train_cfg=tc, iterations=iters,
             realizations=realizations, schemes=scheme_names,
-            fl_kwargs=fl_base, kernel_backend=kernel_backend, sims=sims)
+            fl_kwargs=fl_base, kernel_backend=kernel_backend, sims=sims,
+            base_spec=base_spec)
         sweep_total = time.perf_counter() - t0
         loop_total = None
         if measure_loop:
@@ -267,6 +289,10 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
         # schema v7: fault-injection degradation + service chaos recovery
         artifact["resilience"] = resilience_mod.run_resilience(
             kernel_backend=kernel_backend, **resilience_kwargs)
+    scale_kwargs = dict(scale_kwargs or {})
+    if not scale_kwargs.pop("skip", False):
+        # schema v8: hierarchical-tier population-scaling curve
+        artifact["scale"] = scale_mod.run_scale(**scale_kwargs)
     return artifact
 
 
@@ -370,8 +396,8 @@ _SCHEME_FIELDS = ("final_wall_clock_mean", "final_wall_clock_std",
                   "host_seconds")
 
 
-def validate_artifact(obj) -> list[str]:
-    """Structural check of the BENCH_fed_training.json artifact (schema 7).
+def validate_artifact(obj, *, scale_required_ns=None) -> list[str]:
+    """Structural check of the BENCH_fed_training.json artifact (schema 8).
 
     `obj` is a dict or a path.  Returns a list of problems (empty == valid)
     rather than raising, so CI can print every issue at once.
@@ -397,7 +423,13 @@ def validate_artifact(obj) -> list[str]:
     degradation + service chaos recovery, validated by
     `repro.launch.resilience.validate_resilience` — which enforces the
     headline claims: coded degrades gracefully, unguarded naive stalls,
-    chaos recovery is bit-identical).
+    chaos recovery is bit-identical).  Schema v8 adds the required
+    ``scale`` section (hierarchical-tier population-scaling curve,
+    validated by `repro.launch.scale.validate_scale` — which enforces the
+    n ladder, the O(active cohort) memory contract, and the flat-routing
+    identity).  ``scale_required_ns`` overrides the enforced ladder
+    (default `scale.REQUIRED_NS`) for reduced-ladder artifacts, e.g. the
+    tiny test fixture; the CLI/CI path always uses the strict default.
     """
     if isinstance(obj, str):
         try:
@@ -474,6 +506,13 @@ def validate_artifact(obj) -> list[str]:
         errs.append("schema v7 artifact missing 'resilience' section")
     else:
         errs.extend(resilience_mod.validate_resilience(obj["resilience"]))
+    if "scale" not in obj:
+        errs.append("schema v8 artifact missing 'scale' section")
+    else:
+        errs.extend(scale_mod.validate_scale(
+            obj["scale"],
+            required_ns=(scale_mod.REQUIRED_NS if scale_required_ns is None
+                         else scale_required_ns)))
     profiles = obj.get("profiles")
     if not isinstance(profiles, dict) or not profiles:
         return errs + ["missing/empty 'profiles'"]

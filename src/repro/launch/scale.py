@@ -1,0 +1,230 @@
+"""Population-scaling benchmark: the schema-v8 ``scale`` artifact section.
+
+Runs the hierarchical tier (`repro.hier.HierExperiment`) at a ladder of
+population sizes — n = 1e3, 1e4, 1e5 by default, 1e6 in ``--full`` runs —
+and records the wall-clock/memory scaling curve: per-n setup and round
+timings, the chunked-solver and chunked-trace costs, and the two memory
+numbers that certify the O(active cohort) contract (peak transient
+client-tensor bytes vs the dense (n, l, q) tensor a flat run would
+materialize).  Client data is streamed per block through a deterministic
+synthetic `data_fn`, so even the 1e6-client rung never holds a dense
+population tensor.
+
+The section also pins the routing identity at the smallest rung:
+``build_experiment`` with the identity configuration (``hier_shards=1,
+sample_fraction=1.0``) must return the flat engine and reproduce a
+directly-built flat `Experiment`'s trajectory bit-exactly.
+
+CLI: ``benchmarks/bench_hier_scale.py --smoke/--full``; the section is
+embedded in ``BENCH_fed_training.json`` by `repro.launch.bench` and
+enforced by its validator via `validate_scale`.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+#: population rungs every committed artifact must cover (the 1e6 rung is
+#: optional --full territory; extra rungs are welcome)
+REQUIRED_NS = (1_000, 10_000, 100_000)
+
+#: target clients per edge-aggregator shard — hier_shards ~= n / cohort,
+#: so the peak client tensor stays O(cohort) as n grows
+DEFAULT_COHORT = 1_000
+
+
+def synthetic_block(lo: int, hi: int, l: int, q: int, c: int):
+    """Deterministic synthetic client block for clients [lo, hi).
+
+    Pointwise function of (client, point, feature) indices — no RNG
+    state — so any block pattern (setup's encode blocks, each round's
+    shard blocks) sees consistent per-client data, and nothing O(n) is
+    ever materialized.
+    """
+    j = np.arange(lo, hi, dtype=np.float64)[:, None, None]
+    i = np.arange(l, dtype=np.float64)[None, :, None]
+    kq = np.arange(q, dtype=np.float64)[None, None, :]
+    kc = np.arange(c, dtype=np.float64)[None, None, :]
+    x = (0.2 * np.sin(0.7 * j + 1.3 * i + 2.1 * kq)).astype(np.float32)
+    y = np.cos(0.3 * j + 0.9 * i + 1.7 * kc).astype(np.float32)
+    return x, y
+
+
+def _identity_check(l: int, q: int, c: int, rounds: int,
+                    seed: int) -> dict:
+    """Pin the routing identity: the identity configuration takes the
+    flat engine and reproduces a directly-built flat run bit-exactly."""
+    from repro.api import build_experiment
+    from repro.config import ExperimentSpec, FLConfig, TrainConfig
+    from repro.core.fed_runtime import Experiment
+
+    n = 16
+    x, y = synthetic_block(0, n, l, q, c)
+    spec = ExperimentSpec(
+        fl=FLConfig(n_clients=n, delta=0.2, seed=seed),
+        train=TrainConfig(learning_rate=0.5, l2_reg=1e-5),
+        scheme="coded", hier_shards=1, sample_fraction=1.0)
+    routed = build_experiment(spec, x, y)
+    flat = Experiment(spec, x, y)
+    th_r = np.asarray(routed.run(rounds).theta)
+    th_f = np.asarray(flat.run(rounds).theta)
+    return {
+        "routes_flat_engine": type(routed).__name__ == "Experiment",
+        "bit_identical": bool(np.array_equal(th_r, th_f)),
+    }
+
+
+def run_scale(ns: Sequence[int] = REQUIRED_NS, l: int = 4, q: int = 8,
+              c: int = 2, rounds: int = 3, cohort: int = DEFAULT_COHORT,
+              sample_fraction: float = 0.25, seed: int = 0,
+              solver_block: Optional[int] = None,
+              solver_kwargs: Optional[dict] = None,
+              trace_rounds: int = 2,
+              trace_block: int = 4_096) -> dict:
+    """The ``scale`` section: hierarchical sampled runs across the n
+    ladder.
+
+    Every rung builds a `HierExperiment` with ``hier_shards = max(2,
+    n // cohort)`` (so per-shard transients stay O(cohort)) and a
+    sampled cohort, streams its data through `synthetic_block`, runs
+    ``rounds`` federated rounds, and times the chunked trace generator
+    over the same population.  Tensor shapes (l, q, c) are tunable for
+    smoke runs; the n ladder is what the validator pins.
+
+    `solver_kwargs` defaults to a shallower bisection than the solver's
+    full-precision defaults (the per-shard deadline search dominates
+    setup on a single CPU core at n >= 1e5); results stay deterministic
+    per setting.
+    """
+    if solver_kwargs is None:
+        solver_kwargs = dict(n_golden_search=16, n_bisect=28)
+    from repro.config import ExperimentSpec, FLConfig, TrainConfig
+    from repro.hier import HierExperiment, generate_trace_chunked
+    from repro.hier.population import DEFAULT_BLOCK, population_delay_arrays
+    from repro.net.channel import CHANNEL_PROFILES
+
+    tc = TrainConfig(learning_rate=0.5, l2_reg=1e-5)
+    # a dynamic profile so the trace timing exercises real per-round
+    # dynamics; "static" would shortcut most of the generator
+    trace_profile = CHANNEL_PROFILES.get(
+        "drift_churn") or next(iter(CHANNEL_PROFILES.values()))
+    entries = []
+    for n in ns:
+        n = int(n)
+        shards = max(2, n // int(cohort))
+        # the paper's k1/k2 decay knobs are per-client geometric,
+        # calibrated for n ~ 12; raised to n=1e5 they underflow link rates
+        # to zero (tau overflows).  Re-exponentiate so the population
+        # spans the SAME heterogeneity range [k^12, 1] at every n.
+        k1 = 0.95 ** (12.0 / n)
+        k2 = 0.8 ** (12.0 / n)
+        spec = ExperimentSpec(
+            fl=FLConfig(n_clients=n, delta=0.2, seed=seed,
+                        rate_decay=k1, mac_decay=k2), train=tc,
+            scheme="coded", hier_shards=shards,
+            sample_fraction=float(sample_fraction))
+        t0 = time.perf_counter()
+        exp = HierExperiment(
+            spec, data_fn=lambda lo, hi: synthetic_block(lo, hi, l, q, c),
+            solver_block=solver_block or min(DEFAULT_BLOCK, n),
+            solver_kwargs=dict(solver_kwargs))
+        setup_seconds = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        result = exp.run(rounds)
+        round_seconds = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        prm = population_delay_arrays(exp.fl, q * c)
+        tr = generate_trace_chunked(prm, trace_profile, trace_rounds,
+                                    seed=seed + 9973,
+                                    block_size=min(trace_block, n))
+        trace_seconds = time.perf_counter() - t0
+        assert tr.mu_mult.shape == (trace_rounds, n)
+        entries.append({
+            "n": n,
+            "shards": shards,
+            "sample_fraction": float(sample_fraction),
+            "rounds": int(rounds),
+            "setup_seconds": float(setup_seconds),
+            "round_seconds": float(round_seconds),
+            "wall_seconds": float(setup_seconds + round_seconds),
+            "trace_seconds": float(trace_seconds),
+            "trace_rounds": int(trace_rounds),
+            "peak_client_tensor_bytes": int(exp.peak_client_tensor_bytes()),
+            "dense_client_tensor_bytes": int(4 * n * l * (q + c)),
+            "population_tensor_bytes": int(exp.population_tensor_bytes()),
+            "t_round": float(result.t_round),
+            "mean_returned": float(np.mean(result.n_ret)),
+        })
+    return {
+        "shapes": {"l": int(l), "q": int(q), "c": int(c)},
+        "ns": [int(n) for n in ns],
+        "entries": entries,
+        "identity": _identity_check(l, q, c, rounds=3, seed=seed),
+    }
+
+
+def validate_scale(section, *,
+                   required_ns: Sequence[int] = REQUIRED_NS) -> list[str]:
+    """Structural check of the ``scale`` section (empty list == valid).
+
+    Enforces: the n ladder covers ``required_ns``; every entry's timings
+    are positive finite; the memory contract holds (peak transient
+    client-tensor bytes no larger than the dense tensor, and strictly
+    sub-dense from the 1e4 rung up); and the routing identity flags are
+    True.
+    """
+    errs: list[str] = []
+    if not isinstance(section, dict):
+        return [f"scale: must be an object, got {type(section).__name__}"]
+    entries = section.get("entries")
+    if not isinstance(entries, list) or not entries:
+        return ["scale: missing/empty 'entries'"]
+    by_n = {}
+    for i, entry in enumerate(entries):
+        if not isinstance(entry, dict) or not isinstance(
+                entry.get("n"), int):
+            errs.append(f"scale/entries[{i}]: malformed entry")
+            continue
+        by_n[entry["n"]] = entry
+    missing = [n for n in required_ns if n not in by_n]
+    if missing:
+        errs.append(f"scale: required population rung(s) absent {missing} "
+                    f"(have {sorted(by_n)})")
+    for n, entry in sorted(by_n.items()):
+        for field in ("setup_seconds", "round_seconds", "wall_seconds",
+                      "trace_seconds"):
+            val = entry.get(field)
+            if not isinstance(val, (int, float)) or not np.isfinite(val) \
+                    or val <= 0:
+                errs.append(f"scale/n={n}/{field}: bad value {val!r}")
+        for field in ("shards", "rounds", "peak_client_tensor_bytes",
+                      "dense_client_tensor_bytes",
+                      "population_tensor_bytes"):
+            val = entry.get(field)
+            if not isinstance(val, int) or val < 1:
+                errs.append(f"scale/n={n}/{field}: bad value {val!r}")
+        peak = entry.get("peak_client_tensor_bytes")
+        dense = entry.get("dense_client_tensor_bytes")
+        if isinstance(peak, int) and isinstance(dense, int):
+            if peak > dense:
+                errs.append(f"scale/n={n}: peak client tensor {peak} "
+                            f"exceeds the dense tensor {dense}")
+            if n >= 10_000 and peak * 2 > dense:
+                errs.append(
+                    f"scale/n={n}: peak client tensor {peak} is not "
+                    f"sub-dense (dense {dense}) — the O(active cohort) "
+                    "memory contract is broken")
+        frac = entry.get("sample_fraction")
+        if not isinstance(frac, (int, float)) or not 0.0 < frac <= 1.0:
+            errs.append(f"scale/n={n}/sample_fraction: bad value {frac!r}")
+    identity = section.get("identity")
+    if not isinstance(identity, dict):
+        errs.append("scale: missing 'identity' routing check")
+    else:
+        for flag in ("routes_flat_engine", "bit_identical"):
+            if identity.get(flag) is not True:
+                errs.append(f"scale/identity/{flag}: expected True, got "
+                            f"{identity.get(flag)!r}")
+    return errs

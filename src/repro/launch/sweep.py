@@ -118,6 +118,12 @@ def run_sweep(x_stack, y_stack, *, profiles: dict,
             "run_sweep derives q from the embedded x_stack and has no "
             "raw-feature path; drop fused_embed from base_spec (run "
             "fused-embed deployments through Experiment.run/run_multi)")
+    if base_spec is not None and base_spec.hier_active:
+        raise ValueError(
+            "run_sweep replays one flat compiled step across the grid and "
+            "has no edge-aggregator path; drop hier_shards/sample_fraction "
+            "from base_spec (population-scale runs go through "
+            "repro.hier.HierExperiment / repro.launch.scale)")
     if base_spec is not None:
         base_faults = base_spec.resolved_faults()
         if base_faults is not None and base_faults.has_return_faults:

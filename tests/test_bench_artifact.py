@@ -12,6 +12,10 @@ from repro.core import schemes as schemes_registry
 from repro.launch import bench as launch_bench
 from repro.launch import kernel_bench
 
+# the scale section's ladder is shrunk to toy rungs — the strict
+# REQUIRED_NS ladder belongs to the CLI/CI artifact, so tests validate
+# with the matching override (see _validate below)
+TINY_NS = (64, 128)
 TINY = dict(n_clients=4, l=8, q=12, c=2, iters=5, realizations=2,
             profiles={"uniform": dict(rate_decay=1.0, mac_decay=1.0),
                       "paper": dict(rate_decay=0.95, mac_decay=0.8)},
@@ -20,7 +24,14 @@ TINY = dict(n_clients=4, l=8, q=12, c=2, iters=5, realizations=2,
             service_kwargs=dict(n_clients=4, l=8, q=8, c=2, iters=8,
                                 block=4),
             kernel_kwargs=dict(n_clients=2, l=16, d=8, q=16, c=2, u=8,
-                               iters=3))
+                               iters=3),
+            scale_kwargs=dict(ns=TINY_NS, l=4, q=6, c=2, rounds=2,
+                              cohort=16, sample_fraction=0.5,
+                              trace_block=32))
+
+
+def _validate(obj):
+    return launch_bench.validate_artifact(obj, scale_required_ns=TINY_NS)
 
 
 @pytest.fixture(scope="module")
@@ -34,8 +45,12 @@ def artifact(tmp_path_factory):
 def test_artifact_written_and_valid(artifact):
     result, path = artifact
     assert path.exists()
-    assert launch_bench.validate_artifact(str(path)) == []
-    assert launch_bench.validate_artifact(result) == []
+    assert _validate(str(path)) == []
+    assert _validate(result) == []
+    # the strict default ladder rejects the toy ladder — exactly the
+    # committed-artifact enforcement the CLI/CI path relies on
+    strict = launch_bench.validate_artifact(result)
+    assert strict and all("population rung" in p for p in strict)
 
 
 def test_artifact_contents(artifact):
@@ -91,6 +106,15 @@ def test_artifact_contents(artifact):
     for name in kernel_bench.KERNEL_NAMES:
         assert kernels["entries"][name]["us_per_call"] > 0
     assert kernels["fused_vs_two_pass_ratio"] > 0
+    # schema v8: the hierarchical population-scaling section
+    scale = loaded["scale"]
+    assert [e["n"] for e in scale["entries"]] == list(TINY_NS)
+    for entry in scale["entries"]:
+        assert entry["wall_seconds"] > 0
+        assert entry["peak_client_tensor_bytes"] <= \
+            entry["dense_client_tensor_bytes"]
+    assert scale["identity"]["routes_flat_engine"] is True
+    assert scale["identity"]["bit_identical"] is True
 
 
 def test_newly_registered_scheme_lands_in_artifact(tmp_path):
@@ -103,7 +127,7 @@ def test_newly_registered_scheme_lands_in_artifact(tmp_path):
     schemes_registry.register(TinyParity())
     try:
         result = launch_bench.run_schemes(**TINY)
-        assert launch_bench.validate_artifact(result) == []
+        assert _validate(result) == []
         assert "tiny_parity" in result["config"]["schemes"]
         assert "tiny_parity" in result["config"]["coded_schemes"]
         for prof in result["profiles"].values():
@@ -158,12 +182,24 @@ def test_ideal_round_time_is_naive_lower_bound(artifact):
     (lambda d: d["kernels"].update(fused_vs_two_pass_ratio=-1.0),
      "fused_vs_two_pass_ratio"),
     (lambda d: d["kernels"].update(backend="cuda"), "backend"),
+    (lambda d: d.pop("scale"), "scale"),
+    (lambda d: d["scale"].pop("entries"), "entries"),
+    (lambda d: d["scale"]["entries"].pop(0), "population rung"),
+    (lambda d: d["scale"]["entries"][0].update(
+        wall_seconds=float("nan")), "wall_seconds"),
+    (lambda d: d["scale"]["entries"][0].update(
+        peak_client_tensor_bytes=10 ** 12), "peak client tensor"),
+    (lambda d: d["scale"]["entries"][1].update(sample_fraction=1.5),
+     "sample_fraction"),
+    (lambda d: d["scale"].pop("identity"), "identity"),
+    (lambda d: d["scale"]["identity"].update(bit_identical=False),
+     "bit_identical"),
 ])
 def test_validator_rejects_malformed(artifact, mutate, frag):
     result, _ = artifact
     broken = json.loads(json.dumps(result))   # deep copy
     mutate(broken)
-    problems = launch_bench.validate_artifact(broken)
+    problems = _validate(broken)
     assert problems, "validator accepted a malformed artifact"
     assert any(frag in p for p in problems)
 
@@ -225,8 +261,15 @@ def test_validator_rejects_garbage(tmp_path):
     assert launch_bench.validate_artifact(str(tmp_path / "missing.json"))
 
 
-def test_cli_validate_roundtrip(artifact, capsys):
+def test_cli_validate_roundtrip(artifact, capsys, monkeypatch):
     from benchmarks import bench_scheme_compare as cli
+    from repro.launch import scale as scale_mod
     _, path = artifact
+    # the CLI pins the CI rung ladder; the tiny fixture's scale section
+    # must fail it with the pointed missing-rung error...
+    assert cli.main(["--validate", str(path)]) == 1
+    assert "population rung" in capsys.readouterr().err
+    # ...and pass once the pinned ladder is the fixture's own
+    monkeypatch.setattr(scale_mod, "REQUIRED_NS", TINY_NS)
     assert cli.main(["--validate", str(path)]) == 0
     assert cli.main(["--validate", str(path) + ".nope"]) == 1

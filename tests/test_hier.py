@@ -1,0 +1,339 @@
+"""Hierarchical tier: edge-aggregator shards, sampled cohorts, identity.
+
+The contracts under test (ISSUE PR 9):
+
+  * the identity configuration (hier_shards=1, sample_fraction=1.0)
+    routes to the flat `Experiment` and its trajectory is bit-identical
+    to the pre-hier runtime;
+  * sampling draws from its OWN seeded stream — toggling
+    ``sample_fraction`` never shifts the delay, channel-trace, or fault
+    realizations;
+  * coded compensation: `parity_reweight` is exactly 1.0 at f = 1 and
+    grows as f shrinks;
+  * kill/resume and block partitions of a hierarchical run replay
+    bit-identically (both RNG stream positions live in `RunState`);
+  * spec growth: hier fields validate with pointed errors, survive the
+    JSON round-trip, and the flat engine / sweep / scheme-bench surfaces
+    reject hier-active specs with errors that say where to go instead.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.config import ExperimentSpec, FLConfig, TrainConfig
+from repro.core import fed_runtime, schemes
+from repro.hier import HierExperiment, sampling
+from repro.hier.topology import shard_ranges
+from repro.launch import bench as launch_bench
+from repro.launch import scale as launch_scale
+from repro.launch.sweep import run_sweep
+
+N, L, Q, C = 12, 4, 6, 2
+
+
+def _data(n=N, l=L, q=Q, c=C, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n, l, q)).astype(np.float32) * 0.2
+    ys = rng.normal(size=(n, l, c)).astype(np.float32)
+    return xs, ys
+
+
+def _spec(n=N, shards=3, f=0.6, **over):
+    base = dict(
+        fl=FLConfig(n_clients=n, delta=0.25, seed=3),
+        train=TrainConfig(learning_rate=0.5, l2_reg=1e-5),
+        scheme="coded", hier_shards=shards, sample_fraction=f)
+    base.update(over)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# shard_ranges / sampling primitives
+# ---------------------------------------------------------------------------
+
+def test_shard_ranges_balanced():
+    assert shard_ranges(10, 3) == [(0, 4), (4, 7), (7, 10)]
+    assert shard_ranges(6, 6) == [(j, j + 1) for j in range(6)]
+    assert shard_ranges(7, 1) == [(0, 7)]
+    sizes = [hi - lo for lo, hi in shard_ranges(101, 8)]
+    assert sum(sizes) == 101 and max(sizes) - min(sizes) <= 1
+
+
+def test_shard_ranges_rejections():
+    with pytest.raises(ValueError, match="hier_shards"):
+        shard_ranges(10, 0)
+    with pytest.raises(ValueError, match="exceeds"):
+        shard_ranges(3, 4)
+    with pytest.raises(ValueError, match="hier_shards"):
+        shard_ranges(10, True)
+
+
+def test_sampling_stream_is_disjoint_by_offset():
+    # delay +17, subset +99, secure-agg +1234, faults +7717, traces +9973
+    assert sampling.SAMPLE_SEED_OFFSET not in {17, 99, 1234, 7717, 9973}
+
+
+def test_cohort_rows_fixed_layout():
+    """f toggles re-interpret the SAME uniforms: identical stream
+    position afterwards, and smaller-f cohorts nest inside larger-f."""
+    r1 = sampling.sampling_rng(3)
+    m_half = sampling.sample_cohort_rows(r1, 5, 32, 0.5)
+    r2 = sampling.sampling_rng(3)
+    m_quarter = sampling.sample_cohort_rows(r2, 5, 32, 0.25)
+    r3 = sampling.sampling_rng(3)
+    m_full = sampling.sample_cohort_rows(r3, 5, 32, 1.0)
+    assert r1.bit_generator.state == r2.bit_generator.state
+    assert r1.bit_generator.state == r3.bit_generator.state
+    assert np.all(m_quarter <= m_half)          # u<0.25 implies u<0.5
+    assert np.all(m_full)
+    assert m_half.shape == (5, 32) and m_half.dtype == bool
+
+
+def test_parity_reweight():
+    assert sampling.parity_reweight(100.0, 60.0, 1.0) == 1.0
+    w = sampling.parity_reweight(100.0, 60.0, 0.5)
+    assert w == pytest.approx((100.0 - 30.0) / (100.0 - 60.0))
+    assert w > 1.0
+    # R ~= m degrades to a finite reweight, never a zero division
+    assert np.isfinite(sampling.parity_reweight(100.0, 100.0, 0.5))
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError, match="sample_fraction"):
+            sampling.parity_reweight(100.0, 60.0, bad)
+
+
+# ---------------------------------------------------------------------------
+# spec growth: validation, round-trip, enumerated errors
+# ---------------------------------------------------------------------------
+
+def test_hier_spec_json_round_trip():
+    spec = _spec(shards=4, f=0.5)
+    revived = ExperimentSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert revived == spec
+    assert hash(revived) == hash(spec)
+    assert revived.hier_shards == 4
+    assert revived.sample_fraction == 0.5
+    assert revived.hier_active
+    assert not _spec(shards=1, f=1.0).hier_active
+
+
+def test_hier_spec_validation():
+    with pytest.raises(ValueError, match="hier_shards"):
+        _spec(shards=0)
+    with pytest.raises(ValueError, match="hier_shards"):
+        _spec(shards=True)
+    with pytest.raises(ValueError, match="exceeds"):
+        _spec(shards=N + 1)
+    for bad in (0.0, 1.5, False):
+        with pytest.raises(ValueError, match="sample_fraction"):
+            _spec(f=bad)
+    with pytest.raises(ValueError, match="batched engine"):
+        _spec(engine="legacy")
+    with pytest.raises(ValueError, match="channel"):
+        _spec(channel_profile="drift_churn")
+    with pytest.raises(ValueError, match="fault"):
+        _spec(fault_profile="flaky_cohort")
+    with pytest.raises(ValueError, match="adapt"):
+        _spec(adapt_every=5)
+    with pytest.raises(ValueError, match="secure"):
+        _spec(secure_aggregation=True)
+    with pytest.raises(ValueError, match="mesh"):
+        _spec(mesh=2)
+
+
+def test_validation_errors_enumerate_registered_names():
+    """Unknown scheme/channel/fault names list what IS registered."""
+    with pytest.raises(ValueError, match="registered:"):
+        schemes.get_scheme("nonexistent")
+    with pytest.raises(ValueError, match=r"expected one of.*drift_churn"):
+        _spec(shards=1, f=1.0, channel_profile="nonexistent")
+    with pytest.raises(ValueError, match="expected one of"):
+        _spec(shards=1, f=1.0, fault_profile="nonexistent")
+    xs, ys = _data()
+    with pytest.raises(ValueError, match="registered:"):
+        api.build_experiment(_spec(scheme="nonexistent"), xs, ys)
+
+
+def test_hier_rejects_non_coded_scheme():
+    non_coded = [n for n in schemes.registered_names()
+                 if schemes.get_scheme(n).step_kind != "coded"]
+    assert non_coded, "registry should hold at least one non-coded scheme"
+    xs, ys = _data()
+    with pytest.raises(ValueError, match="coded-family"):
+        HierExperiment(_spec(scheme=non_coded[0]), xs, ys)
+
+
+# ---------------------------------------------------------------------------
+# routing: identity -> flat engine, hier-active -> HierExperiment
+# ---------------------------------------------------------------------------
+
+def test_build_experiment_routing():
+    xs, ys = _data()
+    flat = api.build_experiment(_spec(shards=1, f=1.0), xs, ys)
+    assert isinstance(flat, fed_runtime.Experiment)
+    hier = api.build_experiment(_spec(), xs, ys)
+    assert isinstance(hier, HierExperiment)
+    assert len(hier.plans) == 3
+
+
+def test_identity_is_bit_identical_to_flat_engine():
+    """The acceptance criterion, via the scale module's own check."""
+    ident = launch_scale._identity_check(l=L, q=Q, c=C, rounds=3, seed=0)
+    assert ident["routes_flat_engine"] is True
+    assert ident["bit_identical"] is True
+
+
+def test_flat_engine_rejects_hier_spec():
+    xs, ys = _data()
+    with pytest.raises(ValueError, match="hierarchical tier"):
+        fed_runtime.Experiment(_spec(), xs, ys)
+
+
+def test_build_experiment_hier_rejects_overrides():
+    xs, ys = _data()
+    with pytest.raises(ValueError, match="nodes/mesh"):
+        api.build_experiment(_spec(), xs, ys, nodes=[])
+    with pytest.raises(ValueError, match="hierarchical tier"):
+        api.build_experiment(_spec(shards=1, f=1.0), None, None,
+                             data_fn=lambda lo, hi: (None, None))
+
+
+def test_launch_surfaces_reject_hier_specs():
+    xs, ys = _data(n=6)
+    spec = _spec(n=6, shards=2, f=0.5)
+    with pytest.raises(ValueError, match="edge-aggregator"):
+        run_sweep(xs, ys, profiles={"p0": {}},
+                  train_cfg=TrainConfig(learning_rate=0.5),
+                  iterations=1, realizations=1, schemes=("coded",),
+                  base_spec=spec)
+    with pytest.raises(ValueError, match="scale"):
+        launch_bench.run_schemes(base_spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# the hierarchical run itself
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_data():
+    return _data()
+
+
+@pytest.fixture(scope="module")
+def hier_exp(dense_data):
+    xs, ys = dense_data
+    return HierExperiment(_spec(), xs, ys)
+
+
+def test_hier_run_shapes_and_plans(hier_exp):
+    exp = hier_exp
+    st = exp.run_block(exp.init_state(4))
+    assert st.done
+    res = exp.finish(st)
+    assert res.theta.shape == (Q, C)
+    assert np.all(np.isfinite(np.asarray(res.theta)))
+    assert res.t_rounds.shape == (4,)
+    assert np.all(res.t_rounds == res.t_round)
+    assert res.t_round == max(p.t_star for p in exp.plans)
+    assert res.shards == 3
+    assert [(p.lo, p.hi) for p in exp.plans] == shard_ranges(N, 3)
+    assert all(p.parity_weight > 1.0 for p in exp.plans)  # f=0.6 < 1
+    # in-cohort returns can never exceed the sampled population
+    assert np.all(res.n_ret <= N)
+
+
+def test_sample_fraction_toggle_never_shifts_delay_stream(dense_data):
+    """The satellite invariant: the delay stream position and draws are
+    IDENTICAL whether or not rounds are sampled (and population traces /
+    fault streams are keyed by explicit seeds the sampler never touches)."""
+    xs, ys = dense_data
+    runs = {}
+    for f in (1.0, 0.5):
+        exp = HierExperiment(_spec(f=f), xs, ys)
+        st = exp.run_block(exp.init_state(5))
+        runs[f] = st
+    assert runs[1.0].rng_state == runs[0.5].rng_state
+    np.testing.assert_array_equal(runs[1.0].t_rounds, runs[0.5].t_rounds)
+    # the sampled run saw a strictly sparser cohort over 5 rounds
+    assert int(runs[0.5].n_ret.sum()) <= int(runs[1.0].n_ret.sum())
+    # sampling streams themselves moved in lockstep regardless of f
+    assert runs[1.0].sample_rng_state == runs[0.5].sample_rng_state
+
+
+def test_block_partitions_and_kill_resume_bit_identical(dense_data,
+                                                        tmp_path):
+    xs, ys = dense_data
+    spec = _spec()
+    one = HierExperiment(spec, xs, ys)
+    st_a = one.run_block(one.init_state(6), 6)
+
+    two = HierExperiment(spec, xs, ys)
+    st = two.run_block(two.init_state(6), 2)
+    path = two.save_state(str(tmp_path / "ckpt_000002.npz"), st)
+    st = two.restore_state(path)          # kill/resume at the boundary
+    st = two.run_block(st, 3)
+    st = two.run_block(st, 1)
+
+    np.testing.assert_array_equal(np.asarray(st_a.theta),
+                                  np.asarray(st.theta))
+    np.testing.assert_array_equal(st_a.n_ret, st.n_ret)
+    assert st_a.rng_state == st.rng_state
+    assert st_a.sample_rng_state == st.sample_rng_state
+
+
+def test_restore_rejects_foreign_spec(dense_data, tmp_path):
+    xs, ys = dense_data
+    exp = HierExperiment(_spec(), xs, ys)
+    path = exp.save_state(str(tmp_path / "ckpt_000001.npz"),
+                          exp.run_block(exp.init_state(2), 1))
+    other = HierExperiment(_spec(f=0.5), xs, ys)
+    with pytest.raises(ValueError, match="provenance"):
+        other.restore_state(path)
+
+
+def test_data_fn_streaming_matches_dense(dense_data):
+    xs, ys = dense_data
+    spec = _spec()
+    dense = HierExperiment(spec, xs, ys)
+    streamed = HierExperiment(spec, data_fn=lambda lo, hi: (xs[lo:hi],
+                                                            ys[lo:hi]))
+    a = dense.run_block(dense.init_state(3))
+    b = streamed.run_block(streamed.init_state(3))
+    np.testing.assert_array_equal(np.asarray(a.theta), np.asarray(b.theta))
+    np.testing.assert_array_equal(a.n_ret, b.n_ret)
+
+
+def test_data_fn_probe_validation():
+    with pytest.raises(ValueError, match=r"data_fn\(0, 1\)"):
+        HierExperiment(_spec(), data_fn=lambda lo, hi: (
+            np.zeros((hi - lo, L)), np.zeros((hi - lo, L))))
+    xs, ys = _data()
+    with pytest.raises(ValueError, match="not both"):
+        HierExperiment(_spec(), xs, ys,
+                       data_fn=lambda lo, hi: (xs[lo:hi], ys[lo:hi]))
+    with pytest.raises(ValueError, match="needs x_stack"):
+        HierExperiment(_spec())
+
+
+def test_memory_helpers(hier_exp):
+    exp = hier_exp
+    n_s = max(hi - lo for lo, hi in shard_ranges(N, 3))
+    assert exp.peak_client_tensor_bytes() == \
+        4 * n_s * (L * (Q + C) + Q * C)
+    assert exp.population_tensor_bytes() == 8 * N * 7
+    # the O(active cohort) contract at this scale: sharded peak < dense
+    assert exp.peak_client_tensor_bytes() < 4 * N * (L * (Q + C) + Q * C)
+
+
+def test_finish_guards(hier_exp):
+    exp = hier_exp
+    st = exp.run_block(exp.init_state(3), 1)
+    with pytest.raises(ValueError, match="not complete"):
+        exp.finish(st)
+    done = exp.run_block(st, 2)
+    with pytest.raises(ValueError, match="already complete"):
+        exp.run_block(done)
+    with pytest.raises(ValueError, match="hier"):
+        exp.run_block(dataclasses.replace(st, mode="single"))

@@ -1,0 +1,183 @@
+"""Chunked population state (repro.hier.population).
+
+The tier's bit-equality contract: the chunked solver and the chunked
+trace generator return identical results for EVERY block size — the
+single-block call IS the dense one-shot path — and the stacked-array
+deployment is value-identical to the flat engine's node objects.
+Chunk boundaries are probed one-below/at/one-above the solver's
+DEFAULT_BLOCK-style widths and the trace's fixed stripe.
+"""
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core import load_allocation
+from repro.core.delay_model import NodeDelayParams
+from repro.hier import population
+from repro.net.channel import CHANNEL_PROFILES
+from repro.net.trace import generate_trace
+
+N = 300
+CAP = 4.0
+M = 900.0
+U_MAX = 60.0
+
+
+def _fl(n=N, seed=3):
+    # bounded heterogeneity at population sizes: the §V-A per-client
+    # geometric knobs are re-exponentiated to span the same range at any n
+    return FLConfig(n_clients=n, delta=0.2, seed=seed,
+                    rate_decay=0.95 ** (12.0 / n),
+                    mac_decay=0.8 ** (12.0 / n))
+
+
+@pytest.fixture(scope="module")
+def prm():
+    return population.population_delay_arrays(_fl(), 16)
+
+
+def test_population_arrays_match_node_oracle(prm):
+    """Stacked arrays == stack_node_params over the flat node objects."""
+    oracle = load_allocation.stack_node_params(
+        population._oracle_nodes(_fl(), 16))
+    for key in oracle:
+        np.testing.assert_array_equal(prm[key], oracle[key], err_msg=key)
+
+
+def test_nodes_for_range_rebuilds_oracle_slice(prm):
+    nodes = population.nodes_for_range(prm, 37, 61)
+    oracle = population._oracle_nodes(_fl(), 16)[37:61]
+    for got, want in zip(nodes, oracle):
+        assert got == want
+    # symmetric entries come back as reciprocal-link nodes (fast paths)
+    assert all(nd.tau_up is None and nd.p_up is None for nd in nodes)
+
+
+@pytest.mark.parametrize("block_size", [
+    1, population.SUM_STRIPE - 1, population.SUM_STRIPE,
+    population.SUM_STRIPE + 1, N - 1, N, N + 1, 4096])
+def test_chunked_solver_bit_identical_across_blocks(prm, block_size):
+    """Every partition == the dense one-shot (block_size >= n)."""
+    ref = population.two_step_allocate_chunked(
+        prm=prm, client_caps=CAP, server=None, u_max=U_MAX, m=M,
+        block_size=N)
+    alloc = population.two_step_allocate_chunked(
+        prm=prm, client_caps=CAP, server=None, u_max=U_MAX, m=M,
+        block_size=block_size)
+    assert alloc.t_star == ref.t_star
+    np.testing.assert_array_equal(alloc.loads, ref.loads)
+    np.testing.assert_array_equal(alloc.returns, ref.returns)
+
+
+def test_chunked_solver_matches_dense_reference(prm):
+    """Tolerance-level agreement with two_step_allocate_vectorized (the
+    dense jnp.sum association cannot be chunked bit-exactly)."""
+    nodes = population.nodes_for_range(prm, 0, N)
+    dense = load_allocation.two_step_allocate_vectorized(
+        nodes, np.full(N, CAP), None, U_MAX, M)
+    chunked = population.two_step_allocate_chunked(
+        prm=prm, client_caps=CAP, server=None, u_max=U_MAX, m=M,
+        block_size=128)
+    assert chunked.t_star == pytest.approx(dense.t_star, rel=1e-6)
+    np.testing.assert_allclose(chunked.loads, dense.loads,
+                               rtol=1e-5, atol=1e-8)
+
+
+def test_chunked_solver_feasibility_and_caps(prm):
+    with pytest.raises(ValueError, match="infeasible"):
+        population.two_step_allocate_chunked(
+            prm=prm, client_caps=CAP, server=None,
+            u_max=1.0, m=10.0 * N * CAP, block_size=128)
+    alloc = population.two_step_allocate_chunked(
+        prm=prm, client_caps=CAP, server=None, u_max=U_MAX, m=M,
+        block_size=128)
+    assert np.all(alloc.loads <= CAP + 1e-12)
+    assert np.all(alloc.loads >= 0.0)
+    # the deadline actually meets the coverage target in expectation
+    assert float(np.sum(alloc.returns)) + U_MAX >= M - 1e-6
+
+
+def test_return_prob_matches_scalar_cdf(prm):
+    """Vectorized return_prob vs the per-node NodeDelayParams.cdf."""
+    alloc = population.two_step_allocate_chunked(
+        prm=prm, client_caps=CAP, server=None, u_max=U_MAX, m=M,
+        block_size=N)
+    loads = np.minimum(np.floor(alloc.loads), CAP)
+    got = population.return_prob(prm, 0, N, alloc.t_star, loads)
+    nodes = population.nodes_for_range(prm, 0, N)
+    want = np.array([nd.cdf(alloc.t_star, float(ld))
+                     for nd, ld in zip(nodes, loads)])
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-12)
+
+
+def test_return_prob_rejects_asymmetric(prm):
+    bad = {k: v.copy() for k, v in prm.items()}
+    bad["tau_up"] = bad["tau_up"] * 2.0
+    with pytest.raises(NotImplementedError, match="reciprocal"):
+        population.return_prob(bad, 0, 4, 1.0, np.ones(4))
+
+
+@pytest.mark.parametrize("block_size", [
+    1, population.TRACE_STRIPE - 1, population.TRACE_STRIPE,
+    population.TRACE_STRIPE + 1, N, 10 ** 6])
+def test_chunked_trace_bit_identical_across_blocks(prm, block_size):
+    profile = CHANNEL_PROFILES["drift_churn"]
+    ref = population.generate_trace_chunked(prm, profile, 4, seed=11)
+    tr = population.generate_trace_chunked(prm, profile, 4, seed=11,
+                                           block_size=block_size)
+    for field in ("mu_mult", "tau_mult", "p_down", "p_up", "active"):
+        np.testing.assert_array_equal(getattr(tr, field),
+                                      getattr(ref, field), err_msg=field)
+
+
+def test_single_stripe_trace_is_flat_generate_trace(prm):
+    """n <= stripe: the chunked generator IS the flat generator on the
+    (seed, 0)-keyed stream."""
+    profile = CHANNEL_PROFILES["drift_churn"]
+    tr = population.generate_trace_chunked(prm, profile, 3, seed=7)
+    nodes = population.nodes_for_range(prm, 0, N)
+    flat = generate_trace(nodes, profile, 3,
+                          np.random.default_rng((7, 0)))
+    for field in ("mu_mult", "tau_mult", "p_down", "p_up", "active"):
+        np.testing.assert_array_equal(getattr(tr, field),
+                                      getattr(flat, field), err_msg=field)
+
+
+def test_trace_stripe_crossing_blocks(prm):
+    """Blocks that straddle stripe boundaries reassemble exactly."""
+    profile = CHANNEL_PROFILES["drift_churn"]
+    small_stripe = 64            # force multiple stripes at N=300
+    ref = population.generate_trace_chunked(prm, profile, 2, seed=5,
+                                            stripe=small_stripe)
+    for bs in (small_stripe - 1, small_stripe + 1, 100):
+        chunks = list(population.iter_trace_chunks(
+            prm, profile, 2, seed=5, block_size=bs, stripe=small_stripe))
+        assert chunks[0][0] == 0 and chunks[-1][1] == N
+        reassembled = np.concatenate([c.mu_mult for _, _, c in chunks],
+                                     axis=1)
+        np.testing.assert_array_equal(reassembled, ref.mu_mult)
+
+
+def test_solver_rejects_bad_blocks(prm):
+    with pytest.raises(ValueError, match="block_size"):
+        population.two_step_allocate_chunked(
+            prm=prm, client_caps=CAP, server=None, u_max=U_MAX, m=M,
+            block_size=0)
+    with pytest.raises(ValueError, match="block_size"):
+        next(population.iter_trace_chunks(
+            prm, CHANNEL_PROFILES["drift_churn"], 2, seed=0, block_size=0))
+
+
+def test_chunked_solver_with_server_node(prm):
+    """The coded-server variant (u_max rows behind a fallible link) stays
+    partition bit-identical too."""
+    server = NodeDelayParams(mu=50.0, alpha=2.0, tau=1e-4, p=0.05)
+    ref = population.two_step_allocate_chunked(
+        prm=prm, client_caps=CAP, server=server, u_max=U_MAX, m=M,
+        block_size=N + 1)
+    alloc = population.two_step_allocate_chunked(
+        prm=prm, client_caps=CAP, server=server, u_max=U_MAX, m=M,
+        block_size=97)
+    assert alloc.t_star == ref.t_star
+    assert alloc.u_star == ref.u_star
+    np.testing.assert_array_equal(alloc.loads, ref.loads)
