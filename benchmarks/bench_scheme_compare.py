@@ -120,6 +120,13 @@ def run(out_path: str = launch_bench.ARTIFACT_NAME, scale: str = "default",
             f"crash_retries={chaos['crash_retries']};"
             f"chaos_ok={chaos['chaos_bit_identical']};"
             f"fallback_ok={chaos['fallback_recovery_bit_identical']}"))
+    telemetry = result.get("telemetry")
+    if telemetry:
+        rows.append((
+            "fed_telemetry_overhead", telemetry["enabled_seconds"] * 1e6,
+            f"ratio={telemetry['overhead_ratio']:.3f};"
+            f"bit_identical={telemetry['trajectory_bit_identical']};"
+            f"journal_ok={telemetry['journal_deterministic']}"))
     return rows
 
 

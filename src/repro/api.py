@@ -36,7 +36,7 @@ import numpy as np
 from repro.config import ExperimentSpec
 from repro.core import schemes
 from repro.core.fed_runtime import (Experiment, FedResult,  # noqa: F401
-                                    MultiFedResult, RunHealth)
+                                    MultiFedResult, RoundLog, RunHealth)
 from repro.core.run_state import RunState  # noqa: F401
 from repro.core.schemes import (Scheme, get_scheme, grid_names,  # noqa: F401
                                 register, registered_names)
@@ -44,13 +44,18 @@ from repro.faults import (FAULT_PROFILES, FaultProfile,  # noqa: F401
                           get_fault_profile)
 from repro.net.channel import (CHANNEL_PROFILES,  # noqa: F401
                                ChannelProfile)
+from repro.obs import (Attribution, RunJournal,  # noqa: F401
+                       histories_equal, history_from_journal, load_events)
+from repro.obs import spans as obs_spans  # noqa: F401
 
 __all__ = [
     "ExperimentSpec", "Experiment", "ExperimentService", "FedResult",
-    "MultiFedResult", "RunHealth", "RunState", "Scheme",
+    "MultiFedResult", "RoundLog", "RunHealth", "RunState", "Scheme",
     "build_experiment", "get_scheme", "grid_names", "register",
     "registered_names", "CHANNEL_PROFILES", "ChannelProfile",
     "FAULT_PROFILES", "FaultProfile", "get_fault_profile",
+    "Attribution", "RunJournal", "load_events", "history_from_journal",
+    "histories_equal", "obs_spans",
 ]
 
 

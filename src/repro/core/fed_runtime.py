@@ -140,6 +140,7 @@ from repro.net.estimator import (AdaptiveSchedule, OnlineChannelEstimator,
 from repro.faults import inject as finject
 from repro.net.trace import (TraceState, generate_trace_block,
                              sample_round_times_traced)
+from repro.obs import spans as obs_spans
 
 #: name of the client-partitioned mesh axis (see `repro.launch.mesh`)
 CLIENT_AXIS = "clients"
@@ -161,6 +162,10 @@ class RoundLog:
     returned: int              # clients that made the deadline
     loss: float
     accuracy: float
+    # per-round degradation counters (batched engine; the legacy oracle
+    # has no guards and leaves the zero defaults)
+    n_masked: int = 0          # contributions masked by the finite guard
+    skipped: int = 0           # 1 if the divergence guard skipped the round
 
 
 @dataclasses.dataclass
@@ -717,7 +722,11 @@ class Experiment:
         self.setup_time = 0.0
         self.processed_idx = [np.arange(self.l) for _ in range(self.n)]
         self._scan_cache: dict = {}
-        self.scheme_obj.setup(self)
+        # telemetry capture (repro.obs): per-block delay/plan references
+        # kept only while spans are enabled, feeding `attribution()`
+        self._attr_blocks: "list[dict]" = []
+        with obs_spans.span("setup/experiment"):
+            self.scheme_obj.setup(self)
         self.privacy_eps = self.scheme_obj.privacy_budget(self)
         self._consts = None     # built lazily on first run/run_multi
 
@@ -874,6 +883,28 @@ class Experiment:
         return self._lr_schedule_range(0, iterations)
 
     # --------------------------------------------------------- batched engine
+    @staticmethod
+    def _timed_scan(fn):
+        """Telemetry shim over a cached jitted scan: the first (compiling)
+        call lands in span ``scan/compile``, warm calls in
+        ``scan/execute``.  Disabled spans delegate straight through — no
+        sync, no clock read; enabled spans block on the output inside the
+        span (same values, the device sync is just forced before the
+        clock stops)."""
+        state = {"warm": False}
+
+        def call(*args):
+            if not obs_spans.enabled():
+                state["warm"] = True
+                return fn(*args)
+            name = "scan/execute" if state["warm"] else "scan/compile"
+            with obs_spans.span(name):
+                out = jax.block_until_ready(fn(*args))
+            state["warm"] = True
+            return out
+
+        return call
+
     def _get_scan(self, collect_theta: bool):
         """jit'd `lax.scan` over a per-round input pytree, cached per
         (scheme, collect).  The xs tuple's structure follows the step's
@@ -882,9 +913,10 @@ class Experiment:
         fn = self._scan_cache.get(cache_key)
         if fn is None:
             step = build_step(self.step_static(collect_theta))
-            fn = jax.jit(lambda consts, carry0, xs:
-                         jax.lax.scan(lambda c, inp: step(consts, c, inp),
-                                      carry0, xs))
+            fn = self._timed_scan(
+                jax.jit(lambda consts, carry0, xs:
+                        jax.lax.scan(lambda c, inp: step(consts, c, inp),
+                                     carry0, xs)))
             self._scan_cache[cache_key] = fn
         return fn
 
@@ -922,7 +954,7 @@ class Experiment:
                             (tj, lrs_r))
                     return jax.vmap(one)(carry0_r, times_r)
 
-            fn = jax.jit(multi)
+            fn = self._timed_scan(jax.jit(multi))
             self._scan_cache[cache_key] = fn
         return fn
 
@@ -971,6 +1003,7 @@ class Experiment:
         iterations = int(iterations)
         if iterations < 1:
             raise ValueError(f"iterations={iterations} must be >= 1")
+        self._attr_blocks = []   # attribution covers the new run only
         if n_realizations is None:
             mode = "single"
             R = None
@@ -1099,9 +1132,12 @@ class Experiment:
             times = sample_round_times(
                 self.nodes, np.asarray(self.loads, float), rng, K)
             xs = self._scan_xs(times, lrs)
+            if obs_spans.enabled():
+                self._attr_blocks.append({"times": times, "active": None})
         else:
-            trace_block, trace_new = generate_trace_block(
-                self.nodes, self.channel, K, state.trace)
+            with obs_spans.span("trace/generate"):
+                trace_block, trace_new = generate_trace_block(
+                    self.nodes, self.channel, K, state.trace)
             if self.adaptive:
                 est = OnlineChannelEstimator(
                     self.nodes, **self.scheme_params_estimator_kwargs())
@@ -1120,12 +1156,26 @@ class Experiment:
                 est_new = est.state_dict()
                 controls_new = seg.controls
                 sched_new = _append_sched(state.sched, seg)
+                if obs_spans.enabled():
+                    self._attr_blocks.append({
+                        "times": np.asarray(seg.times),
+                        "active": np.asarray(seg.active),
+                        "t_star_r": (np.asarray(seg.t_star_r)
+                                     if self.step_kind == "adaptive_coded"
+                                     else None),
+                        "n_wait_r": (np.asarray(seg.n_wait_r)
+                                     if self.step_kind != "adaptive_coded"
+                                     else None)})
             else:
                 times = sample_round_times_traced(
                     self.nodes, np.asarray(self.loads, float), rng,
                     trace_block)
                 xs = (jnp.asarray(times, jnp.float32), jnp.asarray(lrs),
                       jnp.asarray(trace_block.active, jnp.float32))
+                if obs_spans.enabled():
+                    self._attr_blocks.append({
+                        "times": times,
+                        "active": np.asarray(trace_block.active)})
         fault_xs, fault_rng_new = self._fault_rows(state, K)
         xs = xs + fault_xs
         scan_fn = self._get_scan(state.collect)
@@ -1209,8 +1259,9 @@ class Experiment:
         r = state.realizations_done
         tstate = TraceState.init(self.n,
                                  self._trace_rng(state.trace_call + r))
-        trace, _ = generate_trace_block(self.nodes, self.channel,
-                                        state.iterations, tstate)
+        with obs_spans.span("trace/generate"):
+            trace, _ = generate_trace_block(self.nodes, self.channel,
+                                            state.iterations, tstate)
         consts = self._get_consts()
         lrs = jnp.asarray(self._lr_schedule(state.iterations))
         sched_new = state.sched
@@ -1271,13 +1322,16 @@ class Experiment:
         embedding this experiment's `ExperimentSpec` as JSON provenance."""
         arrays, meta = pack_state(state)
         meta["spec"] = self.spec.to_dict()
-        return ckpt_io.save_state(path, arrays, meta)
+        with obs_spans.span("checkpoint/save"):
+            return ckpt_io.save_state(path, arrays, meta)
 
     def restore_state(self, path: str) -> RunState:
         """Load a `RunState` checkpoint, verify its spec provenance
         against this experiment, and bump the trace-stream cursor past
         the restored run's reservation so new runs stay disjoint."""
-        arrays, meta = ckpt_io.restore_state(path)
+        self._attr_blocks = []   # attribution covers post-restore rounds
+        with obs_spans.span("checkpoint/restore"):
+            arrays, meta = ckpt_io.restore_state(path)
         spec_dict = meta.get("spec")
         if spec_dict is not None:
             saved = ExperimentSpec.from_dict(spec_dict)
@@ -1327,11 +1381,15 @@ class Experiment:
     def _finish_single(self, state: RunState) -> FedResult:
         wall = self.setup_time + np.cumsum(state.t_rounds)
         history: list[RoundLog] = []
+        # a restored format-1 checkpoint has no guard counters
+        have_guards = state.n_masked is not None
         for it in range(state.iterations):
             loss = float(state.losses[it]) if state.collect else float("nan")
             acc = float(state.accs[it]) if state.collect else float("nan")
-            history.append(RoundLog(it, float(wall[it]),
-                                    int(state.n_ret[it]), loss, acc))
+            history.append(RoundLog(
+                it, float(wall[it]), int(state.n_ret[it]), loss, acc,
+                n_masked=int(state.n_masked[it]) if have_guards else 0,
+                skipped=int(state.skipped[it]) if have_guards else 0))
         return FedResult(theta=state.theta, history=history,
                          t_star=self.t_star, loads=self.loads,
                          setup_time=self.setup_time,
@@ -1387,10 +1445,28 @@ class Experiment:
             out.n_wait = sched["n_wait_r"]
         return out
 
+    # ------------------------------------------------------------ telemetry
+    def attribution(self, k: int = 3):
+        """Post-hoc straggler attribution (`repro.obs.attribution`) over
+        the delay blocks this experiment materialized while telemetry was
+        enabled (`repro.obs.spans.enable`): per-client deadline-miss
+        rate, slowest-`k` contribution counts, and the coded-compensation
+        data share per round.  Covers single-trajectory rounds computed
+        in this process since the last `init_state`/`restore_state`.
+        Raises `RuntimeError` when nothing was captured."""
+        from repro.obs.attribution import attribution_from_blocks
+        return attribution_from_blocks(
+            self._attr_blocks, self.step_kind, t_star=self.t_star,
+            t_ideal=self.t_ideal, n_wait=self.n_wait,
+            loads=self.loads, m=self.m, k=k)
+
     def _drive(self, state: RunState, checkpoint_dir: Optional[str],
-               eval_fn=None, eval_every: int = 10) -> RunState:
+               eval_fn=None, eval_every: int = 10,
+               journal=None) -> RunState:
         """Advance `state` to completion block by block, checkpointing
-        each block boundary when a directory is given."""
+        each block boundary when a directory is given and journaling each
+        block's rounds when a `RunJournal` is given (after the
+        checkpoint, so the journal never runs ahead of durable state)."""
         while not state.done:
             state = self.run_block(state, eval_fn=eval_fn,
                                    eval_every=eval_every)
@@ -1400,6 +1476,8 @@ class Experiment:
                         checkpoint_dir,
                         f"{ckpt_io.CKPT_PREFIX}{state.rounds_done:06d}.npz"),
                     state)
+            if journal is not None:
+                journal.sync(self, state)
         return state
 
     # ---------------------------------------------------------- legacy engine
@@ -1470,7 +1548,8 @@ class Experiment:
     def run(self, iterations: int,
             eval_fn: Optional[Callable[[jnp.ndarray], tuple[float, float]]] = None,
             eval_every: int = 10, *, checkpoint_dir: Optional[str] = None,
-            resume: bool = False) -> FedResult:
+            resume: bool = False,
+            journal_dir: Optional[str] = None) -> FedResult:
         """Run `iterations` rounds as a chain of `run_block` calls over
         the cached compiled scan: block size = ``spec.checkpoint_every``
         rounds, or the whole horizon when 0 (which reproduces the
@@ -1482,13 +1561,21 @@ class Experiment:
         ``checkpoint_dir`` writes an atomic `RunState` checkpoint at
         every block boundary; ``resume=True`` restores the latest one
         there (if any) and continues, bit-identical to the uninterrupted
-        blocked run.
+        blocked run.  ``journal_dir`` appends one `repro.obs` event per
+        round to ``<journal_dir>/events.jsonl`` at the same boundaries —
+        on resume the journal is trimmed/regrown to match the restored
+        state, so an interrupted run's journal is always extended, never
+        corrupted.
         """
         if self.engine == "legacy" and self.channel is None:
             if checkpoint_dir is not None or resume:
                 raise ValueError(
                     "checkpointing requires the batched engine; the legacy "
                     "per-client oracle has no block-structured run state")
+            if journal_dir is not None:
+                raise ValueError(
+                    "journal_dir requires the batched engine; the legacy "
+                    "per-client oracle has no RunState to journal from")
             times = self._sample_round_times(iterations)
             lrs = self._lr_schedule(iterations)
             return self._run_legacy(iterations, times, lrs, eval_fn,
@@ -1516,7 +1603,17 @@ class Experiment:
         if state is None:
             state = self.init_state(iterations,
                                     collect=eval_fn is not None)
-        state = self._drive(state, checkpoint_dir, eval_fn, eval_every)
+        journal = None
+        if journal_dir is not None:
+            from repro.obs.events import RunJournal
+            journal = RunJournal(journal_dir)
+            # trim past the restored state (a journal ahead of a rolled-
+            # back checkpoint replays from authoritative state), then
+            # regrow whatever prefix the state already carries
+            journal.reset_to(state.rounds_done)
+            journal.sync(self, state)
+        state = self._drive(state, checkpoint_dir, eval_fn, eval_every,
+                            journal=journal)
         return self.finish(state)
 
     def run_multi(self, iterations: int, n_realizations: int,

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core import encoding, load_allocation, privacy
 from repro.core.delay_model import ideal_round_time, packet_bits
+from repro.obs import spans as obs_spans
 
 
 class Scheme:
@@ -171,9 +172,10 @@ class CodedScheme(Scheme):
         allocate = (load_allocation.two_step_allocate_vectorized
                     if exp._pick_alloc_backend() == "vectorized"
                     else load_allocation.two_step_allocate)
-        alloc = allocate(
-            exp.nodes, [float(exp.l)] * exp.n, server=None,
-            u_max=float(u_max), m=float(exp.m))
+        with obs_spans.span("solver/two_step"):
+            alloc = allocate(
+                exp.nodes, [float(exp.l)] * exp.n, server=None,
+                u_max=float(u_max), m=float(exp.m))
         exp.t_star = alloc.t_star
         exp.u = u_max
         # integer loads (floor, at least 0)
@@ -219,10 +221,11 @@ class CodedScheme(Scheme):
         # happens over on-the-fly embeds (a transient (n, l, q) stack that
         # lives only for this setup step — the round path never sees it)
         x_enc = exp.embedded_x() if exp.fused_embed else exp.x
-        stacked = encoding.encode_local_batched(
-            keys, x_enc, exp.y, w_stack, exp.u,
-            use_pallas=exp.kernel_backend == "pallas",
-            interpret=exp._interpret)
+        with obs_spans.span("encode/parity"):
+            stacked = encoding.encode_local_batched(
+                keys, x_enc, exp.y, w_stack, exp.u,
+                use_pallas=exp.kernel_backend == "pallas",
+                interpret=exp._interpret)
         if exp.secure_aggregation:
             # paper §VI future work: the server only ever sees masked
             # uploads; pairwise masks cancel in the sum (core/secure_agg.py)
@@ -435,14 +438,16 @@ class AdaptiveCodedScheme(CodedScheme):
         allocate = (load_allocation.two_step_allocate_vectorized
                     if exp._pick_alloc_backend() == "vectorized"
                     else load_allocation.two_step_allocate)
-        try:
-            alloc = allocate(est_nodes, list(caps), server=None,
-                             u_max=float(exp.u), m=float(exp.m))
-        except ValueError:
-            # too many clients estimated unavailable for feasibility:
-            # fall back to full caps rather than keep a stale plan
-            alloc = allocate(est_nodes, [float(exp.l)] * exp.n, server=None,
-                             u_max=float(exp.u), m=float(exp.m))
+        with obs_spans.span("solver/two_step"):
+            try:
+                alloc = allocate(est_nodes, list(caps), server=None,
+                                 u_max=float(exp.u), m=float(exp.m))
+            except ValueError:
+                # too many clients estimated unavailable for feasibility:
+                # fall back to full caps rather than keep a stale plan
+                alloc = allocate(est_nodes, [float(exp.l)] * exp.n,
+                                 server=None, u_max=float(exp.u),
+                                 m=float(exp.m))
         loads = np.minimum(np.floor(alloc.loads).astype(int), exp.l)
         return {"loads": loads, "t_star": float(alloc.t_star)}
 

@@ -67,6 +67,7 @@ from repro.core import schemes as schemes_registry
 from repro.core.delay_model import packet_bits, sample_round_times_stacked
 from repro.core.run_state import RunState, pack_state, unpack_state
 from repro.hier import population, sampling
+from repro.obs import spans as obs_spans
 
 #: default client block width of the streamed parity encode (encode
 #: memory is O(encode_block * u * l), never O(n_s * u * l))
@@ -230,8 +231,12 @@ class HierExperiment:
         self._prm = population.population_delay_arrays(fl, self.q * self.c)
         self._ranges = shard_ranges(self.n, spec.hier_shards)
         self._shard_fn = self._make_shard_fn()
-        self.plans = [self._setup_shard(s, lo, hi)
-                      for s, (lo, hi) in enumerate(self._ranges)]
+        # telemetry capture (repro.obs): per-block delay/cohort references
+        # kept only while spans are enabled, feeding `attribution()`
+        self._attr_blocks: "list[dict]" = []
+        with obs_spans.span("setup/experiment"):
+            self.plans = [self._setup_shard(s, lo, hi)
+                          for s, (lo, hi) in enumerate(self._ranges)]
         self.setup_time = max(p.setup_time for p in self.plans)
         self.t_round = max(p.t_star for p in self.plans)
         self._pop_loads = np.concatenate(
@@ -242,6 +247,10 @@ class HierExperiment:
     # -------------------------------------------------------------- setup
     def _setup_shard(self, s: int, lo: int, hi: int) -> ShardPlan:
         """One edge aggregator's coded deployment over clients [lo, hi)."""
+        with obs_spans.span("hier/shard_setup"):
+            return self._setup_shard_inner(s, lo, hi)
+
+    def _setup_shard_inner(self, s: int, lo: int, hi: int) -> ShardPlan:
         fl = self.fl
         n_s = hi - lo
         m_s = n_s * self.l
@@ -252,11 +261,12 @@ class HierExperiment:
                                      scheme_params=self.scheme_params)
         u_s = int(self.scheme_obj.u_budget(shim))
         sub = {k: v[lo:hi] for k, v in self._prm.items()}
-        alloc = population.two_step_allocate_chunked(
-            prm=sub, client_caps=float(self.l), server=None,
-            u_max=float(u_s), m=float(m_s),
-            block_size=min(self._solver_block, n_s),
-            **self._solver_kwargs)
+        with obs_spans.span("solver/two_step"):
+            alloc = population.two_step_allocate_chunked(
+                prm=sub, client_caps=float(self.l), server=None,
+                u_max=float(u_s), m=float(m_s),
+                block_size=min(self._solver_block, n_s),
+                **self._solver_kwargs)
         loads = np.minimum(np.floor(alloc.loads).astype(int), self.l)
         p_ret = population.return_prob(self._prm, lo, hi, alloc.t_star,
                                        loads)
@@ -275,17 +285,18 @@ class HierExperiment:
         key = jax.random.fold_in(jax.random.PRNGKey(fl.seed + 99), s)
         px = jnp.zeros((u_s, self.q), jnp.float32)
         py = jnp.zeros((u_s, self.c), jnp.float32)
-        for a in range(0, n_s, self._encode_block):
-            b = min(a + self._encode_block, n_s)
-            key, keys = jax.lax.scan(_chain, key, None, length=b - a)
-            xb, yb = self._data(lo + a, lo + b)
-            stacked = encoding.encode_local_batched(
-                keys, jnp.asarray(xb), jnp.asarray(yb),
-                jnp.asarray(w_stack[a:b]), u_s,
-                use_pallas=self._use_pallas, interpret=self._interpret)
-            agg = encoding.aggregate_parity_stacked(stacked)
-            px = px + agg.x
-            py = py + agg.y
+        with obs_spans.span("encode/parity"):
+            for a in range(0, n_s, self._encode_block):
+                b = min(a + self._encode_block, n_s)
+                key, keys = jax.lax.scan(_chain, key, None, length=b - a)
+                xb, yb = self._data(lo + a, lo + b)
+                stacked = encoding.encode_local_batched(
+                    keys, jnp.asarray(xb), jnp.asarray(yb),
+                    jnp.asarray(w_stack[a:b]), u_s,
+                    use_pallas=self._use_pallas, interpret=self._interpret)
+                agg = encoding.aggregate_parity_stacked(stacked)
+                px = px + agg.x
+                py = py + agg.y
         r_mass = float(np.sum(loads * p_ret))
         w_f = sampling.parity_reweight(m_s, r_mass, self.sample_fraction)
         # one-time parity upload overhead (flat CodedScheme formula over
@@ -349,6 +360,7 @@ class HierExperiment:
         iterations = int(iterations)
         if iterations < 1:
             raise ValueError(f"iterations={iterations} must be >= 1")
+        self._attr_blocks = []   # attribution covers the new run only
         return RunState(
             mode="hier", iterations=iterations, rounds_done=0,
             realizations_done=0, n_realizations=None, collect=False,
@@ -397,27 +409,30 @@ class HierExperiment:
              for _ in range(K)], axis=0)
         cohort = sampling.sample_cohort_rows(srng, K, self.n,
                                              self.sample_fraction)
+        if obs_spans.enabled():
+            self._attr_blocks.append({"times": times, "active": cohort})
         lrs = self._lr_schedule_range(r0, r0 + K)
         l2 = jnp.float32(self.train.l2_reg)
         m = jnp.float32(self.m)
         theta = state.theta
         n_ret_blk = np.zeros(K, np.int32)
-        for k in range(K):
-            g = jnp.zeros((self.q, self.c), jnp.float32)
-            returned = 0
-            for plan in self.plans:
-                row = times[k, plan.lo:plan.hi]
-                ret = (row <= plan.t_star) & cohort[k, plan.lo:plan.hi]
-                returned += int(np.sum(ret))
-                xb, yb = self._data(plan.lo, plan.hi)
-                g = g + self._shard_fn(
-                    jnp.asarray(xb, jnp.float32),
-                    jnp.asarray(yb, jnp.float32),
-                    plan.gmask, jnp.asarray(ret, jnp.float32), theta,
-                    plan.parity_x, plan.parity_y,
-                    jnp.float32(plan.parity_weight))
-            theta = theta - jnp.float32(lrs[k]) * (g / m + l2 * theta)
-            n_ret_blk[k] = returned
+        with obs_spans.span("hier/round_block"):
+            for k in range(K):
+                g = jnp.zeros((self.q, self.c), jnp.float32)
+                returned = 0
+                for plan in self.plans:
+                    row = times[k, plan.lo:plan.hi]
+                    ret = (row <= plan.t_star) & cohort[k, plan.lo:plan.hi]
+                    returned += int(np.sum(ret))
+                    xb, yb = self._data(plan.lo, plan.hi)
+                    g = g + self._shard_fn(
+                        jnp.asarray(xb, jnp.float32),
+                        jnp.asarray(yb, jnp.float32),
+                        plan.gmask, jnp.asarray(ret, jnp.float32), theta,
+                        plan.parity_x, plan.parity_y,
+                        jnp.float32(plan.parity_weight))
+                theta = theta - jnp.float32(lrs[k]) * (g / m + l2 * theta)
+                n_ret_blk[k] = returned
         return dataclasses.replace(
             state, rounds_done=r0 + K, theta=theta,
             rng_state=rng.bit_generator.state,
@@ -426,16 +441,45 @@ class HierExperiment:
                 [state.t_rounds, np.full(K, self.t_round, np.float64)]),
             n_ret=np.concatenate([state.n_ret, n_ret_blk]))
 
+    # ------------------------------------------------------------ telemetry
+    def attribution(self, k: int = 3) -> dict:
+        """Per-shard straggler attribution (`repro.obs.attribution`) over
+        the delay/cohort blocks captured while telemetry was enabled:
+        ``{shard_index: Attribution}``, each shard attributed against its
+        own deadline t*_s, loads, and data mass.  Covers rounds computed
+        in this process since the last `init_state`/`restore_state`.
+        Raises `RuntimeError` when nothing was captured."""
+        from repro.obs.attribution import compute_attribution
+        if not self._attr_blocks:
+            raise RuntimeError(
+                "no telemetry captured for this run: call "
+                "repro.obs.spans.enable() before running, then "
+                "attribution()")
+        times = np.concatenate([b["times"] for b in self._attr_blocks])
+        cohort = np.concatenate([b["active"] for b in self._attr_blocks])
+        out = {}
+        for s, plan in enumerate(self.plans):
+            T = times.shape[0]
+            deadline = np.full(T, float(plan.t_star), np.float64)
+            out[s] = compute_attribution(
+                times[:, plan.lo:plan.hi], cohort[:, plan.lo:plan.hi],
+                deadline, loads=plan.loads,
+                m=plan.n_clients * self.l, coded=True, k=k)
+        return out
+
     # --------------------------------------------------------- checkpoints
     def save_state(self, path: str, state: RunState) -> str:
         """Checkpoint `state` atomically with spec provenance."""
         arrays, meta = pack_state(state)
         meta["spec"] = self.spec.to_dict()
-        return ckpt_io.save_state(path, arrays, meta)
+        with obs_spans.span("checkpoint/save"):
+            return ckpt_io.save_state(path, arrays, meta)
 
     def restore_state(self, path: str) -> RunState:
         """Load a checkpoint, verifying its spec matches this deployment."""
-        arrays, meta = ckpt_io.restore_state(path)
+        self._attr_blocks = []   # attribution covers post-restore rounds
+        with obs_spans.span("checkpoint/restore"):
+            arrays, meta = ckpt_io.restore_state(path)
         spec_dict = meta.get("spec")
         if spec_dict is not None:
             saved = ExperimentSpec.from_dict(spec_dict)
@@ -469,10 +513,13 @@ class HierExperiment:
 
     def run(self, iterations: int, *,
             checkpoint_dir: Optional[str] = None, resume: bool = False,
-            n_rounds: Optional[int] = None) -> HierResult:
+            n_rounds: Optional[int] = None,
+            journal_dir: Optional[str] = None) -> HierResult:
         """Run `iterations` rounds block by block (flat-engine driving
         contract: checkpoint every block boundary when a directory is
-        given, ``resume=True`` restores the latest checkpoint there)."""
+        given, ``resume=True`` restores the latest checkpoint there,
+        ``journal_dir`` appends one `repro.obs` event per round — with
+        the per-shard deadlines ``t_star_s`` — at the same boundaries)."""
         state = None
         if resume:
             if checkpoint_dir is None:
@@ -491,6 +538,12 @@ class HierExperiment:
                         f"round run; this run asked for {iterations}")
         if state is None:
             state = self.init_state(iterations)
+        journal = None
+        if journal_dir is not None:
+            from repro.obs.events import RunJournal
+            journal = RunJournal(journal_dir)
+            journal.reset_to(state.rounds_done)
+            journal.sync(self, state)
         while not state.done:
             state = self.run_block(state, n_rounds)
             if checkpoint_dir is not None:
@@ -500,4 +553,6 @@ class HierExperiment:
                         f"{ckpt_io.CKPT_PREFIX}"
                         f"{state.rounds_done:06d}.npz"),
                     state)
+            if journal is not None:
+                journal.sync(self, state)
         return self.finish(state)

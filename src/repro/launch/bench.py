@@ -54,12 +54,13 @@ from repro.core import schemes as schemes_registry
 from repro.core.delay_model import HETEROGENEITY_PROFILES  # noqa: F401
 from repro.core.delay_model import ideal_round_time  # noqa: F401
 from repro.launch import kernel_bench as kernel_bench_mod
+from repro.launch import report as report_mod
 from repro.launch import resilience as resilience_mod
 from repro.launch import scale as scale_mod
 from repro.launch import scenarios as scenarios_mod
 from repro.launch import sweep as sweep_mod
 
-SCHEMA_VERSION = 8
+SCHEMA_VERSION = 9
 ARTIFACT_NAME = "BENCH_fed_training.json"
 # core grid every artifact must cover; the live registry may add more
 CORE_SCHEMES = ("coded", "naive", "greedy", "ideal")
@@ -103,6 +104,7 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
                 kernel_kwargs: Optional[dict] = None,
                 resilience_kwargs: Optional[dict] = None,
                 scale_kwargs: Optional[dict] = None,
+                telemetry_kwargs: Optional[dict] = None,
                 base_spec=None) -> dict:
     """Run the scheme comparison over heterogeneity profiles.
 
@@ -136,7 +138,11 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
     (`repro.launch.scale.run_scale`): the hierarchical-tier
     population-scaling curve (wall-clock/memory over the n ladder) plus
     the flat-routing identity check; `scale_kwargs` follows the same
-    convention.
+    convention.  Schema v9 adds the ``telemetry`` section
+    (`repro.launch.report.run_telemetry`): the `repro.obs` subsystem's
+    invariants (telemetry-on trajectory bit-identity, journal
+    determinism and replay) plus span totals and the enabled-vs-disabled
+    overhead ratio; `telemetry_kwargs` follows the same convention.
 
     `base_spec` replays a full `ExperimentSpec` across the profile grid
     (see `run_sweep`).  Hierarchical/sampled specs are rejected here: the
@@ -293,6 +299,11 @@ def run_schemes(n_clients: int = 12, l: int = 32, q: int = 64, c: int = 5,
     if not scale_kwargs.pop("skip", False):
         # schema v8: hierarchical-tier population-scaling curve
         artifact["scale"] = scale_mod.run_scale(**scale_kwargs)
+    telemetry_kwargs = dict(telemetry_kwargs or {})
+    if not telemetry_kwargs.pop("skip", False):
+        # schema v9: repro.obs invariants + telemetry overhead ratio
+        telemetry_kwargs.setdefault("kernel_backend", kernel_backend)
+        artifact["telemetry"] = report_mod.run_telemetry(**telemetry_kwargs)
     return artifact
 
 
@@ -396,8 +407,9 @@ _SCHEME_FIELDS = ("final_wall_clock_mean", "final_wall_clock_std",
                   "host_seconds")
 
 
-def validate_artifact(obj, *, scale_required_ns=None) -> list[str]:
-    """Structural check of the BENCH_fed_training.json artifact (schema 8).
+def validate_artifact(obj, *, scale_required_ns=None,
+                      telemetry_max_ratio=None) -> list[str]:
+    """Structural check of the BENCH_fed_training.json artifact (schema 9).
 
     `obj` is a dict or a path.  Returns a list of problems (empty == valid)
     rather than raising, so CI can print every issue at once.
@@ -430,6 +442,14 @@ def validate_artifact(obj, *, scale_required_ns=None) -> list[str]:
     identity).  ``scale_required_ns`` overrides the enforced ladder
     (default `scale.REQUIRED_NS`) for reduced-ladder artifacts, e.g. the
     tiny test fixture; the CLI/CI path always uses the strict default.
+    Schema v9 adds the required ``telemetry`` section (`repro.obs`
+    invariants + overhead, validated by
+    `repro.launch.report.validate_telemetry` — bit-identity, journal
+    determinism/replay, required span totals, and the overhead-ratio
+    ceiling).  ``telemetry_max_ratio`` overrides that ceiling (default
+    `report.MAX_OVERHEAD_RATIO`) for toy-scale artifacts where journal
+    I/O is not amortized by compute, e.g. the tiny test fixture; the
+    CLI/CI path always uses the strict default.
     """
     if isinstance(obj, str):
         try:
@@ -513,6 +533,14 @@ def validate_artifact(obj, *, scale_required_ns=None) -> list[str]:
             obj["scale"],
             required_ns=(scale_mod.REQUIRED_NS if scale_required_ns is None
                          else scale_required_ns)))
+    if "telemetry" not in obj:
+        errs.append("schema v9 artifact missing 'telemetry' section")
+    else:
+        errs.extend(report_mod.validate_telemetry(
+            obj["telemetry"],
+            max_overhead_ratio=(report_mod.MAX_OVERHEAD_RATIO
+                                if telemetry_max_ratio is None
+                                else telemetry_max_ratio)))
     profiles = obj.get("profiles")
     if not isinstance(profiles, dict) or not profiles:
         return errs + ["missing/empty 'profiles'"]

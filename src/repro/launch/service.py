@@ -49,6 +49,8 @@ from repro.config import ExperimentSpec
 from repro.core.fed_runtime import Experiment
 from repro.core.run_state import RunState
 from repro.faults.inject import InjectedCrashError, corrupt_checkpoint
+from repro.obs import spans as obs_spans
+from repro.obs.events import RunJournal
 
 __all__ = ["ExperimentService", "ServiceRun"]
 
@@ -70,6 +72,12 @@ class ServiceRun:
     total_retries: int = 0         # failures over the run's lifetime
     quarantined: bool = False      # gave up after max_retries failures
     last_error: Optional[str] = None
+    journal: object = None         # RunJournal when telemetry is enabled
+    # always-on per-run wall-clock accounting (host time, forced spans)
+    blocks_run: int = 0            # blocks computed (successful _advance)
+    block_seconds: float = 0.0     # wall-clock inside run_block
+    ckpt_save_seconds: float = 0.0  # wall-clock inside save_state
+    backoff_seconds: float = 0.0   # wall-clock slept in retry backoff
 
     @property
     def done(self) -> bool:
@@ -165,6 +173,13 @@ class ExperimentService:
                          ckpt_dir=ckpt_dir, eval_fn=eval_fn,
                          eval_every=eval_every, resumed=resumed,
                          fallback_resume=fallback)
+        # with telemetry on, journal single-trajectory runs next to their
+        # checkpoints (root/<run_id>/events.jsonl) — trimmed/regrown to
+        # the restored state, so a resumed journal is extended in place
+        if obs_spans.enabled() and state.mode in ("single", "hier"):
+            run.journal = RunJournal(ckpt_dir)
+            run.journal.reset_to(state.rounds_done)
+            run.journal.sync(exp, state)
         self.runs[rid] = run
         self._order.append(rid)
         if state.done:   # resumed a run that was already finished
@@ -203,16 +218,23 @@ class ExperimentService:
                     f"run {run.run_id!r}: injected crash at block "
                     f"rounds_done={run.state.rounds_done} "
                     f"(attempt {run.retries + 1})")
-        run.state = run.exp.run_block(run.state, eval_fn=run.eval_fn,
-                                      eval_every=run.eval_every)
-        path = run.exp.save_state(
-            os.path.join(run.ckpt_dir,
-                         f"{ckpt_io.CKPT_PREFIX}"
-                         f"{run.state.rounds_done:06d}.npz"),
-            run.state)
+        with obs_spans.span("service/block", force=True) as sp_block:
+            run.state = run.exp.run_block(run.state, eval_fn=run.eval_fn,
+                                          eval_every=run.eval_every)
+        run.blocks_run += 1
+        run.block_seconds += sp_block.elapsed_s
+        with obs_spans.span("service/ckpt_save", force=True) as sp_save:
+            path = run.exp.save_state(
+                os.path.join(run.ckpt_dir,
+                             f"{ckpt_io.CKPT_PREFIX}"
+                             f"{run.state.rounds_done:06d}.npz"),
+                run.state)
+        run.ckpt_save_seconds += sp_save.elapsed_s
         if chaos is not None and u_ckpt < faults.ckpt_corrupt_prob:
             corrupt_checkpoint(path, kind=faults.ckpt_corrupt_kind,
                                rng=chaos)
+        if run.journal is not None:
+            run.journal.sync(run.exp, run.state)
 
     def step(self) -> Optional[str]:
         """Advance the next unfinished run by one block, checkpoint it,
@@ -228,7 +250,9 @@ class ExperimentService:
         self._cursor += 1
         run = self.runs[rid]
         if run.retries > 0 and self.retry_backoff > 0:
-            time.sleep(self.retry_backoff * 2 ** (run.retries - 1))
+            with obs_spans.span("service/backoff", force=True) as sp:
+                time.sleep(self.retry_backoff * 2 ** (run.retries - 1))
+            run.backoff_seconds += sp.elapsed_s
         try:
             self._advance(run)
         except Exception as exc:           # noqa: BLE001 — quarantine path
@@ -256,8 +280,10 @@ class ExperimentService:
     # --------------------------------------------------------------- health
     def health_report(self) -> dict:
         """{run_id: status dict} across every submitted run: progress,
-        resume provenance, retry/quarantine counters, and — for finished
-        runs — the runtime's `RunHealth` degradation counters."""
+        resume provenance, retry/quarantine counters, per-run wall-clock
+        timing (block compute / checkpoint save / retry backoff, always
+        measured), and — for finished runs — the runtime's `RunHealth`
+        degradation counters."""
         report = {}
         for rid in self._order:
             run = self.runs[rid]
@@ -273,5 +299,11 @@ class ExperimentService:
                 "last_error": run.last_error,
                 "health": (dataclasses.asdict(health)
                            if health is not None else None),
+                "timing": {
+                    "blocks_run": run.blocks_run,
+                    "block_seconds": run.block_seconds,
+                    "ckpt_save_seconds": run.ckpt_save_seconds,
+                    "backoff_seconds": run.backoff_seconds,
+                },
             }
         return report

@@ -27,11 +27,20 @@ TINY = dict(n_clients=4, l=8, q=12, c=2, iters=5, realizations=2,
                                iters=3),
             scale_kwargs=dict(ns=TINY_NS, l=4, q=6, c=2, rounds=2,
                               cohort=16, sample_fraction=0.5,
-                              trace_block=32))
+                              trace_block=32),
+            telemetry_kwargs=dict(n_clients=4, l=8, q=8, c=2, iters=8,
+                                  block=4, repeats=1))
+
+# the strict < 1.05 overhead ceiling belongs to the compute-dominated
+# CLI/CI probe; at the toy sizes above, fixed journal/span cost is a
+# visible fraction of a ~ms round, so tests validate with a loose cap
+TINY_TELEMETRY_RATIO = 50.0
 
 
 def _validate(obj):
-    return launch_bench.validate_artifact(obj, scale_required_ns=TINY_NS)
+    return launch_bench.validate_artifact(
+        obj, scale_required_ns=TINY_NS,
+        telemetry_max_ratio=TINY_TELEMETRY_RATIO)
 
 
 @pytest.fixture(scope="module")
@@ -48,9 +57,13 @@ def test_artifact_written_and_valid(artifact):
     assert _validate(str(path)) == []
     assert _validate(result) == []
     # the strict default ladder rejects the toy ladder — exactly the
-    # committed-artifact enforcement the CLI/CI path relies on
+    # committed-artifact enforcement the CLI/CI path relies on (strict
+    # mode may also flag the toy telemetry probe's unamortized overhead
+    # ratio; nothing else is allowed to fail)
     strict = launch_bench.validate_artifact(result)
-    assert strict and all("population rung" in p for p in strict)
+    assert strict and any("population rung" in p for p in strict)
+    assert all("population rung" in p or "overhead_ratio" in p
+               for p in strict)
 
 
 def test_artifact_contents(artifact):
@@ -115,6 +128,17 @@ def test_artifact_contents(artifact):
             entry["dense_client_tensor_bytes"]
     assert scale["identity"]["routes_flat_engine"] is True
     assert scale["identity"]["bit_identical"] is True
+    # schema v9: the run-telemetry section — the hard invariant is that
+    # telemetry never perturbs a trajectory or the deterministic journal
+    telemetry = loaded["telemetry"]
+    assert telemetry["trajectory_bit_identical"] is True
+    assert telemetry["journal_deterministic"] is True
+    assert telemetry["journal_replay_matches"] is True
+    assert telemetry["enabled_seconds"] > 0
+    assert telemetry["disabled_seconds"] > 0
+    assert telemetry["overhead_ratio"] > 0
+    for name in launch_bench.report_mod.REQUIRED_SPANS:
+        assert telemetry["span_totals"][name]["count"] >= 1
 
 
 def test_newly_registered_scheme_lands_in_artifact(tmp_path):
@@ -194,6 +218,17 @@ def test_ideal_round_time_is_naive_lower_bound(artifact):
     (lambda d: d["scale"].pop("identity"), "identity"),
     (lambda d: d["scale"]["identity"].update(bit_identical=False),
      "bit_identical"),
+    (lambda d: d.pop("telemetry"), "telemetry"),
+    (lambda d: d["telemetry"].update(trajectory_bit_identical=False),
+     "trajectory_bit_identical"),
+    (lambda d: d["telemetry"].update(journal_deterministic=False),
+     "journal_deterministic"),
+    (lambda d: d["telemetry"].update(overhead_ratio=1e9),
+     "overhead_ratio"),
+    (lambda d: d["telemetry"].update(enabled_seconds=float("nan")),
+     "enabled_seconds"),
+    (lambda d: d["telemetry"]["span_totals"].pop("solver/two_step"),
+     "solver/two_step"),
 ])
 def test_validator_rejects_malformed(artifact, mutate, frag):
     result, _ = artifact
@@ -263,13 +298,17 @@ def test_validator_rejects_garbage(tmp_path):
 
 def test_cli_validate_roundtrip(artifact, capsys, monkeypatch):
     from benchmarks import bench_scheme_compare as cli
+    from repro.launch import report as report_mod
     from repro.launch import scale as scale_mod
     _, path = artifact
     # the CLI pins the CI rung ladder; the tiny fixture's scale section
     # must fail it with the pointed missing-rung error...
     assert cli.main(["--validate", str(path)]) == 1
     assert "population rung" in capsys.readouterr().err
-    # ...and pass once the pinned ladder is the fixture's own
+    # ...and pass once the pinned ladder is the fixture's own (the toy
+    # telemetry probe's ratio is unamortized, so loosen that pin too)
     monkeypatch.setattr(scale_mod, "REQUIRED_NS", TINY_NS)
+    monkeypatch.setattr(report_mod, "MAX_OVERHEAD_RATIO",
+                        TINY_TELEMETRY_RATIO)
     assert cli.main(["--validate", str(path)]) == 0
     assert cli.main(["--validate", str(path) + ".nope"]) == 1
